@@ -1,0 +1,139 @@
+//! Figure 11 — Validation PPL vs number of alternating minimization
+//! phases (16-path flat MoE in the paper: 14.0 -> 13.38 -> 13.36 -> 13.25
+//! for 0/1/2/3 discriminative phases).
+//!
+//! Shape: each alternation of [re-shard discriminatively, retrain]
+//! improves PPL, with diminishing returns. Scaled: 8-path flat MoE,
+//! 2 phases x 20 steps per alternation stage.
+//!
+//! This driver uses the coordinator API directly (DipacoRun) because it
+//! needs arbitrary-depth EM alternation, not the standard 2-stage recipe.
+//!
+//! Output: results/fig11.csv (alternations, valid_ppl).
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dipaco::config::{RoutingConfig, RunConfig, TopologySpec};
+use dipaco::coordinator::phases::DipacoRun;
+use dipaco::data::dataset::Sharding;
+use dipaco::metrics::{print_table, results_dir, CsvWriter};
+use dipaco::routing::features::extract_features;
+use dipaco::routing::router::{
+    assignments_of, fit_discriminative, fit_generative, score_router_docs, shard_by_router,
+    Router,
+};
+use dipaco::topology::{ModuleStore, Topology};
+use dipaco::train::pipeline::{
+    default_corpus, default_schedule, eval_docs, router_docs, Env,
+};
+use dipaco::util::rng::Rng;
+
+const DOCS: usize = 2500;
+const PRETRAIN: usize = 200;
+const P: usize = 8;
+const PHASES_PER_STAGE: usize = 2;
+const ALTERNATIONS: usize = 3;
+
+fn main() -> Result<()> {
+    let env = Env::new("path", &default_corpus(DOCS), results_dir().join("runs"))?;
+    let ev = eval_docs(&env.corpus, 64);
+    let rdocs = router_docs(&env.corpus, 96);
+    let total = PRETRAIN + (1 + ALTERNATIONS) * PHASES_PER_STAGE * 20;
+    let mut sched = default_schedule(total);
+    sched.inner_steps = 20;
+    let base = env.base_model(PRETRAIN, &sched, 7)?;
+
+    let spec = TopologySpec::flat_moe(P);
+    let topo = Arc::new(Topology::build(&env.engine.manifest, &spec));
+    let routing = RoutingConfig::default();
+
+    // stage 0: generative sharding
+    let train_feats = extract_features(&env.engine, &base, &env.corpus.train, &env.corpus)?;
+    let mut rng = Rng::new(11);
+    let mut router = fit_generative(&train_feats, P, None, &routing, &mut rng);
+    let mut store_seed: Option<HashMap<usize, Vec<f32>>> = None; // thetas per path
+
+    let mut rows = Vec::new();
+    let mut csv = CsvWriter::create(&results_dir().join("fig11.csv"), &["alternations", "valid_ppl"])?;
+
+    let mut thetas: HashMap<usize, Vec<f32>> = HashMap::new();
+    for alt in 0..=ALTERNATIONS {
+        if alt > 0 {
+            // EM re-shard: score router docs under current paths, refit.
+            let router_feats =
+                extract_features(&env.engine, &base, &rdocs, &env.corpus)?;
+            let scores = score_router_docs(&env.engine, &thetas, &rdocs, &env.corpus)?;
+            router = fit_discriminative(&router_feats, &scores, P, &routing);
+        }
+        let sharding = Arc::new(shard_by_router(
+            &router,
+            &env.corpus.train,
+            &train_feats,
+            P,
+            1,
+            0.0,
+            7 ^ alt as u64,
+        ));
+        let mut run = DipacoRun::new(
+            Arc::clone(&env.engine),
+            Arc::clone(&env.corpus),
+            sharding,
+            Arc::clone(&topo),
+            &base,
+            sched.clone(),
+            RunConfig {
+                workers: 4,
+                outer_executors: 2,
+                lease_ms: 120_000,
+                ..Default::default()
+            },
+            env.workdir.join("rd").join(format!("f11-alt{alt}")),
+            false,
+        )?;
+        if let Some(seed) = &store_seed {
+            // continue from the previous stage's modules
+            let mut store = run.store.lock().unwrap();
+            for m in topo.all_modules() {
+                let path = topo.paths_of_module(m)[0];
+                let data = topo.extract(m.level, &seed[&path]);
+                *store.get_mut(m) = data;
+            }
+        }
+        for t in 0..PHASES_PER_STAGE {
+            run.run_phase(alt * PHASES_PER_STAGE + t)?;
+        }
+        thetas = run.all_path_thetas();
+        store_seed = Some(thetas.clone());
+        run.shutdown();
+
+        // eval: route valid docs with the CURRENT router
+        let ev_feats = extract_features(&env.engine, &base, &ev, &env.corpus)?;
+        let assign = assignments_of(&router, &ev, &ev_feats);
+        let ppl = dipaco::eval::eval_routed(
+            &env.engine,
+            &thetas,
+            |d| assign[&d],
+            &ev,
+            &env.corpus,
+            env.engine.model().seq_eval,
+        )?;
+        csv.row(&[alt.to_string(), format!("{ppl:.4}")])?;
+        rows.push(vec![alt.to_string(), router_kind(&router).into(), format!("{ppl:.3}")]);
+    }
+
+    print_table(
+        "Figure 11 (scaled): PPL vs alternating minimization phases (flat MoE P=8)",
+        &["alternations", "router", "valid ppl"],
+        &rows,
+    );
+    println!("\nshape check: each alternation improves, with diminishing returns.");
+    println!("csv: {}", results_dir().join("fig11.csv").display());
+    let _ = ModuleStore::from_base(&topo, &base); // (api parity; silences unused import on some cfgs)
+    Ok(())
+}
+
+fn router_kind(r: &Router) -> &'static str {
+    r.kind()
+}

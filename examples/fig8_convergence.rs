@@ -1,0 +1,94 @@
+//! Figure 8 — Convergence curves of DiPaCo vs dense baselines.
+//!
+//! Paper: a 150M dense model is pretrained, then a 16x16 DiPaCo (P=256,
+//! top-2 overlapping shards, one discriminative phase) is fine-tuned from
+//! it; its curve dips below the 150M baseline and approaches the dense
+//! 1.3B. Scaled here (see DESIGN.md): `path` preset vs `large` preset,
+//! 4x4 DiPaCo (P=16).
+//!
+//! Output: results/fig8_convergence.csv (series, step, valid_ppl) and the
+//! paper-shaped summary printed at the end. Run AFTER `make artifacts`.
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use dipaco::config::TopologySpec;
+use dipaco::metrics::{print_table, results_dir, CsvWriter};
+use dipaco::train::pipeline::{
+    cached_dense, cached_dipaco, default_corpus, default_schedule, eval_docs, std_recipe, Env,
+};
+
+const DOCS: usize = 2500;
+const PRETRAIN: usize = 200;
+const PHASES: (usize, usize) = (4, 1); // generative, discriminative
+const STEPS_PER_PHASE: usize = 20;
+
+fn main() -> Result<()> {
+    let env = Env::new("path", &default_corpus(DOCS), results_dir().join("runs"))?;
+    let ev = eval_docs(&env.corpus, 64);
+    let total = PRETRAIN + (PHASES.0 + PHASES.1) * STEPS_PER_PHASE;
+
+    // --- dense path-sized baseline (the "150M") — full length curve ---
+    let sched = default_schedule(total);
+    let (_, _, path_ppl) = cached_dense(&env, "dense-path-300", total, &sched, 7)?;
+
+    // --- dense large baseline (the "1.3B") ---
+    let env_l = Env::new("large", &default_corpus(DOCS), results_dir().join("runs"))?;
+    let (ltheta, _, large_ppl) = cached_dense(&env_l, "dense-large-300", total, &sched, 7)?;
+    let large_final = env_l.valid_ppl_subset(&ltheta, &ev)?;
+
+    // --- DiPaCo 4x4 from the 200-step pretrained base ---
+    let base = env.base_model(PRETRAIN, &sched, 7)?;
+    let recipe = std_recipe(
+        &env,
+        TopologySpec::grid(vec![4, 4]),
+        Some((4, 4)),
+        total,
+        2,    // top-2 overlapping shards like the paper's 16x16
+        true, // early stopping
+        "fig8-4x4",
+    );
+    let trained = cached_dipaco(&env, "dipaco-4x4", &recipe, base.clone(), PHASES.0, PHASES.1)?;
+
+    // DiPaCo eval point at the end + base point at fork
+    let base_ppl = env.valid_ppl_subset(&base, &ev)?;
+    let dipaco_ppl = trained.ppl_once(&env, &ev, true)?;
+
+    let mut csv = CsvWriter::create(
+        &results_dir().join("fig8_convergence.csv"),
+        &["series", "step", "valid_ppl"],
+    )?;
+    for (s, p) in &path_ppl {
+        csv.row(&["dense_path".into(), s.to_string(), format!("{p:.4}")])?;
+    }
+    for (s, p) in &large_ppl {
+        csv.row(&["dense_large".into(), s.to_string(), format!("{p:.4}")])?;
+    }
+    csv.row(&["pretrain_fork".into(), PRETRAIN.to_string(), format!("{base_ppl:.4}")])?;
+    // loss curve of DiPaCo phases (train loss; ppl measured at end)
+    for (s, l) in &trained.loss_curve {
+        csv.row(&["dipaco_4x4_trainloss".into(), (PRETRAIN + s).to_string(), format!("{l:.4}")])?;
+    }
+    csv.row(&["dipaco_4x4".into(), total.to_string(), format!("{dipaco_ppl:.4}")])?;
+
+    let path_final = path_ppl.last().map(|&(_, p)| p).unwrap_or(f64::NAN);
+    print_table(
+        "Figure 8 (scaled): final validation PPL",
+        &["model", "params/path", "valid ppl"],
+        &[
+            vec!["dense path-size".into(), "0.25M".into(), format!("{path_final:.3}")],
+            vec!["dense large (7x)".into(), "1.7M".into(), format!("{large_final:.3}")],
+            vec!["DiPaCo 4x4 (P=16)".into(), "0.25M".into(), format!("{dipaco_ppl:.3}")],
+        ],
+    );
+    println!(
+        "\nshape check: DiPaCo ({dipaco_ppl:.3}) < dense path-size ({path_final:.3})? {}",
+        dipaco_ppl < path_final
+    );
+    println!(
+        "shape check: DiPaCo within reach of dense large ({large_final:.3})? gap = {:+.3}",
+        dipaco_ppl - large_final
+    );
+    println!("csv: {}", results_dir().join("fig8_convergence.csv").display());
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Table 1 — DiPaCo vs Flat MoE vs DiLoCo vs dense baselines.
+//!
+//! Paper rows (88k steps, path size 150M): Baseline 16.23; DiLoCo P=8
+//! 15.02 / P=64 14.96; Flat MoE P=8 14.62 / P=64 12.76; DiPaCo 2x4 14.86,
+//! 8x8 13.37, 8x8+PS 12.70; Baseline 8x steps 14.72. Shape to reproduce:
+//! every distributed variant beats the baseline at equal wall-clock;
+//! DiPaCo grids beat DiLoCo; capacity (flat MoE / path-specific) helps at
+//! these shard sizes; the overtrained baseline lags the distributed runs.
+//!
+//! Scaled: P in {4, 8, 16}; grids 2x4 / 4x4 (+ path-specific);
+//! baseline 4x steps. Output: results/table1.csv.
+
+use anyhow::Result;
+
+use dipaco::config::TopologySpec;
+use dipaco::metrics::{print_table, results_dir, CsvWriter};
+use dipaco::topology::Topology;
+use dipaco::train::pipeline::{
+    cached_dense, cached_dipaco, default_corpus, default_schedule, eval_docs, std_recipe, Env,
+};
+
+const DOCS: usize = 2500;
+const PRETRAIN: usize = 200;
+
+fn main() -> Result<()> {
+    let env = Env::new("path", &default_corpus(DOCS), results_dir().join("runs"))?;
+    let ev = eval_docs(&env.corpus, 64);
+    let total = PRETRAIN + 100;
+    let sched = default_schedule(total);
+    let base = env.base_model(PRETRAIN, &sched, 7)?;
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut csv = CsvWriter::create(
+        &results_dir().join("table1.csv"),
+        &["model", "time", "compute", "total_params", "valid_ppl"],
+    )?;
+    let mut add = |csv: &mut CsvWriter,
+                   rows: &mut Vec<Vec<String>>,
+                   model: &str,
+                   time: &str,
+                   compute: &str,
+                   params: usize,
+                   ppl: f64|
+     -> Result<()> {
+        csv.row(&[
+            model.into(),
+            time.into(),
+            compute.into(),
+            params.to_string(),
+            format!("{ppl:.4}"),
+        ])?;
+        rows.push(vec![
+            model.into(),
+            time.into(),
+            compute.into(),
+            format!("{:.2}M", params as f64 / 1e6),
+            format!("{ppl:.3}"),
+        ]);
+        Ok(())
+    };
+
+    let n_params = env.engine.manifest.total_params;
+
+    // Baseline: dense path-size model, same wall-clock (reuses fig8 cache).
+    let (btheta, _, _) = cached_dense(&env, "dense-path-300", total, &sched, 7)?;
+    let bppl = env.valid_ppl_subset(&btheta, &ev)?;
+    add(&mut csv, &mut rows, "Baseline", "1x", "1x", n_params, bppl)?;
+
+    // Baseline, 4x steps (paper's 8x row, scaled for single-core budget).
+    let sched4 = default_schedule(4 * total);
+    let (b4, _, _) = cached_dense(&env, "dense-path-4x", 4 * total, &sched4, 7)?;
+    let b4ppl = env.valid_ppl_subset(&b4, &ev)?;
+    add(&mut csv, &mut rows, "Baseline, 4x steps", "4x", "4x", n_params, b4ppl)?;
+
+    // DiLoCo P=4 and P=8: replicas of one model on random shards.
+    for p in [4usize, 8] {
+        let spec = TopologySpec::diloco(p);
+        let recipe = std_recipe(&env, spec, None, total, 1, false, &format!("diloco{p}"));
+        let trained = cached_dipaco(&env, &format!("diloco-p{p}"), &recipe, base.clone(), 5, 0)?;
+        // every replica is identical: evaluate replica 0 densely
+        let ppl = env.valid_ppl_subset(&trained.thetas[&0], &ev)?;
+        add(&mut csv, &mut rows, &format!("DiLoCo P={p}"), "1x", &format!("{p}x"), n_params, ppl)?;
+    }
+
+    // Flat MoE P=4 and P=8 (discriminative routing like the paper).
+    for p in [4usize, 8] {
+        let spec = TopologySpec::flat_moe(p);
+        let topo = Topology::build(&env.engine.manifest, &spec);
+        let recipe = std_recipe(&env, spec, None, total, 1, false, &format!("flat{p}"));
+        let trained = cached_dipaco(&env, &format!("flatmoe-p{p}"), &recipe, base.clone(), 4, 1)?;
+        let ppl = trained.ppl_once(&env, &ev, false)?;
+        add(
+            &mut csv,
+            &mut rows,
+            &format!("Flat MoE P={p}"),
+            "1x",
+            &format!("{p}x"),
+            topo.mixture_params(),
+            ppl,
+        )?;
+    }
+
+    // DiPaCo 2x4, 4x4, 2x4+path-specific (cached from fig8/fig9 when run).
+    let mut ps_spec = TopologySpec::grid(vec![2, 4]);
+    ps_spec.path_specific_blocks = vec![0, 3];
+    let dipaco_cfgs: Vec<(&str, &str, TopologySpec, Option<(usize, usize)>, usize)> = vec![
+        ("DiPaCo 2x4", "dipaco-2x4", TopologySpec::grid(vec![2, 4]), Some((2, 4)), 1),
+        ("DiPaCo 4x4", "dipaco-4x4", TopologySpec::grid(vec![4, 4]), Some((4, 4)), 2),
+        ("DiPaCo 2x4 + PS modules", "dipaco-2x4-path-specific", ps_spec, Some((2, 4)), 1),
+    ];
+    for (name, tag, spec, grid, overlap) in dipaco_cfgs {
+        let topo = Topology::build(&env.engine.manifest, &spec);
+        let p = topo.paths;
+        let recipe = std_recipe(&env, spec, grid, total, overlap, true, tag);
+        let trained = cached_dipaco(&env, tag, &recipe, base.clone(), 4, 1)?;
+        let ppl = trained.ppl_once(&env, &ev, true)?;
+        add(
+            &mut csv,
+            &mut rows,
+            name,
+            "1x",
+            &format!("{p}x"),
+            topo.mixture_params(),
+            ppl,
+        )?;
+    }
+
+    print_table(
+        "Table 1 (scaled): DiPaCo vs Flat MoE vs DiLoCo",
+        &["model", "time", "compute+data", "total params", "valid ppl"],
+        &rows,
+    );
+    println!("\nshape checks (paper orderings):");
+    println!("  every distributed variant < Baseline at 1x wall-clock");
+    println!("  DiPaCo grids < DiLoCo at same compute");
+    println!("  extra capacity (flat MoE / path-specific) helps at these shard sizes");
+    println!("csv: {}", results_dir().join("table1.csv").display());
+    Ok(())
+}

@@ -1,0 +1,88 @@
+"""AOT compile path: lower every L2 entrypoint to HLO TEXT + manifest.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the rust `xla` crate) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage (from python/):  python -m compile.aot --preset path --out ../artifacts
+
+Outputs artifacts/<preset>/:
+  {init,train_step,grad_step,adam_update,token_logprobs_train,
+   token_logprobs_eval,features}.hlo.txt
+  manifest.json   — flat-parameter layout + resolved model config; the
+                    rust side treats this as the source of truth.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_manifest(cfg: configs.ModelConfig) -> dict:
+    leaves, off = [], 0
+    for name, shape in model.layout(cfg):
+        sz = 1
+        for s in shape:
+            sz *= s
+        leaves.append(
+            {"name": name, "offset": off, "size": sz, "shape": list(shape)}
+        )
+        off += sz
+    return {
+        "preset": cfg.name,
+        "config": cfg.to_dict(),
+        "total_params": off,
+        "leaves": leaves,
+        "entrypoints": sorted(model.entrypoints(cfg).keys()),
+    }
+
+
+def lower_preset(preset: str, out_root: str, only=None) -> str:
+    cfg = configs.get(preset)
+    out_dir = os.path.join(out_root, preset)
+    os.makedirs(out_dir, exist_ok=True)
+    eps = model.entrypoints(cfg)
+    for name, (fn, example_args) in eps.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {path}  ({len(text)/1e6:.2f} MB)")
+    manifest = build_manifest(cfg)
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {mpath}  (total_params={manifest['total_params']})")
+    return mpath
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", required=True, choices=sorted(configs.PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of entrypoints")
+    args = ap.parse_args()
+    print(f"[aot] lowering preset={args.preset}")
+    lower_preset(args.preset, args.out, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

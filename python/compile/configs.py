@@ -1,0 +1,70 @@
+"""Model presets for the DiPaCo reproduction.
+
+These MUST stay in sync with `rust/src/config/presets.rs`: the rust side
+re-reads the resolved config from each artifact's `manifest.json`, so the
+manifest is the source of truth at runtime; this file is the source of
+truth at compile time.
+
+Scale substitution (see DESIGN.md): the paper's 150M-parameter path /
+1.3B dense baseline become the `path` (~0.25M) / `large` (~1.7M) presets,
+preserving the ~7x dense-to-path parameter ratio and the 12-block-style
+decoder architecture, scaled to CPU-PJRT throughput.
+"""
+
+from dataclasses import dataclass, asdict, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256          # byte-level tokenizer
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_train: int = 128      # training sequence length (paper: 1024)
+    seq_eval: int = 256       # evaluation sequence length (paper: 2048)
+    batch: int = 8            # per-step batch (paper: 512)
+    prefix: int = 32          # router prefix, excluded from the LM loss (paper: 32)
+    # Steps fused into one `train_steps` HLO via lax.scan (§Perf: one
+    # host<->device round trip per chunk instead of per step). Inner
+    # phases are multiples of this.
+    tau: int = 20
+    # AdamW (inner optimizer) — paper Table 4.
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        return d
+
+
+PRESETS = {
+    # A single DiPaCo path (stands in for the paper's 150M model).
+    "path": ModelConfig(name="path"),
+    # The dense baseline (stands in for the paper's 1.3B model, ~7x params).
+    "large": ModelConfig(
+        name="large", d_model=128, n_layers=8, n_heads=8, d_ff=512
+    ),
+    # Miniature preset used only by fast unit tests. vocab stays 256: the
+    # byte tokenizer emits the full byte range.
+    "test": ModelConfig(
+        name="test", d_model=16, n_layers=2, n_heads=2, d_ff=32,
+        seq_train=32, seq_eval=48, batch=2, prefix=16,
+    ),
+}
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise SystemExit(f"unknown preset {name!r}; have {sorted(PRESETS)}")

@@ -1,0 +1,141 @@
+"""L1 perf analysis — VMEM footprint and MXU-utilization estimates for the
+Pallas attention kernels, derived analytically from the BlockSpec schedule.
+
+interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so (per the repro brief) the kernel is optimized structurally:
+this module computes, for a given (batch, heads, seq, d_head):
+
+* VMEM bytes resident per grid step (all operand+output tiles), checked
+  against the ~16 MiB/core budget;
+* FLOPs per grid step and the fraction issued as MXU-shaped matmuls
+  (vs VPU elementwise softmax work) — the achievable-MXU-utilization
+  proxy the paper's efficiency ratio translates to;
+* arithmetic intensity (FLOPs / HBM byte), vs the TPUv4 ridge point
+  (~275 FLOP/byte bf16), to classify the kernel as compute- or
+  memory-bound.
+
+`python -m compile.kernels.analysis` prints the table for the presets;
+EXPERIMENTS.md §Perf records it. pytest covers the invariants.
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 2 ** 20       # per-core VMEM, TPUv4-ish
+MXU_RIDGE_FLOP_PER_BYTE = 275.0  # bf16 ridge point proxy
+
+
+@dataclass
+class KernelProfile:
+    batch: int
+    heads: int
+    seq: int
+    d_head: int
+    dtype_bytes: int = 4
+
+    # ---------------------------------------------------------- footprint
+
+    def tile_bytes(self) -> dict:
+        """Per-grid-step VMEM residency, by buffer."""
+        s, d, b = self.seq, self.d_head, self.dtype_bytes
+        return {
+            "q": s * d * b,
+            "k": s * d * b,
+            "v": s * d * b,
+            "scores": s * s * 4,  # f32 accumulator
+            "out": s * d * b,
+        }
+
+    def vmem_per_step(self) -> int:
+        return sum(self.tile_bytes().values())
+
+    def vmem_fraction(self) -> float:
+        return self.vmem_per_step() / VMEM_BYTES
+
+    def fits_vmem(self) -> bool:
+        # double-buffered inputs still need to fit
+        return 2 * self.vmem_per_step() <= VMEM_BYTES
+
+    # -------------------------------------------------------------- flops
+
+    def matmul_flops_per_step(self) -> int:
+        """MXU-issued FLOPs: qk^T and pv, 2*S*S*D each."""
+        s, d = self.seq, self.d_head
+        return 2 * (2 * s * s * d)
+
+    def vpu_flops_per_step(self) -> int:
+        """Elementwise softmax work (mask, max, exp, div): ~5 ops per score."""
+        s = self.seq
+        return 5 * s * s
+
+    def mxu_fraction(self) -> float:
+        m = self.matmul_flops_per_step()
+        return m / (m + self.vpu_flops_per_step())
+
+    # ----------------------------------------------------------- roofline
+
+    def hbm_bytes_per_step(self) -> int:
+        """HBM traffic: q, k, v in; out back. Scores never leave VMEM."""
+        s, d, b = self.seq, self.d_head, self.dtype_bytes
+        return 4 * s * d * b
+
+    def arithmetic_intensity(self) -> float:
+        return (self.matmul_flops_per_step() + self.vpu_flops_per_step()) / self.hbm_bytes_per_step()
+
+    def compute_bound(self) -> bool:
+        return self.arithmetic_intensity() >= MXU_RIDGE_FLOP_PER_BYTE
+
+    def grid_steps(self) -> int:
+        return self.batch * self.heads
+
+    def report(self) -> dict:
+        return {
+            "grid_steps": self.grid_steps(),
+            "vmem_per_step_kib": self.vmem_per_step() / 1024,
+            "vmem_fraction": self.vmem_fraction(),
+            "fits_vmem_double_buffered": self.fits_vmem(),
+            "mxu_fraction": self.mxu_fraction(),
+            "arithmetic_intensity": self.arithmetic_intensity(),
+            "compute_bound": self.compute_bound(),
+        }
+
+
+def profile_preset(name: str, seq: int | None = None) -> KernelProfile:
+    from ..configs import get
+
+    cfg = get(name)
+    return KernelProfile(
+        batch=cfg.batch,
+        heads=cfg.n_heads,
+        seq=seq or cfg.seq_train,
+        d_head=cfg.d_head,
+    )
+
+
+def main() -> None:
+    rows = []
+    for preset in ("path", "large"):
+        for which in ("train", "eval"):
+            from ..configs import get
+
+            cfg = get(preset)
+            seq = cfg.seq_train if which == "train" else cfg.seq_eval
+            p = profile_preset(preset, seq)
+            r = p.report()
+            rows.append((f"{preset}/{which} (S={seq}, Dh={p.d_head})", r))
+    # paper-scale reference: what the same schedule means at 150M scale
+    paper = KernelProfile(batch=512, heads=16, seq=1024, d_head=64, dtype_bytes=2)
+    rows.append(("paper-scale ref (S=1024, Dh=64, bf16)", paper.report()))
+
+    hdr = f"{'kernel instance':<40} {'VMEM/step':>10} {'%VMEM':>7} {'MXU%':>6} {'AI':>7} {'bound':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    for name, r in rows:
+        print(
+            f"{name:<40} {r['vmem_per_step_kib']:>8.1f}Ki {r['vmem_fraction']*100:>6.2f}% "
+            f"{r['mxu_fraction']*100:>5.1f}% {r['arithmetic_intensity']:>7.1f} "
+            f"{'compute' if r['compute_bound'] else 'memory':>8}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""L1 — Pallas causal-attention kernels (forward AND backward).
+
+This is the per-path compute hot spot of a DiPaCo path (a dense decoder
+transformer).  The kernels are written the TPU way even though they are
+executed in interpret mode on CPU-PJRT (a real-TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot run — see /opt/xla-example/README.md):
+
+* grid iterates over (batch x heads); each grid step owns one (S, Dh)
+  Q/K/V tile, which is the natural VMEM-resident unit at this scale
+  (S<=256, Dh<=32 -> <=96 KiB of f32 per operand, far under the ~16 MiB
+  VMEM budget; see EXPERIMENTS.md §Perf for the footprint table);
+* the S x S score matrix is materialized per tile — at paper scale this
+  would be flash-style row-blocked, at our S this whole-tile variant is
+  the right VMEM/MXU trade-off (no extra HBM round trips);
+* both matmuls are MXU-shaped (f32 here; bf16 inputs are covered by the
+  hypothesis sweep in python/tests/test_kernel.py).
+
+Autodiff: `pallas_call` has no VJP rule, so the module exports
+`attention(q, k, v)` wrapped in `jax.custom_vjp` whose backward pass is a
+second Pallas kernel recomputing the probabilities (the standard
+recompute-in-backward schedule).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _causal_mask(s: int):
+    i = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    return i >= j  # True where attention is allowed
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch*head) tile: o = softmax(mask(q k^T * scale)) v."""
+    q = q_ref[0, :, :]  # (S, Dh)
+    k = k_ref[0, :, :]
+    v = v_ref[0, :, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_causal_mask(q.shape[0]), s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, :, :] = jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, scale: float):
+    """Backward for one tile, recomputing p = softmax(...).
+
+    dV = P^T dO;  dP = dO V^T;  dS = P * (dP - rowsum(dP * P));
+    dQ = dS K * scale;  dK = dS^T Q * scale.
+    """
+    q = q_ref[0, :, :].astype(jnp.float32)
+    k = k_ref[0, :, :].astype(jnp.float32)
+    v = v_ref[0, :, :].astype(jnp.float32)
+    do = do_ref[0, :, :].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_causal_mask(q.shape[0]), s, NEG_INF)
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    dv = jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk = jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale
+    dq_ref[0, :, :] = dq.astype(dq_ref.dtype)
+    dk_ref[0, :, :] = dk.astype(dk_ref.dtype)
+    dv_ref[0, :, :] = dv.astype(dv_ref.dtype)
+
+
+def _tile_spec(s: int, d: int):
+    # One (1, S, Dh) block per grid step i over the fused batch*heads axis.
+    return pl.BlockSpec((1, s, d), lambda i: (i, 0, 0))
+
+
+def _attention_fwd_call(q, k, v):
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[_tile_spec(s, d)] * 3,
+        out_specs=_tile_spec(s, d),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attention_bwd_call(q, k, v, do):
+    bh, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    shp = jax.ShapeDtypeStruct((bh, s, d), q.dtype)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, scale=scale),
+        grid=(bh,),
+        in_specs=[_tile_spec(s, d)] * 4,
+        out_specs=(_tile_spec(s, d),) * 3,
+        out_shape=(shp, shp, shp),
+        interpret=True,
+    )(q, k, v, do)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Causal multi-head attention on fused-(batch*heads) tensors.
+
+    Args:
+      q, k, v: f32/bf16 arrays of shape (batch*heads, seq, d_head).
+    Returns:
+      (batch*heads, seq, d_head) attention output.
+    """
+    return _attention_fwd_call(q, k, v)
+
+
+def _attention_vjp_fwd(q, k, v):
+    return _attention_fwd_call(q, k, v), (q, k, v)
+
+
+def _attention_vjp_bwd(res, do):
+    q, k, v = res
+    return _attention_bwd_call(q, k, v, do)
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)

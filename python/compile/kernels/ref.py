@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the Pallas attention kernel.
+
+Used by the pytest/hypothesis suite as the correctness reference for both
+the forward values and (via jax.grad on this function) the backward pass.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Causal attention, shapes (batch*heads, seq, d_head)."""
+    _, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bsd,btd->bst", q, k).astype(jnp.float32) * scale
+    i = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(i >= j, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p.astype(v.dtype), v)

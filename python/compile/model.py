@@ -1,0 +1,311 @@
+"""L2 — the DiPaCo path model: a decoder-only transformer LM over a FLAT
+parameter vector, plus every entrypoint the rust coordinator executes.
+
+Why flat: DiPaCo's whole point is slicing parameters into modules (levels x
+experts) that are assembled per path and diffed per module for the outer
+optimizer. Keeping theta as one f32[N] vector makes the rust side a pure
+range-slicing exercise driven by `manifest.json` — no pytree plumbing ever
+crosses the language boundary.
+
+Entrypoints (AOT-lowered by aot.py, executed from rust/src/runtime):
+
+  init(seed)                          -> theta
+  train_step(theta, m, v, step, lr, tokens) -> (theta', m', v', loss)
+  token_logprobs(theta, tokens)       -> logp[batch, seq-1]
+  features(theta, prefix_tokens)      -> z[batch, d_model]
+
+The inner optimizer (AdamW, paper Table 4) lives INSIDE train_step's HLO so
+the rust hot loop is: build literals -> execute -> swap buffers. The cosine
+learning-rate schedule is computed in rust and passed in as a scalar.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import attention
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+def layout(cfg: ModelConfig):
+    """Ordered (name, shape) leaves of the flat parameter vector.
+
+    Naming contract with rust (`rust/src/params/manifest.rs`):
+    `block{i}.` prefixes group leaves into per-block units; the DiPaCo
+    topology maps contiguous block ranges to levels. `embed.*`, `final.*`
+    and `head.*` form the "stem" group (level assignment configurable).
+    """
+    leaves = []
+    d, f = cfg.d_model, cfg.d_ff
+    leaves.append(("embed.tok", (cfg.vocab, d)))
+    leaves.append(("embed.pos", (cfg.seq_eval, d)))
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        leaves += [
+            (p + "ln1.scale", (d,)),
+            (p + "ln1.bias", (d,)),
+            (p + "attn.wq", (d, d)),
+            (p + "attn.wk", (d, d)),
+            (p + "attn.wv", (d, d)),
+            (p + "attn.wo", (d, d)),
+            (p + "ln2.scale", (d,)),
+            (p + "ln2.bias", (d,)),
+            (p + "mlp.w1", (d, f)),
+            (p + "mlp.b1", (f,)),
+            (p + "mlp.w2", (f, d)),
+            (p + "mlp.b2", (d,)),
+        ]
+    leaves += [
+        ("final.ln.scale", (d,)),
+        ("final.ln.bias", (d,)),
+        ("head.w", (d, cfg.vocab)),
+    ]
+    return leaves
+
+
+def total_params(cfg: ModelConfig) -> int:
+    n = 0
+    for _, shape in layout(cfg):
+        sz = 1
+        for s in shape:
+            sz *= s
+        n += sz
+    return n
+
+
+def unflatten(theta, cfg: ModelConfig):
+    """Flat f32[N] -> {name: array}; static slices, free after XLA fusion."""
+    out, off = {}, 0
+    for name, shape in layout(cfg):
+        sz = 1
+        for s in shape:
+            sz *= s
+        out[name] = jax.lax.slice(theta, (off,), (off + sz,)).reshape(shape)
+        off += sz
+    return out
+
+
+def flatten(params, cfg: ModelConfig):
+    return jnp.concatenate([params[n].reshape(-1) for n, _ in layout(cfg)])
+
+
+def decay_mask(cfg: ModelConfig):
+    """1.0 where AdamW weight decay applies (matrices), 0.0 elsewhere
+    (biases, layer norms). Baked into train_step as a constant."""
+    segs = []
+    for name, shape in layout(cfg):
+        sz = 1
+        for s in shape:
+            sz *= s
+        on = len(shape) == 2 and ".ln" not in name
+        segs.append(jnp.full((sz,), 1.0 if on else 0.0, jnp.float32))
+    return jnp.concatenate(segs)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _block(x, p, prefix, cfg: ModelConfig):
+    """Pre-LN transformer block; attention runs the L1 Pallas kernel."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    y = _layer_norm(x, p[prefix + "ln1.scale"], p[prefix + "ln1.bias"])
+    q = (y @ p[prefix + "attn.wq"]).reshape(b, s, h, dh)
+    k = (y @ p[prefix + "attn.wk"]).reshape(b, s, h, dh)
+    v = (y @ p[prefix + "attn.wv"]).reshape(b, s, h, dh)
+    # fuse (batch, heads) for the kernel grid
+    q = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    k = k.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    v = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    o = attention(q, k, v)
+    o = o.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ p[prefix + "attn.wo"]
+    y = _layer_norm(x, p[prefix + "ln2.scale"], p[prefix + "ln2.bias"])
+    y = jax.nn.gelu(y @ p[prefix + "mlp.w1"] + p[prefix + "mlp.b1"])
+    return x + y @ p[prefix + "mlp.w2"] + p[prefix + "mlp.b2"]
+
+
+def hidden_states(theta, tokens, cfg: ModelConfig):
+    """Final-block hidden states (pre final-LN), shape (b, s, d)."""
+    p = unflatten(theta, cfg)
+    b, s = tokens.shape
+    x = p["embed.tok"][tokens] + p["embed.pos"][:s][None, :, :]
+    for i in range(cfg.n_layers):
+        x = _block(x, p, f"block{i}.", cfg)
+    return x
+
+
+def logits_fn(theta, tokens, cfg: ModelConfig):
+    p = unflatten(theta, cfg)
+    x = hidden_states(theta, tokens, cfg)
+    x = _layer_norm(x, p["final.ln.scale"], p["final.ln.bias"])
+    return x @ p["head.w"]
+
+
+def token_logprobs(theta, tokens, cfg: ModelConfig):
+    """logp[b, j] = log p(tokens[b, j+1] | tokens[b, :j+1]), j in [0, s-2].
+
+    The rust side applies the prefix mask (paper §2.4: PPL over all but the
+    first 32 tokens), chunk aggregation for eval-time re-routing (§2.4.3),
+    and per-path scoring for the discriminative router (§2.4.2) — all from
+    this one entrypoint.
+    """
+    lg = logits_fn(theta, tokens, cfg)[:, :-1, :]
+    lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    return jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(theta, tokens, cfg: ModelConfig):
+    """Mean NLL over positions whose TARGET index >= cfg.prefix."""
+    lp = token_logprobs(theta, tokens, cfg)  # (b, s-1), target idx j+1
+    s = tokens.shape[1]
+    tgt_idx = jnp.arange(1, s)
+    mask = (tgt_idx >= cfg.prefix).astype(jnp.float32)[None, :]
+    return -jnp.sum(lp * mask) / jnp.sum(mask * jnp.ones_like(lp))
+
+
+def features(theta, prefix_tokens, cfg: ModelConfig):
+    """Router feature z: mean final-block hidden state over the prefix
+    (paper §7.2.1: "average of the hidden state from the last transformer
+    block from the initial LM over the first 32 tokens")."""
+    h = hidden_states(theta, prefix_tokens, cfg)
+    return jnp.mean(h, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Training step (AdamW inside the HLO)
+# ---------------------------------------------------------------------------
+
+
+def train_step(theta, m, v, step, lr, tokens, cfg: ModelConfig):
+    """One AdamW step on one batch. `step` is the 1-based step counter
+    (f32 scalar, for bias correction); `lr` the schedule value from rust."""
+    loss, g = jax.value_and_grad(loss_fn)(theta, tokens, cfg)
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1 ** step)
+    vhat = v / (1.0 - b2 ** step)
+    update = mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay * decay_mask(cfg) * theta
+    return theta - lr * update, m, v, loss
+
+
+def train_steps(theta, m, v, start_step, lrs, tokens, cfg: ModelConfig):
+    """`cfg.tau` fused AdamW steps via lax.scan (§Perf optimization: one
+    PJRT dispatch + one host<->device parameter round trip per chunk
+    instead of per step).
+
+    Args:
+      start_step: f32 scalar, 0-based global step before this chunk.
+      lrs: f32[tau] schedule values.
+      tokens: int32[tau, batch, seq_train].
+    Returns: (theta', m', v', losses[tau]).
+    """
+
+    def body(carry, xs):
+        theta, m, v, step = carry
+        lr, toks = xs
+        step = step + 1.0
+        theta, m, v, loss = train_step(theta, m, v, step, lr, toks, cfg)
+        return (theta, m, v, step), loss
+
+    (theta, m, v, _), losses = jax.lax.scan(
+        body, (theta, m, v, start_step), (lrs, tokens)
+    )
+    return theta, m, v, losses
+
+
+def grad_step(theta, tokens, cfg: ModelConfig):
+    """Loss and raw gradient — used by the fully-synchronous ablation
+    (paper §4.5), where rust aggregates gradients across paths module-by-
+    module before a single shared AdamW update."""
+    loss, g = jax.value_and_grad(loss_fn)(theta, tokens, cfg)
+    return g, loss
+
+
+def adam_update(theta, m, v, g, step, lr, cfg: ModelConfig):
+    """AdamW update from a PRE-AGGREGATED gradient (sync ablation)."""
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1 ** step)
+    vhat = v / (1.0 - b2 ** step)
+    update = mhat / (jnp.sqrt(vhat) + eps) + cfg.weight_decay * decay_mask(cfg) * theta
+    return theta - lr * update, m, v
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init(seed, cfg: ModelConfig):
+    """GPT-2-style init from a uint32 seed scalar: N(0, 0.02) matrices with
+    1/sqrt(2*n_layers) scaling on residual-output projections; zeros for
+    biases; ones for LN scales."""
+    key = jax.random.PRNGKey(seed)
+    segs = []
+    resid_scale = 1.0 / (2.0 * cfg.n_layers) ** 0.5
+    for name, shape in layout(cfg):
+        key, sub = jax.random.split(key)
+        sz = 1
+        for s in shape:
+            sz *= s
+        if name.endswith("ln.scale") or ".ln1.scale" in name or ".ln2.scale" in name:
+            segs.append(jnp.ones((sz,), jnp.float32))
+        elif len(shape) == 1:
+            segs.append(jnp.zeros((sz,), jnp.float32))
+        else:
+            w = jax.random.normal(sub, (sz,), jnp.float32) * 0.02
+            if name.endswith("attn.wo") or name.endswith("mlp.w2"):
+                w = w * resid_scale
+            segs.append(w)
+    return jnp.concatenate(segs)
+
+
+# ---------------------------------------------------------------------------
+# Entrypoint table for AOT lowering
+# ---------------------------------------------------------------------------
+
+
+def entrypoints(cfg: ModelConfig):
+    """name -> (fn, example_args). Lowered to HLO text by aot.py."""
+    n = total_params(cfg)
+    f32 = jnp.float32
+    vec = jax.ShapeDtypeStruct((n,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+    tok_tr = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_train), jnp.int32)
+    tok_ev = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_eval), jnp.int32)
+    tok_px = jax.ShapeDtypeStruct((cfg.batch, cfg.prefix), jnp.int32)
+
+    def ep(fn):
+        return functools.partial(fn, cfg=cfg)
+
+    tok_scan = jax.ShapeDtypeStruct((cfg.tau, cfg.batch, cfg.seq_train), jnp.int32)
+    lrs = jax.ShapeDtypeStruct((cfg.tau,), f32)
+
+    return {
+        "init": (ep(init), (seed,)),
+        "train_step": (ep(train_step), (vec, vec, vec, scalar, scalar, tok_tr)),
+        "train_steps": (ep(train_steps), (vec, vec, vec, scalar, lrs, tok_scan)),
+        "grad_step": (ep(grad_step), (vec, tok_tr)),
+        "adam_update": (ep(adam_update), (vec, vec, vec, vec, scalar, scalar)),
+        "token_logprobs_train": (ep(token_logprobs), (vec, tok_tr)),
+        "token_logprobs_eval": (ep(token_logprobs), (vec, tok_ev)),
+        "features": (ep(features), (vec, tok_px)),
+    }

@@ -1,0 +1,43 @@
+"""Invariants of the L1 kernel perf model (analysis.py)."""
+
+from compile.kernels.analysis import KernelProfile, profile_preset, VMEM_BYTES
+
+
+def test_presets_fit_vmem_double_buffered():
+    for preset in ("path", "large", "test"):
+        p = profile_preset(preset)
+        assert p.fits_vmem(), preset
+        assert 2 * p.vmem_per_step() <= VMEM_BYTES
+
+
+def test_paper_scale_schedule_fits():
+    # The same whole-tile schedule at paper scale (S=1024, Dh=64, bf16):
+    # 3x128KiB qkv + 4MiB f32 scores + 128KiB out ~= 4.5 MiB — still under
+    # VMEM with double buffering, which is why the whole-tile variant (not
+    # flash-style row blocking) is the right TPU adaptation here.
+    p = KernelProfile(batch=512, heads=16, seq=1024, d_head=64, dtype_bytes=2)
+    assert p.fits_vmem()
+
+
+def test_mxu_fraction_grows_with_d_head():
+    lo = KernelProfile(batch=1, heads=1, seq=128, d_head=8)
+    hi = KernelProfile(batch=1, heads=1, seq=128, d_head=64)
+    assert hi.mxu_fraction() > lo.mxu_fraction()
+    assert 0.0 < lo.mxu_fraction() < 1.0
+
+
+def test_arithmetic_intensity_grows_with_seq():
+    lo = KernelProfile(batch=1, heads=1, seq=64, d_head=16)
+    hi = KernelProfile(batch=1, heads=1, seq=512, d_head=16)
+    assert hi.arithmetic_intensity() > lo.arithmetic_intensity()
+
+
+def test_grid_covers_batch_heads():
+    p = profile_preset("path")
+    assert p.grid_steps() == p.batch * p.heads
+
+
+def test_hbm_traffic_excludes_scores():
+    # the S x S score matrix must never be counted as HBM traffic
+    p = KernelProfile(batch=1, heads=1, seq=256, d_head=16)
+    assert p.hbm_bytes_per_step() == 4 * 256 * 16 * 4

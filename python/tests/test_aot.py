@@ -1,0 +1,57 @@
+"""Build-time AOT checks: manifest agrees with the layout; emitted HLO text
+parses through the same proto/text layer the rust PJRT loader uses.
+
+(The full execute-and-compare round trip — HLO text loaded by the rust
+`xla` crate and run on PJRT — is covered by rust/tests/integration_runtime.rs,
+which compares against numerics recorded here at artifact-build time.)
+"""
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import aot, configs, model
+
+CFG = configs.get("test")
+
+
+def test_manifest_matches_layout():
+    man = aot.build_manifest(CFG)
+    assert man["total_params"] == model.total_params(CFG)
+    off = 0
+    for leaf, (name, shape) in zip(man["leaves"], model.layout(CFG)):
+        assert leaf["name"] == name
+        assert leaf["offset"] == off
+        assert tuple(leaf["shape"]) == tuple(shape)
+        off += leaf["size"]
+    assert off == man["total_params"]
+    assert set(man["entrypoints"]) == set(model.entrypoints(CFG))
+
+
+def test_manifest_config_fields():
+    man = aot.build_manifest(CFG)
+    cfgd = man["config"]
+    for k in ("vocab", "d_model", "n_layers", "n_heads", "d_ff",
+              "seq_train", "seq_eval", "batch", "prefix", "d_head"):
+        assert k in cfgd, k
+    assert cfgd["d_head"] * cfgd["n_heads"] == cfgd["d_model"]
+
+
+def test_hlo_text_nonempty_and_parseable():
+    eps = model.entrypoints(CFG)
+    fn, args = eps["features"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert "ENTRY" in text and "HloModule" in text
+    mod = xc._xla.hlo_module_from_text(text)  # rust-side parse equivalent
+    assert mod is not None
+
+
+def test_entrypoint_shapes():
+    eps = model.entrypoints(CFG)
+    n = model.total_params(CFG)
+    _, a = eps["train_step"]
+    assert a[0].shape == (n,) and a[5].shape == (CFG.batch, CFG.seq_train)
+    _, a = eps["token_logprobs_eval"]
+    assert a[1].shape == (CFG.batch, CFG.seq_eval)
+    _, a = eps["features"]
+    assert a[1].shape == (CFG.batch, CFG.prefix)

@@ -1,0 +1,201 @@
+"""L2 correctness: flat-theta transformer, loss masking, AdamW step, init."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+CFG = configs.get("test")
+N = model.total_params(CFG)
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return model.init(jnp.uint32(0), CFG)
+
+
+def toks(key=0, seq=None, batch=None):
+    rng = np.random.RandomState(key)
+    return rng.randint(
+        0, CFG.vocab, (batch or CFG.batch, seq or CFG.seq_train)
+    ).astype(np.int32)
+
+
+# --------------------------------------------------------------------- layout
+
+
+def test_layout_offsets_contiguous():
+    m_off = 0
+    for name, shape in model.layout(CFG):
+        sz = int(np.prod(shape))
+        assert sz > 0, name
+        m_off += sz
+    assert m_off == N
+
+
+def test_flatten_unflatten_roundtrip(theta):
+    p = model.unflatten(theta, CFG)
+    back = model.flatten(p, CFG)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(theta))
+
+
+def test_decay_mask_covers_matrices_only():
+    mask = np.asarray(model.decay_mask(CFG))
+    assert mask.shape == (N,)
+    off = 0
+    for name, shape in model.layout(CFG):
+        sz = int(np.prod(shape))
+        seg = mask[off : off + sz]
+        expect = 1.0 if (len(shape) == 2 and ".ln" not in name) else 0.0
+        assert (seg == expect).all(), name
+        off += sz
+
+
+# ---------------------------------------------------------------------- init
+
+
+def test_init_deterministic():
+    a = model.init(jnp.uint32(7), CFG)
+    b = model.init(jnp.uint32(7), CFG)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = model.init(jnp.uint32(8), CFG)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_init_structure(theta):
+    p = model.unflatten(theta, CFG)
+    np.testing.assert_array_equal(np.asarray(p["block0.ln1.scale"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(p["block0.mlp.b1"]), 0.0)
+    std = float(np.asarray(p["embed.tok"]).std())
+    assert 0.015 < std < 0.025
+
+
+# ------------------------------------------------------------------- forward
+
+
+def test_logits_shape(theta):
+    t = toks()
+    lg = model.logits_fn(theta, t, CFG)
+    assert lg.shape == (CFG.batch, CFG.seq_train, CFG.vocab)
+
+
+def test_token_logprobs_are_logprobs(theta):
+    t = toks()
+    lp = np.asarray(model.token_logprobs(theta, t, CFG))
+    assert lp.shape == (CFG.batch, CFG.seq_train - 1)
+    assert (lp <= 1e-6).all()
+
+
+def test_causal_lm_property(theta):
+    """Changing future tokens must not change earlier logprobs."""
+    t = toks(1)
+    lp1 = np.asarray(model.token_logprobs(theta, t, CFG))
+    t2 = t.copy()
+    t2[:, 20:] = (t2[:, 20:] + 1) % CFG.vocab
+    lp2 = np.asarray(model.token_logprobs(theta, t2, CFG))
+    # logp[j] depends on tokens[:, :j+2); entries with j+1 < 20 are unchanged
+    np.testing.assert_allclose(lp1[:, :18], lp2[:, :18], rtol=1e-5, atol=1e-6)
+
+
+def test_loss_masks_prefix(theta):
+    """Loss counts only targets with index >= prefix; perturbing prefix
+    TARGETS (not context) must leave the masked set's identity intact."""
+    t = toks(2)
+    loss = float(model.loss_fn(theta, t, CFG))
+    lp = np.asarray(model.token_logprobs(theta, t, CFG))
+    tgt_idx = np.arange(1, CFG.seq_train)
+    mask = tgt_idx >= CFG.prefix
+    manual = -lp[:, mask].mean()
+    np.testing.assert_allclose(loss, manual, rtol=1e-5)
+
+
+def test_features_shape_and_prefix_dependence(theta):
+    t = toks(3, seq=CFG.prefix)
+    z = np.asarray(model.features(theta, t, CFG))
+    assert z.shape == (CFG.batch, CFG.d_model)
+    t2 = t.copy()
+    t2[0, 0] = (t2[0, 0] + 1) % CFG.vocab
+    z2 = np.asarray(model.features(theta, t2, CFG))
+    assert not np.allclose(z[0], z2[0])
+    np.testing.assert_allclose(z[1:], z2[1:], rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- optimizer
+
+
+def test_train_step_matches_manual_adamw(theta):
+    t = toks(4)
+    m = jnp.zeros(N)
+    v = jnp.zeros(N)
+    step, lr = 1.0, 3e-4
+    th2, m2, v2, loss = model.train_step(theta, m, v, step, lr, t, CFG)
+
+    g = jax.grad(model.loss_fn)(theta, t, CFG)
+    g = np.asarray(g, np.float64)
+    th = np.asarray(theta, np.float64)
+    b1, b2, eps, wd = CFG.adam_b1, CFG.adam_b2, CFG.adam_eps, CFG.weight_decay
+    m_ref = (1 - b1) * g
+    v_ref = (1 - b2) * g * g
+    mhat = m_ref / (1 - b1**step)
+    vhat = v_ref / (1 - b2**step)
+    mask = np.asarray(model.decay_mask(CFG), np.float64)
+    th_ref = th - lr * (mhat / (np.sqrt(vhat) + eps) + wd * mask * th)
+
+    np.testing.assert_allclose(np.asarray(th2), th_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m2), m_ref, rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(v2), v_ref, rtol=1e-4, atol=1e-10)
+    assert float(loss) > 0
+
+
+def test_training_reduces_loss(theta):
+    """A few steps on one repeated batch must overfit it."""
+    t = toks(5)
+    ts = jax.jit(lambda th, m, v, s, lr, tk: model.train_step(th, m, v, s, lr, tk, CFG))
+    m = jnp.zeros(N)
+    v = jnp.zeros(N)
+    th = theta
+    losses = []
+    for i in range(20):
+        th, m, v, loss = ts(th, m, v, float(i + 1), 1e-3, t)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_grad_step_plus_adam_update_equals_train_step(theta):
+    """The sync-ablation decomposition must reproduce train_step exactly."""
+    t = toks(6)
+    m = jnp.zeros(N)
+    v = jnp.zeros(N)
+    th_a, m_a, v_a, _ = model.train_step(theta, m, v, 1.0, 1e-3, t, CFG)
+    g, _ = model.grad_step(theta, t, CFG)
+    th_b, m_b, v_b = model.adam_update(theta, m, v, g, 1.0, 1e-3, CFG)
+    np.testing.assert_allclose(np.asarray(th_a), np.asarray(th_b), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_a), np.asarray(m_b), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v_a), np.asarray(v_b), rtol=1e-6)
+
+
+def test_train_steps_scan_matches_loop(theta):
+    """lax.scan-fused steps must equal the unrolled per-step loop."""
+    tau = CFG.tau
+    rng = np.random.RandomState(9)
+    batches = rng.randint(0, CFG.vocab, (tau, CFG.batch, CFG.seq_train)).astype(np.int32)
+    lrs = np.linspace(1e-3, 8e-4, tau).astype(np.float32)
+    m = jnp.zeros(N)
+    v = jnp.zeros(N)
+    th_a, m_a, v_a = theta, m, v
+    losses_a = []
+    for i in range(tau):
+        th_a, m_a, v_a, loss = model.train_step(
+            th_a, m_a, v_a, float(i + 1), float(lrs[i]), batches[i], CFG
+        )
+        losses_a.append(float(loss))
+    th_b, m_b, v_b, losses_b = model.train_steps(
+        theta, m, v, 0.0, jnp.asarray(lrs), jnp.asarray(batches), CFG
+    )
+    # scan vs unrolled compile to different fusion orders; tolerate
+    # float-accumulation noise (observed max ~1e-5 over 20 steps).
+    np.testing.assert_allclose(np.asarray(losses_b), losses_a, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(th_b), np.asarray(th_a), rtol=2e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v_b), np.asarray(v_a), rtol=2e-3, atol=1e-8)

@@ -1,0 +1,93 @@
+//! L3 hot-path bench — per-phase parameter plumbing: path assembly
+//! (modules -> theta), delta splitting (theta pair -> per-module outer
+//! gradients), and checkpoint serialization, at path-preset scale. These
+//! run once per path per phase; they must be negligible next to tau
+//! train steps (~2s of PJRT compute at tau=20).
+
+use dipaco::benchkit::{header, Bencher};
+use dipaco::config::TopologySpec;
+use dipaco::params::checkpoint::Checkpoint;
+use dipaco::params::manifest::Manifest;
+use dipaco::topology::{ModuleStore, Topology};
+use dipaco::util::json::Json;
+use dipaco::util::rng::Rng;
+
+fn synthetic_manifest(d: usize, blocks: usize) -> Manifest {
+    let mut leaves = Vec::new();
+    let mut off = 0usize;
+    let mut push = |name: String, shape: Vec<usize>, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        leaves.push(format!(
+            r#"{{"name":"{name}","offset":{off},"size":{size},"shape":[{}]}}"#,
+            shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        ));
+        *off += size;
+    };
+    push("embed.tok".into(), vec![256, d], &mut off);
+    push("embed.pos".into(), vec![256, d], &mut off);
+    for i in 0..blocks {
+        push(format!("block{i}.attn.wq"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wk"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wv"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wo"), vec![d, d], &mut off);
+        push(format!("block{i}.mlp.w1"), vec![d, 4 * d], &mut off);
+        push(format!("block{i}.mlp.w2"), vec![4 * d, d], &mut off);
+    }
+    push("head.w".into(), vec![d, 256], &mut off);
+    let text = format!(
+        r#"{{"preset":"bench","config":{{"vocab":256,"d_model":{d},"n_layers":{blocks},
+          "n_heads":4,"d_ff":{f},"seq_train":128,"seq_eval":256,"batch":8,"prefix":32,"d_head":16}},
+          "total_params":{off},"leaves":[{ls}],"entrypoints":[]}}"#,
+        f = 4 * d,
+        ls = leaves.join(",")
+    );
+    Manifest::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+fn main() {
+    println!("parameter-plumbing bench (per-phase L3 hot path)\n");
+    header();
+    let mut csv = vec!["bench,params,mean_s".to_string()];
+    for (d, blocks, label) in [(64usize, 4usize, "path-scale"), (128, 8, "large-scale")] {
+        let man = synthetic_manifest(d, blocks);
+        let topo = Topology::build(&man, &TopologySpec::grid(vec![4, 4]));
+        let mut rng = Rng::new(0);
+        let theta: Vec<f32> = (0..man.total_params).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let after: Vec<f32> = theta.iter().map(|&x| x + 0.001).collect();
+        let store = ModuleStore::from_base(&topo, &theta);
+
+        let r = Bencher::new(&format!("assemble path theta ({label})"))
+            .runs(20, 200)
+            .run(|| {
+                std::hint::black_box(store.assemble(&topo, 7));
+            });
+        csv.push(format!("assemble_{label},{},{:.9}", man.total_params, r.mean_s));
+
+        let r = Bencher::new(&format!("split outer gradients ({label})"))
+            .runs(20, 200)
+            .run(|| {
+                std::hint::black_box(store.split_delta(&topo, 7, &theta, &after));
+            });
+        csv.push(format!("split_{label},{},{:.9}", man.total_params, r.mean_s));
+
+        let dir = std::env::temp_dir().join(format!("dipaco-bench-asm-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let f = dir.join(format!("{label}.dpc"));
+        let ck = Checkpoint::new().with("theta", theta.clone());
+        let r = Bencher::new(&format!("checkpoint save ({label})"))
+            .runs(10, 50)
+            .run(|| ck.save(&f).unwrap());
+        csv.push(format!("ckpt_save_{label},{},{:.9}", man.total_params, r.mean_s));
+        let r = Bencher::new(&format!("checkpoint load ({label})"))
+            .runs(10, 50)
+            .run(|| {
+                std::hint::black_box(Checkpoint::load(&f).unwrap());
+            });
+        csv.push(format!("ckpt_load_{label},{},{:.9}", man.total_params, r.mean_s));
+        println!();
+    }
+    let out = dipaco::metrics::results_dir().join("bench_assembly.csv");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("csv: {}", out.display());
+}

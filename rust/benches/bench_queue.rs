@@ -1,0 +1,89 @@
+//! §3.1/§3.2 systems bench — task-queue throughput and fault-tolerance
+//! overhead: lease/complete cycles under contention, with and without
+//! injected preemptions, plus queue-state checkpointing cost.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dipaco::benchkit::{header, Bencher};
+use dipaco::coordinator::queue::TaskQueue;
+use dipaco::coordinator::task::{Task, TrainTask};
+use dipaco::util::rng::Rng;
+
+fn task(i: u64) -> Task {
+    Task::Train(TrainTask {
+        id: i + 1,
+        phase: 0,
+        path: i as usize,
+        steps: 1,
+        start_step: 0,
+        ckpt_in: "in".into(),
+        ckpt_out: "out".into(),
+    })
+}
+
+fn drive(n_tasks: u64, n_workers: usize, fail_p: f64) {
+    let q = Arc::new(TaskQueue::new(Duration::from_millis(10)));
+    for i in 0..n_tasks {
+        q.push(task(i));
+    }
+    std::thread::scope(|s| {
+        for w in 0..n_workers {
+            let q = Arc::clone(&q);
+            s.spawn(move || {
+                let mut rng = Rng::new(w as u64);
+                while let Some((lease, _)) = q.lease(&format!("w{w}"), Duration::from_millis(50)) {
+                    if fail_p > 0.0 && rng.f64() < fail_p {
+                        q.fail(lease);
+                        continue;
+                    }
+                    q.complete(lease);
+                }
+            });
+        }
+        q.wait_idle(Duration::from_micros(200));
+        q.close();
+    });
+    assert_eq!(q.stats().completed, n_tasks);
+}
+
+fn main() {
+    println!("task-queue bench (paper §3.1-3.2)\n");
+    header();
+    let mut csv = vec!["bench,mean_s,throughput_per_s".to_string()];
+    for (name, workers, fail_p) in [
+        ("1k tasks, 4 workers, no failures", 4usize, 0.0),
+        ("1k tasks, 4 workers, 20% preemption", 4, 0.2),
+        ("1k tasks, 16 workers, no failures", 16, 0.0),
+        ("1k tasks, 16 workers, 20% preemption", 16, 0.2),
+    ] {
+        let r = Bencher::new(name)
+            .runs(5, 20)
+            .throughput(1000.0)
+            .run(|| drive(1000, workers, fail_p));
+        csv.push(format!("{name},{:.6},{:.0}", r.mean_s, r.throughput.unwrap_or(0.0)));
+    }
+
+    // queue-state checkpoint cost (paper: server checkpoints its queue)
+    let q = TaskQueue::new(Duration::from_secs(10));
+    for i in 0..1000 {
+        q.push(task(i));
+    }
+    let r = Bencher::new("checkpoint 1k-task queue state").runs(10, 50).run(|| {
+        let state = q.checkpoint_state();
+        let s = state.to_string();
+        std::hint::black_box(s.len());
+    });
+    csv.push(format!("queue_state_checkpoint,{:.6},0", r.mean_s));
+    let r = Bencher::new("restore 1k-task queue state").runs(10, 50).run(|| {
+        let state = q.checkpoint_state();
+        let q2 = TaskQueue::restore(&state, Duration::from_secs(10)).unwrap();
+        std::hint::black_box(q2.stats().pending);
+    });
+    csv.push(format!("queue_state_restore,{:.6},0", r.mean_s));
+
+    let out = dipaco::metrics::results_dir().join("bench_queue.csv");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("\ncsv: {}", out.display());
+}

@@ -1,0 +1,93 @@
+//! Routing bench — offline coarse-routing costs: k-means fit/assign,
+//! product k-means (paper §7.3: assignment cost grows with the sqrt of
+//! pair count), and the logistic discriminative router. These run once
+//! per re-sharding phase, over the whole corpus — they must be cheap
+//! relative to a single path's training phase.
+
+use dipaco::benchkit::{compare, header, Bencher};
+use dipaco::routing::kmeans::{KMeans, ProductKMeans};
+use dipaco::routing::logistic::{Logistic, TrainOpts};
+use dipaco::util::rng::Rng;
+
+fn features(n: usize, d: usize, k: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect())
+        .collect();
+    let mut zs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        zs.push(centers[c].iter().map(|&m| rng.normal_f32(m, 0.5)).collect());
+        labels.push(c);
+    }
+    (zs, labels)
+}
+
+fn main() {
+    println!("routing bench (offline coarse routing, paper §2.4/§7.3)\n");
+    header();
+    let mut csv = vec!["bench,mean_s".to_string()];
+    // corpus-scale: 2000 docs, d=64 features (path preset d_model)
+    let (zs, labels) = features(2000, 64, 16, 1);
+
+    let fit16 = Bencher::new("k-means fit k=16 (2k docs, d=64)")
+        .runs(5, 12)
+        .run(|| {
+            let mut rng = Rng::new(2);
+            std::hint::black_box(KMeans::fit(&zs, 16, 25, &mut rng));
+        });
+    csv.push(format!("kmeans_fit_k16,{:.6}", fit16.mean_s));
+
+    let fitp = Bencher::new("product k-means fit 4x4 (2k docs)")
+        .runs(5, 12)
+        .run(|| {
+            let mut rng = Rng::new(2);
+            std::hint::black_box(ProductKMeans::fit(&zs, 4, 4, 25, &mut rng));
+        });
+    csv.push(format!("product_kmeans_fit_4x4,{:.6}", fitp.mean_s));
+    compare(&fit16, &fitp);
+
+    let mut rng = Rng::new(2);
+    let km = KMeans::fit(&zs, 16, 25, &mut rng);
+    let r = Bencher::new("k-means assign 2k docs")
+        .runs(10, 50)
+        .throughput(2000.0)
+        .run(|| {
+            for z in &zs {
+                std::hint::black_box(km.assign(z));
+            }
+        });
+    csv.push(format!("kmeans_assign_2k,{:.6}", r.mean_s));
+
+    let r = Bencher::new("logistic fit k=16 (2k docs)")
+        .runs(3, 8)
+        .run(|| {
+            std::hint::black_box(Logistic::fit(
+                &zs,
+                &labels,
+                16,
+                &TrainOpts {
+                    epochs: 25,
+                    ..Default::default()
+                },
+            ));
+        });
+    csv.push(format!("logistic_fit_k16,{:.6}", r.mean_s));
+
+    let lg = Logistic::fit(&zs, &labels, 16, &TrainOpts { epochs: 10, ..Default::default() });
+    let r = Bencher::new("logistic assign 2k docs")
+        .runs(10, 50)
+        .throughput(2000.0)
+        .run(|| {
+            for z in &zs {
+                std::hint::black_box(lg.predict(z));
+            }
+        });
+    csv.push(format!("logistic_assign_2k,{:.6}", r.mean_s));
+
+    let out = dipaco::metrics::results_dir().join("bench_routing.csv");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("\ncsv: {}", out.display());
+}

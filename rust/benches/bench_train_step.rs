@@ -1,0 +1,165 @@
+//! L1/L2 hot-path bench — PJRT execution cost of each entrypoint, and the
+//! rust-side dispatch overhead (literal building + tuple decomposition)
+//! relative to raw compute. Needs `make artifacts` (skips otherwise).
+//!
+//! This is the wall-clock unit every experiment above is priced in: one
+//! inner step of one path. Perf target (EXPERIMENTS.md §Perf): rust
+//! dispatch overhead < 10% of PJRT execute time.
+
+use dipaco::benchkit::{header, Bencher};
+use dipaco::runtime::engine::{artifact_dir, Engine};
+use dipaco::util::rng::Rng;
+
+fn main() {
+    // preset selectable so the fused A/B can run on whichever artifacts
+    // carry the train_steps entrypoint (DIPACO_BENCH_PRESET, default path).
+    let preset = std::env::var("DIPACO_BENCH_PRESET").unwrap_or_else(|_| "path".into());
+    let dir = artifact_dir(&preset);
+    if !dir.join("manifest.json").exists() {
+        println!("skipping bench_train_step: artifacts/{preset} not built");
+        return;
+    }
+    let engine = Engine::load(&dir).expect("engine");
+    let mc = engine.model().clone();
+    let n = engine.manifest.total_params;
+    println!(
+        "train-step bench: preset={preset} params={n} batch={} seq={}\n",
+        mc.batch, mc.seq_train
+    );
+    header();
+    let mut csv = vec!["bench,mean_s,tokens_per_s".to_string()];
+
+    let theta = engine.init(0).unwrap();
+    let m = vec![0.0f32; n];
+    let v = vec![0.0f32; n];
+    let mut rng = Rng::new(1);
+    let tokens_train: Vec<i32> = (0..mc.batch * mc.seq_train)
+        .map(|_| rng.gen_range(mc.vocab) as i32)
+        .collect();
+    let tokens_eval: Vec<i32> = (0..mc.batch * mc.seq_eval)
+        .map(|_| rng.gen_range(mc.vocab) as i32)
+        .collect();
+    let tokens_prefix: Vec<i32> = (0..mc.batch * mc.prefix)
+        .map(|_| rng.gen_range(mc.vocab) as i32)
+        .collect();
+
+    let toks_per_step = (mc.batch * mc.seq_train) as f64;
+    let r = Bencher::new("train_step (fwd+bwd+AdamW)")
+        .runs(8, 30)
+        .throughput(toks_per_step)
+        .run(|| {
+            std::hint::black_box(
+                engine
+                    .train_step(&theta, &m, &v, 1.0, 1e-3, &tokens_train)
+                    .unwrap(),
+            );
+        });
+    csv.push(format!("train_step,{:.6},{:.0}", r.mean_s, r.throughput.unwrap()));
+
+    let r = Bencher::new("token_logprobs seq_train")
+        .runs(8, 30)
+        .run(|| {
+            std::hint::black_box(
+                engine
+                    .token_logprobs(&theta, &tokens_train, mc.seq_train)
+                    .unwrap(),
+            );
+        });
+    csv.push(format!("logprobs_train,{:.6},0", r.mean_s));
+
+    let r = Bencher::new("token_logprobs seq_eval")
+        .runs(8, 30)
+        .run(|| {
+            std::hint::black_box(
+                engine
+                    .token_logprobs(&theta, &tokens_eval, mc.seq_eval)
+                    .unwrap(),
+            );
+        });
+    csv.push(format!("logprobs_eval,{:.6},0", r.mean_s));
+
+    let r = Bencher::new("features (router prefix)")
+        .runs(8, 30)
+        .run(|| {
+            std::hint::black_box(engine.features(&theta, &tokens_prefix).unwrap());
+        });
+    csv.push(format!("features,{:.6},0", r.mean_s));
+
+    // §Perf A/B: per-step dispatch loop vs fused lax.scan train_steps
+    if mc.tau > 0 && engine.has("train_steps") {
+        let tau = mc.tau;
+        let batches: Vec<i32> = (0..tau * mc.batch * mc.seq_train)
+            .map(|_| rng.gen_range(mc.vocab) as i32)
+            .collect();
+        let lrs: Vec<f32> = vec![1e-3; tau];
+        let r_loop = Bencher::new(&format!("tau={tau} steps, per-step dispatch"))
+            .runs(3, 8)
+            .throughput((tau * mc.batch * mc.seq_train) as f64)
+            .run(|| {
+                let (mut th, mut mm, mut vv) = (theta.clone(), m.clone(), v.clone());
+                for i in 0..tau {
+                    let out = engine
+                        .train_step(
+                            &th,
+                            &mm,
+                            &vv,
+                            (i + 1) as f32,
+                            1e-3,
+                            &batches[i * mc.batch * mc.seq_train..(i + 1) * mc.batch * mc.seq_train],
+                        )
+                        .unwrap();
+                    th = out.theta;
+                    mm = out.m;
+                    vv = out.v;
+                }
+                std::hint::black_box(th.len());
+            });
+        csv.push(format!("tau_loop,{:.6},{:.0}", r_loop.mean_s, r_loop.throughput.unwrap()));
+        let r_fused = Bencher::new(&format!("tau={tau} steps, fused lax.scan"))
+            .runs(3, 8)
+            .throughput((tau * mc.batch * mc.seq_train) as f64)
+            .run(|| {
+                std::hint::black_box(
+                    engine.train_steps(&theta, &m, &v, 0.0, &lrs, &batches).unwrap().0.len(),
+                );
+            });
+        csv.push(format!("tau_fused,{:.6},{:.0}", r_fused.mean_s, r_fused.throughput.unwrap()));
+        dipaco::benchkit::compare(&r_loop, &r_fused);
+    } else {
+        println!("(artifacts built without train_steps; fused A/B skipped)");
+    }
+
+    // dispatch overhead: literal building for the train_step argument set
+    // (the rust-side cost that is NOT XLA compute)
+    let r = Bencher::new("dispatch overhead (literals only)")
+        .runs(20, 100)
+        .run(|| {
+            let a = xla_literals(&theta, &m, &v, &tokens_train, mc.batch, mc.seq_train);
+            std::hint::black_box(a);
+        });
+    csv.push(format!("dispatch_literals,{:.6},0", r.mean_s));
+
+    let out = dipaco::metrics::results_dir().join("bench_train_step.csv");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("\ncsv: {}", out.display());
+}
+
+fn xla_literals(
+    theta: &[f32],
+    m: &[f32],
+    v: &[f32],
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+) -> usize {
+    let a = xla::Literal::vec1(theta);
+    let b = xla::Literal::vec1(m);
+    let c = xla::Literal::vec1(v);
+    let d = xla::Literal::scalar(1.0f32);
+    let e = xla::Literal::scalar(1e-3f32);
+    let f = xla::Literal::vec1(tokens)
+        .reshape(&[batch as i64, seq as i64])
+        .unwrap();
+    a.size_bytes() + b.size_bytes() + c.size_bytes() + d.size_bytes() + e.size_bytes() + f.size_bytes()
+}

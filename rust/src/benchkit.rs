@@ -1,0 +1,170 @@
+//! Bench harness (criterion is not vendored): timed runs with warmup,
+//! mean/std/percentiles, throughput, and a comparison table. All
+//! `rust/benches/*.rs` targets (harness = false) build on this.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, OnlineStats};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    /// Optional items/second (set via `Bencher::throughput`).
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let tp = self
+            .throughput
+            .map(|t| format!("  {:>10.1} items/s", t))
+            .unwrap_or_default();
+        println!(
+            "{:<44} {:>10} {:>10} {:>10} {:>10}{}",
+            self.name,
+            fmt_dur(self.mean_s),
+            fmt_dur(self.p50_s),
+            fmt_dur(self.p95_s),
+            format!("±{}", fmt_dur(self.std_s)),
+            tp
+        );
+    }
+}
+
+pub fn header() {
+    println!(
+        "{:<44} {:>10} {:>10} {:>10} {:>10}",
+        "benchmark", "mean", "p50", "p95", "std"
+    );
+    println!("{}", "-".repeat(90));
+}
+
+fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+pub struct Bencher {
+    name: String,
+    warmup: usize,
+    min_runs: usize,
+    max_runs: usize,
+    max_total: Duration,
+    items: Option<f64>,
+}
+
+impl Bencher {
+    pub fn new(name: &str) -> Bencher {
+        Bencher {
+            name: name.to_string(),
+            warmup: 2,
+            min_runs: 5,
+            max_runs: 50,
+            max_total: Duration::from_secs(10),
+            items: None,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn runs(mut self, min: usize, max: usize) -> Self {
+        self.min_runs = min;
+        self.max_runs = max;
+        self
+    }
+
+    pub fn budget(mut self, d: Duration) -> Self {
+        self.max_total = d;
+        self
+    }
+
+    /// Items processed per run (enables items/s in the report).
+    pub fn throughput(mut self, items: f64) -> Self {
+        self.items = Some(items);
+        self
+    }
+
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let mut stats = OnlineStats::new();
+        let start = Instant::now();
+        while samples.len() < self.min_runs
+            || (samples.len() < self.max_runs && start.elapsed() < self.max_total)
+        {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            samples.push(dt);
+            stats.push(dt);
+        }
+        let mean = stats.mean();
+        let result = BenchResult {
+            name: self.name,
+            runs: samples.len(),
+            mean_s: mean,
+            std_s: stats.std(),
+            p50_s: percentile(&samples, 50.0),
+            p95_s: percentile(&samples, 95.0),
+            min_s: stats.min(),
+            throughput: self.items.map(|n| n / mean),
+        };
+        result.report();
+        result
+    }
+}
+
+/// Print a ratio comparison ("who wins, by what factor") between results.
+pub fn compare(baseline: &BenchResult, candidate: &BenchResult) {
+    let speedup = baseline.mean_s / candidate.mean_s;
+    println!(
+        "  -> {} is {:.2}x {} than {}",
+        candidate.name,
+        if speedup >= 1.0 { speedup } else { 1.0 / speedup },
+        if speedup >= 1.0 { "faster" } else { "slower" },
+        baseline.name
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let r = Bencher::new("sleep-2ms")
+            .warmup(0)
+            .runs(3, 5)
+            .budget(Duration::from_millis(300))
+            .run(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean_s >= 0.0019, "mean {}", r.mean_s);
+        assert!(r.runs >= 3);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let r = Bencher::new("tp")
+            .warmup(0)
+            .runs(3, 3)
+            .throughput(100.0)
+            .run(|| std::thread::sleep(Duration::from_millis(1)));
+        let tp = r.throughput.unwrap();
+        assert!(tp > 10_000.0 && tp < 150_000.0, "tp {tp}");
+    }
+}

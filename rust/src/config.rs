@@ -1,0 +1,390 @@
+//! Configuration system.
+//!
+//! [`ModelConfig`] mirrors `python/compile/configs.py` but is *loaded from
+//! the artifact manifest* (`artifacts/<preset>/manifest.json`) so the two
+//! sides cannot drift: whatever the model was compiled with is what the
+//! coordinator uses.
+//!
+//! The remaining configs are pure-rust run settings: DiPaCo topology
+//! ([`TopologySpec`]), DiLoCo outer optimization ([`DilocoConfig`]),
+//! routing ([`RoutingConfig`]), corpus generation ([`CorpusConfig`]) and
+//! the coordinator runtime ([`RunConfig`]). All are JSON round-trippable
+//! for experiment configs and run manifests.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Model/compile-time configuration (read from `manifest.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_train: usize,
+    pub seq_eval: usize,
+    pub batch: usize,
+    pub prefix: usize,
+    /// Steps fused per `train_steps` HLO call (0 = artifact not built
+    /// with fusion; fall back to per-step dispatch).
+    pub tau: usize,
+}
+
+impl ModelConfig {
+    pub fn from_manifest_json(v: &Json) -> Result<Self> {
+        let c = v.req("config").context("manifest missing config")?;
+        let field = |k: &str| -> Result<usize> {
+            c.req(k)
+                .ok()
+                .and_then(|x| x.as_usize())
+                .with_context(|| format!("manifest config field {k}"))
+        };
+        Ok(ModelConfig {
+            preset: v
+                .req("preset")?
+                .as_str()
+                .context("preset not a string")?
+                .to_string(),
+            vocab: field("vocab")?,
+            d_model: field("d_model")?,
+            n_layers: field("n_layers")?,
+            n_heads: field("n_heads")?,
+            d_ff: field("d_ff")?,
+            seq_train: field("seq_train")?,
+            seq_eval: field("seq_eval")?,
+            batch: field("batch")?,
+            prefix: field("prefix")?,
+            tau: c.get("tau").and_then(|x| x.as_usize()).unwrap_or(0),
+        })
+    }
+
+    /// Tokens per training batch that count toward the loss.
+    pub fn loss_tokens_per_batch(&self) -> usize {
+        self.batch * (self.seq_train - self.prefix)
+    }
+}
+
+/// How transformer blocks map to DiPaCo levels, and how many experts each
+/// level has (paper §2.3/§2.6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologySpec {
+    /// Experts per level, e.g. `[4, 4]` is a 4x4 DiPaCo (16 paths).
+    /// `k = 0` is sugar for "path-specific" (`K_l` = number of paths).
+    pub experts_per_level: Vec<usize>,
+    /// Stem placement: which level the embedding/final/head leaves join.
+    /// `Shared` pins them to a K=1 virtual level (shared by all paths,
+    /// the default); `Level(i)` attaches them to level i; `PathSpecific`
+    /// never communicates them (paper §4.2: "the transformer blocks
+    /// 0, 5, 6, 11, and the embedding matrix are not communicated").
+    pub stem: StemPlacement,
+    /// Block indices (per level boundaries are derived by even split
+    /// unless given explicitly).
+    pub level_blocks: Option<Vec<Vec<usize>>>,
+    /// Extra blocks that are path-specific regardless of level (paper
+    /// §4.2 path-specific-modules variant).
+    pub path_specific_blocks: Vec<usize>,
+    /// Data-parallel replicas sharing the SAME module assignment: paths =
+    /// replicas x prod(K_l). DiLoCo-P (paper §2.5 / Table 1) is
+    /// `experts_per_level = [1], replicas = P` — P workers on P shards,
+    /// every module shared, collapsed at each outer step.
+    pub replicas: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StemPlacement {
+    Shared,
+    PathSpecific,
+}
+
+impl TopologySpec {
+    /// `KxK` grid over evenly split blocks, shared stem — the paper's
+    /// default configuration (e.g. 16x16 in §4.1).
+    pub fn grid(experts_per_level: Vec<usize>) -> Self {
+        TopologySpec {
+            experts_per_level,
+            stem: StemPlacement::Shared,
+            level_blocks: None,
+            path_specific_blocks: vec![],
+            replicas: 1,
+        }
+    }
+
+    /// DiLoCo with `p` data-parallel workers: one expert per level, every
+    /// module shared by all paths, collapsed at each outer step.
+    pub fn diloco(p: usize) -> Self {
+        let mut spec = Self::grid(vec![1]);
+        spec.replicas = p;
+        spec
+    }
+
+    /// Flat MoE with `p` fully independent paths (paper §2.6.3):
+    /// one level, `p` experts, path-specific stem.
+    pub fn flat_moe(p: usize) -> Self {
+        TopologySpec {
+            experts_per_level: vec![p],
+            stem: StemPlacement::PathSpecific,
+            level_blocks: None,
+            path_specific_blocks: vec![],
+            replicas: 1,
+        }
+    }
+
+    pub fn paths(&self) -> usize {
+        self.experts_per_level.iter().product::<usize>().max(1) * self.replicas.max(1)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "experts_per_level",
+                Json::arr(self.experts_per_level.iter().map(|&k| Json::num(k as f64))),
+            ),
+            (
+                "stem",
+                Json::str(match self.stem {
+                    StemPlacement::Shared => "shared",
+                    StemPlacement::PathSpecific => "path_specific",
+                }),
+            ),
+            (
+                "path_specific_blocks",
+                Json::arr(self.path_specific_blocks.iter().map(|&b| Json::num(b as f64))),
+            ),
+            ("replicas", Json::num(self.replicas.max(1) as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let experts = v
+            .req("experts_per_level")?
+            .as_arr()
+            .context("experts_per_level not an array")?
+            .iter()
+            .map(|j| j.as_usize().context("bad expert count"))
+            .collect::<Result<Vec<_>>>()?;
+        let stem = match v.get("stem").and_then(|s| s.as_str()) {
+            Some("path_specific") => StemPlacement::PathSpecific,
+            _ => StemPlacement::Shared,
+        };
+        let psb = v
+            .get("path_specific_blocks")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|j| j.as_usize()).collect())
+            .unwrap_or_default();
+        if experts.is_empty() {
+            bail!("experts_per_level empty");
+        }
+        Ok(TopologySpec {
+            experts_per_level: experts,
+            stem,
+            level_blocks: None,
+            path_specific_blocks: psb,
+            replicas: v.get("replicas").and_then(|r| r.as_usize()).unwrap_or(1),
+        })
+    }
+}
+
+/// DiLoCo outer optimization (paper §2.5, §7.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DilocoConfig {
+    /// Inner steps per outer round (tau; paper §4.2 uses 150).
+    pub inner_steps: usize,
+    /// Outer Nesterov learning rate (paper: 0.7).
+    pub outer_lr: f32,
+    /// Outer Nesterov momentum (paper: 0.9).
+    pub outer_momentum: f32,
+    /// Rescale module outer-gradients by sqrt(paths through module)
+    /// (paper §2.7 "Outer Gradient Norm Rescaling").
+    pub norm_rescale: bool,
+    /// Weigh outer gradients by shard size (paper §2.7 Eq. 2-3).
+    pub loss_reweigh: bool,
+    /// Peak inner (AdamW) learning rate; cosine schedule (paper: 4e-4...
+    /// scaled up for the smaller model here).
+    pub peak_lr: f32,
+    /// Warmup steps for the inner schedule (paper: 1000).
+    pub warmup_steps: usize,
+    /// Total inner steps the cosine schedule decays over.
+    pub total_steps: usize,
+}
+
+impl Default for DilocoConfig {
+    fn default() -> Self {
+        DilocoConfig {
+            inner_steps: 50,
+            outer_lr: 0.7,
+            outer_momentum: 0.9,
+            norm_rescale: true,
+            loss_reweigh: true,
+            peak_lr: 1e-3,
+            warmup_steps: 100,
+            total_steps: 2000,
+        }
+    }
+}
+
+impl DilocoConfig {
+    /// Cosine schedule with linear warmup; `step` is 1-based.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let s = step as f32;
+        let w = self.warmup_steps.max(1) as f32;
+        if step <= self.warmup_steps {
+            return self.peak_lr * s / w;
+        }
+        let t = ((s - w) / (self.total_steps as f32 - w).max(1.0)).min(1.0);
+        let min_lr = 0.1 * self.peak_lr;
+        min_lr + 0.5 * (self.peak_lr - min_lr) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+/// Coarse-routing configuration (paper §2.4, §7.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutingConfig {
+    /// k-means iterations for the generative router.
+    pub kmeans_iters: usize,
+    /// Use product k-means (paper §7.3) for the generative stage.
+    pub product_kmeans: bool,
+    /// Overlap shards with top-n assignment at train time (paper §2.4.4;
+    /// the 16x16 run uses top-2). 1 = disjoint shards.
+    pub train_overlap: usize,
+    /// Fraction of documents reserved as router data (paper: 0.005 of C4;
+    /// higher here because the corpus is much smaller).
+    pub router_data_frac: f64,
+    /// Logistic-regression epochs for the discriminative router.
+    pub logistic_epochs: usize,
+    /// Logistic-regression learning rate.
+    pub logistic_lr: f64,
+    /// Calibrate class biases to the target document distribution
+    /// (paper §7.2.1).
+    pub calibrate_bias: bool,
+}
+
+impl Default for RoutingConfig {
+    fn default() -> Self {
+        RoutingConfig {
+            kmeans_iters: 25,
+            product_kmeans: false,
+            train_overlap: 1,
+            router_data_frac: 0.05,
+            logistic_epochs: 60,
+            logistic_lr: 0.5,
+            calibrate_bias: true,
+        }
+    }
+}
+
+/// Synthetic multi-domain corpus (the C4 substitution — DESIGN.md).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CorpusConfig {
+    pub n_domains: usize,
+    pub n_docs: usize,
+    pub doc_len: (usize, usize),
+    /// Zipf skew for domain weights (0 = uniform).
+    pub skew: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            n_domains: 16,
+            n_docs: 6000,
+            doc_len: (300, 700),
+            skew: 0.3,
+            seed: 1234,
+        }
+    }
+}
+
+/// Coordinator runtime settings (paper §3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Training workers in the primary pool (paper §3.4: may be fewer than
+    /// paths; phases then take multiple rounds).
+    pub workers: usize,
+    /// Extra low-priority backup workers (paper §3.4).
+    pub backup_workers: usize,
+    /// Probability a worker is preempted mid-task (fault injection).
+    pub preemption_prob: f64,
+    /// Task lease duration before the queue reclaims it, in ms.
+    pub lease_ms: u64,
+    /// Simulated checkpoint-transfer delay (distant DC), in ms.
+    pub transfer_delay_ms: u64,
+    /// Outer-optimization executor shards (paper §3.3).
+    pub outer_executors: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            workers: 4,
+            backup_workers: 0,
+            preemption_prob: 0.0,
+            lease_ms: 30_000,
+            transfer_delay_ms: 0,
+            outer_executors: 2,
+            seed: 7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_paths() {
+        assert_eq!(TopologySpec::grid(vec![4, 4]).paths(), 16);
+        assert_eq!(TopologySpec::grid(vec![2, 4]).paths(), 8);
+        assert_eq!(TopologySpec::diloco(8).paths(), 8);
+        assert_eq!(TopologySpec::flat_moe(64).paths(), 64);
+    }
+
+    #[test]
+    fn topology_json_roundtrip() {
+        let t = TopologySpec {
+            experts_per_level: vec![2, 4],
+            stem: StemPlacement::PathSpecific,
+            level_blocks: None,
+            path_specific_blocks: vec![0, 3],
+            replicas: 2,
+        };
+        let t2 = TopologySpec::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let d = DilocoConfig {
+            warmup_steps: 10,
+            total_steps: 100,
+            peak_lr: 1.0,
+            ..Default::default()
+        };
+        assert!(d.lr_at(1) < d.lr_at(10));
+        assert!((d.lr_at(10) - 1.0).abs() < 1e-6);
+        assert!(d.lr_at(50) < 1.0);
+        assert!(d.lr_at(100) <= d.lr_at(50));
+        assert!(d.lr_at(100) >= 0.099); // floors at 10% of peak
+        // never negative, never above peak
+        for s in 1..=120 {
+            let lr = d.lr_at(s);
+            assert!((0.0..=1.0 + 1e-6).contains(&lr), "step {s} lr {lr}");
+        }
+    }
+
+    #[test]
+    fn model_config_from_manifest() {
+        let j = Json::parse(
+            r#"{"preset":"t","config":{"vocab":64,"d_model":16,"n_layers":2,
+                "n_heads":2,"d_ff":32,"seq_train":32,"seq_eval":48,"batch":2,
+                "prefix":8,"d_head":8}}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest_json(&j).unwrap();
+        assert_eq!(c.d_model, 16);
+        assert_eq!(c.loss_tokens_per_batch(), 2 * (32 - 8));
+    }
+}

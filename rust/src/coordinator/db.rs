@@ -1,0 +1,216 @@
+//! Checkpoint-metadata database — the Spanner stand-in (paper §3, blue box
+//! in Figure 6): "the path to the checkpoint, along with the metadata of
+//! the checkpoint (e.g., path ID, outer step ID, etc.), is recorded in a
+//! database table. This enables other components to query the checkpoint
+//! file path for a given path."
+//!
+//! Consumers (outer-optimization executors, evaluators) either poll with a
+//! monotonically increasing row id (`rows_since`) or subscribe to a
+//! channel for push notifications — the "load training checkpoints as soon
+//! as they appear in the table" behaviour that online averaging needs.
+//! State persists to JSON for crash recovery.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::Sender;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptRow {
+    pub rowid: u64,
+    pub phase: usize,
+    pub path_id: usize,
+    pub kind: String, // "path" (worker output) | "module" (outer output)
+    pub file: PathBuf,
+    pub step: usize,
+    pub loss: f32,
+}
+
+#[derive(Default)]
+struct Inner {
+    rows: Vec<CkptRow>,
+    subscribers: Vec<Sender<CkptRow>>,
+}
+
+#[derive(Default)]
+pub struct CheckpointDb {
+    inner: Mutex<Inner>,
+}
+
+impl CheckpointDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a row; fan out to subscribers. Duplicate (phase, path, kind)
+    /// rows are dropped (idempotent writes from retried tasks).
+    pub fn insert(&self, mut row: CkptRow) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(existing) = g
+            .rows
+            .iter()
+            .find(|r| r.phase == row.phase && r.path_id == row.path_id && r.kind == row.kind)
+        {
+            return existing.rowid;
+        }
+        row.rowid = g.rows.len() as u64 + 1;
+        g.rows.push(row.clone());
+        g.subscribers.retain(|s| s.send(row.clone()).is_ok());
+        row.rowid
+    }
+
+    /// Rows with rowid > `since`, oldest first.
+    pub fn rows_since(&self, since: u64) -> Vec<CkptRow> {
+        let g = self.inner.lock().unwrap();
+        g.rows.iter().filter(|r| r.rowid > since).cloned().collect()
+    }
+
+    pub fn query(&self, phase: usize, kind: &str) -> Vec<CkptRow> {
+        let g = self.inner.lock().unwrap();
+        g.rows
+            .iter()
+            .filter(|r| r.phase == phase && r.kind == kind)
+            .cloned()
+            .collect()
+    }
+
+    pub fn lookup(&self, phase: usize, path_id: usize, kind: &str) -> Option<CkptRow> {
+        let g = self.inner.lock().unwrap();
+        g.rows
+            .iter()
+            .find(|r| r.phase == phase && r.path_id == path_id && r.kind == kind)
+            .cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Push notifications for every future insert.
+    pub fn subscribe(&self, tx: Sender<CkptRow>) {
+        self.inner.lock().unwrap().subscribers.push(tx);
+    }
+
+    // ------------------------------------------------------- persistence
+
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::obj(vec![(
+            "rows",
+            Json::arr(g.rows.iter().map(|r| {
+                Json::obj(vec![
+                    ("rowid", Json::num(r.rowid as f64)),
+                    ("phase", Json::num(r.phase as f64)),
+                    ("path_id", Json::num(r.path_id as f64)),
+                    ("kind", Json::str(r.kind.clone())),
+                    ("file", Json::str(r.file.to_string_lossy())),
+                    ("step", Json::num(r.step as f64)),
+                    ("loss", Json::num(r.loss as f64)),
+                ])
+            })),
+        )])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<CheckpointDb> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).context("parsing db json")?;
+        let db = CheckpointDb::new();
+        {
+            let mut g = db.inner.lock().unwrap();
+            for r in j.req("rows")?.as_arr().context("rows")? {
+                g.rows.push(CkptRow {
+                    rowid: r.req("rowid")?.as_usize().unwrap_or(0) as u64,
+                    phase: r.req("phase")?.as_usize().unwrap_or(0),
+                    path_id: r.req("path_id")?.as_usize().unwrap_or(0),
+                    kind: r.req("kind")?.as_str().unwrap_or("").to_string(),
+                    file: r.req("file")?.as_str().unwrap_or("").into(),
+                    step: r.req("step")?.as_usize().unwrap_or(0),
+                    loss: r.req("loss")?.as_f64().unwrap_or(0.0) as f32,
+                });
+            }
+        }
+        Ok(db)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(phase: usize, path_id: usize, kind: &str) -> CkptRow {
+        CkptRow {
+            rowid: 0,
+            phase,
+            path_id,
+            kind: kind.into(),
+            file: format!("/gfs/p{phase}/path{path_id}.dpc").into(),
+            step: 100,
+            loss: 2.5,
+        }
+    }
+
+    #[test]
+    fn insert_query_lookup() {
+        let db = CheckpointDb::new();
+        db.insert(row(0, 0, "path"));
+        db.insert(row(0, 1, "path"));
+        db.insert(row(1, 0, "path"));
+        assert_eq!(db.query(0, "path").len(), 2);
+        assert!(db.lookup(1, 0, "path").is_some());
+        assert!(db.lookup(1, 1, "path").is_none());
+    }
+
+    #[test]
+    fn duplicate_inserts_are_idempotent() {
+        let db = CheckpointDb::new();
+        let a = db.insert(row(0, 0, "path"));
+        let b = db.insert(row(0, 0, "path")); // retried task
+        assert_eq!(a, b);
+        assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn rows_since_is_monotonic() {
+        let db = CheckpointDb::new();
+        for i in 0..5 {
+            db.insert(row(0, i, "path"));
+        }
+        let newer = db.rows_since(3);
+        assert_eq!(newer.len(), 2);
+        assert!(newer.iter().all(|r| r.rowid > 3));
+    }
+
+    #[test]
+    fn subscribers_get_pushed_rows() {
+        let db = CheckpointDb::new();
+        let (tx, rx) = std::sync::mpsc::channel();
+        db.subscribe(tx);
+        db.insert(row(2, 7, "path"));
+        let got = rx.recv_timeout(std::time::Duration::from_millis(100)).unwrap();
+        assert_eq!(got.path_id, 7);
+        assert_eq!(got.phase, 2);
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let db = CheckpointDb::new();
+        db.insert(row(0, 0, "path"));
+        db.insert(row(0, 1, "module"));
+        let p = std::env::temp_dir().join(format!("dipaco-db-{}.json", std::process::id()));
+        db.save(&p).unwrap();
+        let db2 = CheckpointDb::load(&p).unwrap();
+        assert_eq!(db2.len(), 2);
+        assert_eq!(db2.query(0, "module").len(), 1);
+    }
+}

@@ -1,0 +1,86 @@
+//! Job status monitor (paper §3, green box in Figure 6): "a monitoring
+//! worker periodically checks the health of workers and task queue servers,
+//! and restarts them if they become unresponsive."
+//!
+//! Here: a thread that each tick (a) reclaims expired task leases and
+//! (b) compares live worker heartbeats against the pool's target size,
+//! respawning replacements for crashed workers.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::worker::WorkerPool;
+use crate::info;
+
+pub struct Monitor {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+    pub respawns: Arc<AtomicU64>,
+    pub reclaims: Arc<AtomicU64>,
+}
+
+impl Monitor {
+    pub fn start(pool: Arc<WorkerPool>, tick: Duration) -> Monitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let respawns = Arc::new(AtomicU64::new(0));
+        let reclaims = Arc::new(AtomicU64::new(0));
+        let stop2 = Arc::clone(&stop);
+        let respawns2 = Arc::clone(&respawns);
+        let reclaims2 = Arc::clone(&reclaims);
+        let handle = std::thread::Builder::new()
+            .name("monitor".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let ctx = pool.ctx();
+                    // (a) requeue tasks whose workers died holding a lease
+                    let n = ctx.queue.reclaim_expired();
+                    if n > 0 {
+                        reclaims2.fetch_add(n as u64, Ordering::Relaxed);
+                        info!("monitor", "reclaimed {n} expired leases");
+                    }
+                    // (b) resurrect crashed workers
+                    if ctx.shutting_down.load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let live = ctx.live_workers();
+                    if live < pool.target_workers {
+                        let need = pool.target_workers - live;
+                        for _ in 0..need {
+                            pool.spawn_worker(false);
+                        }
+                        respawns2.fetch_add(need as u64, Ordering::Relaxed);
+                        info!("monitor", "respawned {need} workers ({live} live)");
+                    }
+                }
+            })
+            .expect("spawn monitor");
+        Monitor {
+            stop,
+            handle: Some(handle),
+            respawns,
+            reclaims,
+        }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Monitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

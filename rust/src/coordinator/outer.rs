@@ -1,0 +1,373 @@
+//! Sharded outer-optimization executors (paper §3.3, Figure 7).
+//!
+//! Modules are sharded across executor threads; each executor subscribes
+//! to the checkpoint DB and, **as each path checkpoint arrives** (online
+//! parameter-gradient averaging — no waiting for the full phase), extracts
+//! the module slices it owns, accumulates `theta(l,e)^{t-1} -
+//! theta(l,e)^t_i` weighted by shard size (loss reweighing, §2.7), and
+//! once a module has heard from all `P_{l,e}` of its paths applies the
+//! Nesterov outer update (Algorithm 1 lines 13-14) with norm rescaling.
+//!
+//! "As a consequence, the overall model is never materialized in a single
+//! location but always split across several servers" — here: each module's
+//! global copy lives in exactly one executor's shard of the
+//! [`ModuleStore`], and completed-module notifications let the next
+//! phase's tasks start before the whole phase finishes averaging.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::config::DilocoConfig;
+use crate::coordinator::db::{CheckpointDb, CkptRow};
+use crate::optim::{rescale_factor, Nesterov, OuterAccumulator};
+use crate::params::checkpoint::Checkpoint;
+use crate::topology::{ModuleId, ModuleStore, Topology};
+
+/// Notification that a module finished its outer update for a phase.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModuleDone {
+    pub phase: usize,
+    pub module: ModuleId,
+}
+
+/// Round-robin module sharding across `executors` (paper Figure 7).
+pub fn shard_modules(topo: &Topology, executors: usize) -> Vec<Vec<ModuleId>> {
+    let mut shards = vec![Vec::new(); executors.max(1)];
+    for (i, m) in topo.all_modules().into_iter().enumerate() {
+        shards[i % executors.max(1)].push(m);
+    }
+    shards
+}
+
+/// One executor's phase-scoped state.
+struct ExecState {
+    acc: HashMap<ModuleId, OuterAccumulator>,
+    done: HashMap<ModuleId, bool>,
+}
+
+/// Configuration shared by all executors of a run.
+pub struct OuterConfig {
+    pub diloco: DilocoConfig,
+    /// Shard sizes for loss reweighing (index = path id).
+    pub shard_sizes: Vec<usize>,
+}
+
+/// The executor loop: consumes path-checkpoint rows for `phase`, returns
+/// when all owned modules are updated. Designed to be run on a thread per
+/// executor shard.
+#[allow(clippy::too_many_arguments)]
+pub fn executor_loop(
+    topo: &Topology,
+    store: &Mutex<ModuleStore>,
+    opt: &mut Nesterov,
+    owned: &[ModuleId],
+    cfg: &OuterConfig,
+    phase: usize,
+    rx: &Receiver<CkptRow>,
+    done_tx: &Sender<ModuleDone>,
+) -> Result<()> {
+    if owned.is_empty() {
+        return Ok(());
+    }
+    let mut state = ExecState {
+        acc: HashMap::new(),
+        done: owned.iter().map(|&m| (m, false)).collect(),
+    };
+    // Modules with zero expected contributions can't occur: every module
+    // has P_le >= 1 paths by construction.
+    let mut remaining = owned.len();
+    while remaining > 0 {
+        let row = rx.recv().context("db notification channel closed")?;
+        if row.kind != "path" || row.phase != phase {
+            continue;
+        }
+        let ck = Checkpoint::load(&row.file)
+            .with_context(|| format!("executor loading {}", row.file.display()))?;
+        let theta_after = ck.get("theta").context("ckpt missing theta")?;
+        let w = if cfg.diloco.loss_reweigh {
+            cfg.shard_sizes.get(row.path_id).copied().unwrap_or(1).max(1) as f64
+        } else {
+            1.0
+        };
+        let path_modules = topo.modules_of_path(row.path_id);
+        for m in path_modules {
+            if !state.done.contains_key(&m) || state.done[&m] {
+                continue;
+            }
+            let after = topo.extract(m.level, theta_after);
+            let (delta, expected) = {
+                let store_g = store.lock().unwrap();
+                let before = store_g.get(m);
+                let delta: Vec<f32> =
+                    before.iter().zip(&after).map(|(b, a)| b - a).collect();
+                (delta, topo.paths_through(m))
+            };
+            let acc = state
+                .acc
+                .entry(m)
+                .or_insert_with(|| OuterAccumulator::new(delta.len()));
+            acc.add(&delta, w);
+            if acc.contributions() == expected {
+                let mut g = acc.average();
+                let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
+                if scale != 1.0 {
+                    g.iter_mut().for_each(|x| *x *= scale);
+                }
+                {
+                    let mut store_g = store.lock().unwrap();
+                    opt.step(m, store_g.get_mut(m), &g);
+                }
+                state.done.insert(m, true);
+                remaining -= 1;
+                let _ = done_tx.send(ModuleDone { phase, module: m });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run one phase's outer optimization with `executors` sharded executor
+/// threads, consuming checkpoints as they appear in `db`. Blocks until
+/// every module is updated; returns the number of modules updated.
+///
+/// `opts` carries each executor's persistent Nesterov state across phases
+/// (velocity must survive phase boundaries).
+#[allow(clippy::too_many_arguments)]
+pub fn run_phase_outer(
+    topo: &Arc<Topology>,
+    store: &Arc<Mutex<ModuleStore>>,
+    opts: &mut [Nesterov],
+    shards: &[Vec<ModuleId>],
+    cfg: &OuterConfig,
+    phase: usize,
+    db: &Arc<CheckpointDb>,
+    done_tx: &Sender<ModuleDone>,
+) -> Result<usize> {
+    // Subscribe before replaying existing rows so nothing is missed.
+    let subs: Vec<Receiver<CkptRow>> = shards
+        .iter()
+        .map(|_| {
+            let (tx, rx) = channel();
+            db.subscribe(tx.clone());
+            // replay rows already present (tasks that finished early)
+            for row in db.rows_since(0) {
+                let _ = tx.send(row);
+            }
+            rx
+        })
+        .collect();
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    std::thread::scope(|s| -> Result<()> {
+        let mut joins = Vec::new();
+        for ((owned, rx), opt) in shards.iter().zip(subs.into_iter()).zip(opts.iter_mut()) {
+            let topo = Arc::clone(topo);
+            let store = Arc::clone(store);
+            let done_tx = done_tx.clone();
+            joins.push(s.spawn(move || {
+                executor_loop(&topo, &store, opt, owned, cfg, phase, &rx, &done_tx)
+            }));
+        }
+        for j in joins {
+            j.join().expect("executor panicked")?;
+        }
+        Ok(())
+    })?;
+    Ok(total)
+}
+
+/// Naive (non-sharded, non-online) outer update used as the §3.3 baseline
+/// in benches: wait for ALL checkpoints, then average and update serially.
+pub fn naive_phase_outer(
+    topo: &Topology,
+    store: &Mutex<ModuleStore>,
+    opt: &mut Nesterov,
+    cfg: &OuterConfig,
+    phase: usize,
+    db: &CheckpointDb,
+) -> Result<usize> {
+    // gather everything first (the inefficiency under test)
+    let rows = db.query(phase, "path");
+    let ckpts: Vec<(usize, Checkpoint)> = rows
+        .iter()
+        .map(|r| Ok((r.path_id, Checkpoint::load(&r.file)?)))
+        .collect::<Result<_>>()?;
+    let mut n = 0;
+    for m in topo.all_modules() {
+        let mut acc = OuterAccumulator::new(topo.levels[m.level].size);
+        for (path_id, ck) in &ckpts {
+            if topo.expert_of(*path_id, m.level) != m.expert {
+                continue;
+            }
+            let theta_after = ck.get("theta").context("theta")?;
+            let after = topo.extract(m.level, theta_after);
+            let store_g = store.lock().unwrap();
+            let before = store_g.get(m);
+            let delta: Vec<f32> = before.iter().zip(&after).map(|(b, a)| b - a).collect();
+            drop(store_g);
+            let w = if cfg.diloco.loss_reweigh {
+                cfg.shard_sizes.get(*path_id).copied().unwrap_or(1).max(1) as f64
+            } else {
+                1.0
+            };
+            acc.add(&delta, w);
+        }
+        if acc.contributions() == 0 {
+            continue;
+        }
+        let mut g = acc.average();
+        let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
+        g.iter_mut().for_each(|x| *x *= scale);
+        let mut store_g = store.lock().unwrap();
+        opt.step(m, store_g.get_mut(m), &g);
+        n += 1;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologySpec;
+    use crate::params::manifest::Manifest;
+    use crate::util::json::Json;
+
+    fn setup() -> (Arc<Topology>, Arc<Mutex<ModuleStore>>, Vec<f32>) {
+        let j = crate::params::manifest::tests::fake_manifest_json(4, 8);
+        let man = Manifest::from_json(&Json::parse(&j).unwrap()).unwrap();
+        let topo = Arc::new(Topology::build(&man, &TopologySpec::grid(vec![2, 2])));
+        let theta: Vec<f32> = (0..man.total_params).map(|i| (i % 97) as f32 * 0.01).collect();
+        let store = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
+        (topo, store, theta)
+    }
+
+    fn save_path_ckpt(dir: &std::path::Path, phase: usize, path: usize, theta: Vec<f32>) -> CkptRow {
+        let file = dir.join(format!("p{phase}-path{path}.dpc"));
+        Checkpoint::new().with("theta", theta).save(&file).unwrap();
+        CkptRow {
+            rowid: 0,
+            phase,
+            path_id: path,
+            kind: "path".into(),
+            file,
+            step: 0,
+            loss: 1.0,
+        }
+    }
+
+    #[test]
+    fn sharding_covers_all_modules() {
+        let (topo, _, _) = setup();
+        let shards = shard_modules(&topo, 3);
+        let mut all: Vec<ModuleId> = shards.concat();
+        all.sort();
+        let mut expect = topo.all_modules();
+        expect.sort();
+        assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn online_sharded_matches_naive() {
+        // Both implementations must produce identical module stores.
+        let (topo, store_a, theta) = setup();
+        let store_b = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
+        let dir = std::env::temp_dir().join(format!("dipaco-outer-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        // fake per-path results: theta + path-dependent perturbation
+        let db = Arc::new(CheckpointDb::new());
+        let mut rows = Vec::new();
+        for p in 0..topo.paths {
+            let after: Vec<f32> = theta
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v + 0.001 * (p as f32 + 1.0) * ((i % 7) as f32 - 3.0))
+                .collect();
+            rows.push(save_path_ckpt(&dir, 0, p, after));
+        }
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![10, 20, 30, 40],
+        };
+
+        // naive on store_b
+        let dbb = CheckpointDb::new();
+        for r in &rows {
+            dbb.insert(r.clone());
+        }
+        let mut opt_b = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        naive_phase_outer(&topo, &store_b, &mut opt_b, &cfg, 0, &dbb).unwrap();
+
+        // online sharded on store_a — rows inserted concurrently
+        let shards = shard_modules(&topo, 2);
+        let mut opts: Vec<Nesterov> = (0..2)
+            .map(|_| Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum))
+            .collect();
+        let (done_tx, done_rx) = channel();
+        let db2 = Arc::clone(&db);
+        let rows2 = rows.clone();
+        let feeder = std::thread::spawn(move || {
+            for r in rows2 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                db2.insert(r);
+            }
+        });
+        let n = run_phase_outer(&topo, &store_a, &mut opts, &shards, &cfg, 0, &db, &done_tx)
+            .unwrap();
+        feeder.join().unwrap();
+        assert_eq!(n, topo.all_modules().len());
+        // every module got a done notification
+        let mut dones = 0;
+        while done_rx.try_recv().is_ok() {
+            dones += 1;
+        }
+        assert_eq!(dones, n);
+
+        let a = store_a.lock().unwrap();
+        let b = store_b.lock().unwrap();
+        for m in topo.all_modules() {
+            let va = a.get(m);
+            let vb = b.get(m);
+            for (x, y) in va.iter().zip(vb) {
+                assert!((x - y).abs() < 1e-5, "module {m} diverged: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn update_moves_toward_worker_params() {
+        // With lr>0 and a consistent delta direction, the store moves
+        // toward (not away from) the workers' new parameters.
+        let (topo, store, theta) = setup();
+        let dir = std::env::temp_dir().join(format!("dipaco-outer2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let db = Arc::new(CheckpointDb::new());
+        for p in 0..topo.paths {
+            // all workers move +0.1 everywhere
+            let after: Vec<f32> = theta.iter().map(|&v| v + 0.1).collect();
+            db.insert(save_path_ckpt(&dir, 0, p, after));
+        }
+        let cfg = OuterConfig {
+            diloco: DilocoConfig {
+                loss_reweigh: false,
+                norm_rescale: false,
+                ..Default::default()
+            },
+            shard_sizes: vec![1; topo.paths],
+        };
+        let shards = shard_modules(&topo, 1);
+        let mut opts = vec![Nesterov::new(0.7, 0.9)];
+        let (tx, _rx) = channel();
+        run_phase_outer(&topo, &store, &mut opts, &shards, &cfg, 0, &db, &tx).unwrap();
+        let g = store.lock().unwrap();
+        for m in topo.all_modules() {
+            let before = topo.extract(m.level, &theta);
+            for (x, b) in g.get(m).iter().zip(&before) {
+                // delta = before-after = -0.1; nesterov step: p -= lr*(1+mu)*(-0.1) -> +0.133
+                assert!(x > b, "module {m} did not move toward workers");
+            }
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Phase orchestration — Algorithm 1 end to end over the §3 infrastructure.
+//!
+//! Per outer step t: assemble each path's parameters from the module
+//! store, enqueue one training task per path (workers may be fewer than
+//! paths — the queue then serves multiple *rounds*, paper §3.4), run the
+//! sharded outer-optimization executors concurrently so module averages
+//! accumulate online as checkpoints land, and finish when every module's
+//! outer update is applied. Evaluation tasks for early stopping ride the
+//! same queue (Figure 6).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{DilocoConfig, RunConfig};
+use crate::coordinator::db::CheckpointDb;
+use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig};
+use crate::coordinator::queue::TaskQueue;
+use crate::coordinator::task::{Task, TrainTask};
+use crate::coordinator::worker::{WorkerCtx, WorkerPool};
+use crate::data::corpus::Corpus;
+use crate::data::dataset::Sharding;
+use crate::info;
+use crate::optim::Nesterov;
+use crate::params::checkpoint::Checkpoint;
+use crate::runtime::engine::Engine;
+use crate::topology::{ModuleStore, Topology};
+
+/// Result of one phase.
+#[derive(Debug, Clone)]
+pub struct PhaseStats {
+    pub phase: usize,
+    pub mean_train_loss: f64,
+    pub wallclock_s: f64,
+    pub outer_update_s: f64,
+    pub requeues: u64,
+}
+
+pub struct DipacoRun {
+    pub engine: Arc<Engine>,
+    pub corpus: Arc<Corpus>,
+    pub sharding: Arc<Sharding>,
+    pub topo: Arc<Topology>,
+    pub store: Arc<Mutex<ModuleStore>>,
+    pub diloco: DilocoConfig,
+    pub run: RunConfig,
+    pub rundir: PathBuf,
+    pub early_stop: bool,
+
+    queue: Arc<TaskQueue>,
+    pub db: Arc<CheckpointDb>,
+    pool: Arc<WorkerPool>,
+    outer_opts: Vec<Nesterov>,
+    executor_shards: Vec<Vec<crate::topology::ModuleId>>,
+    next_task_id: u64,
+    /// Per-path optimizer state carried across phases (m, v). Paths keep
+    /// their AdamW moments like DiLoCo workers do.
+    opt_state: HashMap<usize, (Vec<f32>, Vec<f32>)>,
+    pub stats: Vec<PhaseStats>,
+}
+
+impl DipacoRun {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        engine: Arc<Engine>,
+        corpus: Arc<Corpus>,
+        sharding: Arc<Sharding>,
+        topo: Arc<Topology>,
+        base_theta: &[f32],
+        diloco: DilocoConfig,
+        run: RunConfig,
+        rundir: PathBuf,
+        early_stop: bool,
+    ) -> Result<DipacoRun> {
+        std::fs::create_dir_all(&rundir)?;
+        assert_eq!(
+            sharding.shards.len(),
+            topo.paths,
+            "one shard per path (paper §2.4)"
+        );
+        let store = Arc::new(Mutex::new(ModuleStore::from_base(&topo, base_theta)));
+        let queue = Arc::new(TaskQueue::new(std::time::Duration::from_millis(
+            run.lease_ms,
+        )));
+        let db = Arc::new(CheckpointDb::new());
+        let ctx = WorkerCtx::new(
+            Arc::clone(&engine),
+            Arc::clone(&queue),
+            Arc::clone(&db),
+            Arc::clone(&corpus),
+            Arc::clone(&sharding),
+            diloco.clone(),
+            run.clone(),
+            early_stop,
+        );
+        let pool = WorkerPool::spawn(ctx, run.workers, run.backup_workers);
+        let executor_shards = shard_modules(&topo, run.outer_executors);
+        let outer_opts = (0..executor_shards.len())
+            .map(|_| Nesterov::new(diloco.outer_lr, diloco.outer_momentum))
+            .collect();
+        Ok(DipacoRun {
+            engine,
+            corpus,
+            sharding,
+            topo,
+            store,
+            diloco,
+            run,
+            rundir,
+            early_stop,
+            queue,
+            db,
+            pool,
+            outer_opts,
+            executor_shards,
+            next_task_id: 1,
+            opt_state: HashMap::new(),
+            stats: Vec::new(),
+        })
+    }
+
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    pub fn queue(&self) -> &Arc<TaskQueue> {
+        &self.queue
+    }
+
+    /// Run one outer phase (Algorithm 1 lines 3-16).
+    pub fn run_phase(&mut self, phase: usize) -> Result<PhaseStats> {
+        let t0 = Instant::now();
+        let requeues_before = self.queue.stats().requeues;
+        let phase_dir = self.rundir.join(format!("phase{phase}"));
+        std::fs::create_dir_all(&phase_dir)?;
+
+        // ---- assemble per-path inputs from the current global modules ----
+        let n = self.engine.manifest.total_params;
+        let mut tasks = Vec::with_capacity(self.topo.paths);
+        for path in 0..self.topo.paths {
+            let theta = self.store.lock().unwrap().assemble(&self.topo, path);
+            let (m, v) = self
+                .opt_state
+                .remove(&path)
+                .unwrap_or_else(|| (vec![0.0; n], vec![0.0; n]));
+            let ckpt_in = phase_dir.join(format!("path{path}.in.dpc"));
+            Checkpoint::new()
+                .with("theta", theta)
+                .with("m", m)
+                .with("v", v)
+                .save(&ckpt_in)?;
+            tasks.push(Task::Train(TrainTask {
+                id: self.next_task_id,
+                phase,
+                path,
+                steps: self.diloco.inner_steps,
+                start_step: phase * self.diloco.inner_steps,
+                ckpt_in,
+                ckpt_out: phase_dir.join(format!("path{path}.out.dpc")),
+            }));
+            self.next_task_id += 1;
+        }
+        self.queue.push_all(tasks);
+
+        // ---- outer executors consume checkpoints online ----
+        let outer_t0 = Instant::now();
+        let cfg = OuterConfig {
+            diloco: self.diloco.clone(),
+            shard_sizes: self.sharding.sizes(),
+        };
+        let (done_tx, _done_rx) = channel();
+        run_phase_outer(
+            &self.topo,
+            &self.store,
+            &mut self.outer_opts,
+            &self.executor_shards,
+            &cfg,
+            phase,
+            &self.db,
+            &done_tx,
+        )?;
+        let outer_update_s = outer_t0.elapsed().as_secs_f64();
+
+        // carry forward per-path AdamW state from the out checkpoints
+        for path in 0..self.topo.paths {
+            let row = self
+                .db
+                .lookup(phase, path, "path")
+                .context("missing path checkpoint row")?;
+            let mut ck = Checkpoint::load(&row.file)?;
+            if let (Some(m), Some(v)) = (ck.take("m"), ck.take("v")) {
+                self.opt_state.insert(path, (m, v));
+            }
+        }
+
+        // drain outstanding eval tasks before closing the phase books
+        self.queue
+            .wait_idle(std::time::Duration::from_millis(10));
+
+        let rows = self.db.query(phase, "path");
+        let mean_train_loss =
+            rows.iter().map(|r| r.loss as f64).sum::<f64>() / rows.len().max(1) as f64;
+        let stats = PhaseStats {
+            phase,
+            mean_train_loss,
+            wallclock_s: t0.elapsed().as_secs_f64(),
+            outer_update_s,
+            requeues: self.queue.stats().requeues - requeues_before,
+        };
+        info!(
+            "phases",
+            "phase {phase}: loss={:.4} wall={:.1}s outer={:.2}s requeues={}",
+            stats.mean_train_loss,
+            stats.wallclock_s,
+            stats.outer_update_s,
+            stats.requeues
+        );
+        self.stats.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Run `phases` outer steps.
+    pub fn run(&mut self, phases: usize) -> Result<()> {
+        for t in 0..phases {
+            self.run_phase(t)?;
+        }
+        Ok(())
+    }
+
+    /// Current global parameters of a path (post outer updates).
+    pub fn path_theta(&self, path: usize) -> Vec<f32> {
+        self.store.lock().unwrap().assemble(&self.topo, path)
+    }
+
+    /// All path parameter vectors (for evaluation).
+    pub fn all_path_thetas(&self) -> HashMap<usize, Vec<f32>> {
+        (0..self.topo.paths).map(|p| (p, self.path_theta(p))).collect()
+    }
+
+    /// Early-stopped parameters per path (best holdout checkpoint if
+    /// early stopping was enabled and beat the final params).
+    pub fn early_stopped_thetas(&self) -> Result<HashMap<usize, Vec<f32>>> {
+        let best = self.pool.ctx().best.lock().unwrap().clone();
+        let mut out = HashMap::new();
+        for p in 0..self.topo.paths {
+            if let Some((_, ckpt)) = best.get(&p) {
+                let ck = Checkpoint::load(ckpt)?;
+                out.insert(p, ck.get("theta").context("theta")?.to_vec());
+            } else {
+                out.insert(p, self.path_theta(p));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Shut down workers and the queue.
+    pub fn shutdown(&self) {
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for DipacoRun {
+    fn drop(&mut self) {
+        self.pool.shutdown();
+    }
+}

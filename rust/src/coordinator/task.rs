@@ -1,0 +1,56 @@
+//! Task types flowing through the coordinator (paper §3, Figure 6).
+
+use std::path::PathBuf;
+
+/// One inner-optimization assignment: train `path` on its shard for
+/// `steps` inner steps starting from checkpoint `ckpt_in` (paper §3.1:
+/// "each of which involves training a path for a specific number of steps
+/// from a given checkpoint").
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainTask {
+    pub id: u64,
+    pub phase: usize,
+    pub path: usize,
+    /// Inner steps to run (tau).
+    pub steps: usize,
+    /// Global inner-step counter at task start (drives the LR schedule and
+    /// AdamW bias correction).
+    pub start_step: usize,
+    /// Input checkpoint (assembled path parameters + optimizer state).
+    pub ckpt_in: PathBuf,
+    /// Where to write the result checkpoint.
+    pub ckpt_out: PathBuf,
+}
+
+/// Evaluation assignment: score a saved path checkpoint on its shard
+/// holdout (early stopping, paper §2.7) — enqueued when the train
+/// checkpoint lands (Figure 6, teal arrow).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalTask {
+    pub id: u64,
+    pub phase: usize,
+    pub path: usize,
+    pub ckpt: PathBuf,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Task {
+    Train(TrainTask),
+    Eval(EvalTask),
+}
+
+impl Task {
+    pub fn id(&self) -> u64 {
+        match self {
+            Task::Train(t) => t.id,
+            Task::Eval(t) => t.id,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Task::Train(t) => format!("train[phase={} path={} steps={}]", t.phase, t.path, t.steps),
+            Task::Eval(t) => format!("eval[phase={} path={}]", t.phase, t.path),
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Worker pool (paper §3.1, §3.4).
+//!
+//! Each worker is an OS thread standing in for an "island of compute": it
+//! leases tasks from the queue, runs the inner optimization on the PJRT
+//! engine, saves the result checkpoint, records it in the DB, and loops.
+//! Tasks are completely independent — no worker-to-worker communication.
+//!
+//! Fault injection: with `preemption_prob`, a worker abandons its task
+//! mid-flight (half gracefully — the task requeues immediately — and half
+//! as a hard crash where only lease expiry recovers it); backup-pool
+//! workers (paper §3.4, "low-tier priority") use a higher preemption
+//! probability. With `crash_prob` a worker thread exits entirely, to be
+//! resurrected by the [`crate::coordinator::monitor`].
+//!
+//! Determinism despite retries: a task's batch stream is seeded by
+//! (phase, path), so a re-execution replays the identical inner steps and
+//! the checkpoint write is an atomic rename — retried tasks are idempotent.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{DilocoConfig, RunConfig};
+use crate::coordinator::db::{CheckpointDb, CkptRow};
+use crate::coordinator::queue::TaskQueue;
+use crate::coordinator::task::{EvalTask, Task, TrainTask};
+use crate::data::corpus::Corpus;
+use crate::data::dataset::{BatchSampler, Sharding};
+use crate::info;
+use crate::params::checkpoint::Checkpoint;
+use crate::runtime::engine::Engine;
+use crate::util::rng::Rng;
+
+/// Shared context every worker thread gets.
+pub struct WorkerCtx {
+    pub engine: Arc<Engine>,
+    pub queue: Arc<TaskQueue>,
+    pub db: Arc<CheckpointDb>,
+    pub corpus: Arc<Corpus>,
+    pub sharding: Arc<Sharding>,
+    pub diloco: DilocoConfig,
+    pub run: RunConfig,
+    /// Early-stopping ledger: path -> (best holdout nll/token, ckpt).
+    pub best: Mutex<HashMap<usize, (f64, PathBuf)>>,
+    /// Push an eval task after each train checkpoint (early stopping on).
+    pub eval_after_train: bool,
+    /// Worker heartbeats (name -> unix-ish millis from a monotonic base).
+    pub heartbeats: Mutex<HashMap<String, Instant>>,
+    /// Probability a worker thread exits entirely per task (monitor test).
+    pub crash_prob: f64,
+    pub shutting_down: AtomicBool,
+    next_eval_id: AtomicU64,
+}
+
+impl WorkerCtx {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        engine: Arc<Engine>,
+        queue: Arc<TaskQueue>,
+        db: Arc<CheckpointDb>,
+        corpus: Arc<Corpus>,
+        sharding: Arc<Sharding>,
+        diloco: DilocoConfig,
+        run: RunConfig,
+        eval_after_train: bool,
+    ) -> Arc<WorkerCtx> {
+        Arc::new(WorkerCtx {
+            engine,
+            queue,
+            db,
+            corpus,
+            sharding,
+            diloco,
+            run,
+            best: Mutex::new(HashMap::new()),
+            eval_after_train,
+            heartbeats: Mutex::new(HashMap::new()),
+            crash_prob: 0.0,
+            shutting_down: AtomicBool::new(false),
+            next_eval_id: AtomicU64::new(1 << 32),
+        })
+    }
+
+    fn heartbeat(&self, name: &str) {
+        self.heartbeats
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Instant::now());
+    }
+
+    fn remove_heartbeat(&self, name: &str) {
+        self.heartbeats.lock().unwrap().remove(name);
+    }
+
+    pub fn live_workers(&self) -> usize {
+        self.heartbeats.lock().unwrap().len()
+    }
+}
+
+/// Deterministic batch-stream seed for a task (idempotent retries).
+fn task_seed(run_seed: u64, phase: usize, path: usize) -> u64 {
+    run_seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add((phase as u64) << 20)
+        .wrapping_add(path as u64)
+}
+
+/// The worker main loop; returns when the queue closes or on injected crash.
+pub fn worker_loop(ctx: Arc<WorkerCtx>, name: String, backup: bool) {
+    let mut rng = Rng::new(
+        ctx.run.seed ^ name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64)),
+    );
+    // Backup-pool devices are preempted "frequently" (paper §3.4).
+    let preempt_p = if backup {
+        (ctx.run.preemption_prob * 4.0).min(0.9)
+    } else {
+        ctx.run.preemption_prob
+    };
+    ctx.heartbeat(&name);
+    loop {
+        if ctx.shutting_down.load(Ordering::Relaxed) {
+            break;
+        }
+        ctx.heartbeat(&name);
+        let Some((lease, task)) = ctx.queue.lease(&name, Duration::from_millis(300)) else {
+            let stats = ctx.queue.stats();
+            if stats.pending == 0 && stats.in_flight == 0 && ctx.shutting_down.load(Ordering::Relaxed)
+            {
+                break;
+            }
+            // lease() returns None when closed+drained too
+            if ctx.queue.is_idle() && ctx.shutting_down.load(Ordering::Relaxed) {
+                break;
+            }
+            continue;
+        };
+        // ---- fault injection ----
+        if preempt_p > 0.0 && rng.f64() < preempt_p {
+            if rng.f64() < 0.5 {
+                ctx.queue.fail(lease); // graceful preemption
+            } // else: hard crash of the task — lease expiry requeues it
+            crate::debug!("worker", "{name} preempted on {}", task.describe());
+            continue;
+        }
+        let res = match &task {
+            Task::Train(t) => run_train(&ctx, t),
+            Task::Eval(t) => run_eval(&ctx, t),
+        };
+        match res {
+            Ok(()) => {
+                ctx.queue.complete(lease);
+            }
+            Err(e) => {
+                crate::warn_!("worker", "{name} failed {}: {e:#}", task.describe());
+                ctx.queue.fail(lease);
+            }
+        }
+        if ctx.crash_prob > 0.0 && rng.f64() < ctx.crash_prob {
+            crate::debug!("worker", "{name} crashing (injected)");
+            ctx.remove_heartbeat(&name);
+            return;
+        }
+    }
+    ctx.remove_heartbeat(&name);
+}
+
+fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
+    let mut ck = Checkpoint::load(&t.ckpt_in)
+        .with_context(|| format!("loading input ckpt for path {}", t.path))?;
+    let n = ctx.engine.manifest.total_params;
+    let mut theta = ck.take("theta").context("ckpt missing theta")?;
+    let mut m = ck.take("m").unwrap_or_else(|| vec![0.0; n]);
+    let mut v = ck.take("v").unwrap_or_else(|| vec![0.0; n]);
+    let mc = ctx.engine.model();
+    let shard = &ctx.sharding.shards[t.path];
+    let mut sampler = BatchSampler::new(
+        &shard.docs,
+        mc.batch,
+        mc.seq_train,
+        task_seed(ctx.run.seed, t.phase, t.path),
+    );
+    let mut loss_sum = 0.0f64;
+    let tau = mc.tau;
+    // §Perf A/B (EXPERIMENTS.md): the fused lax.scan path wins when steps
+    // are dispatch-bound (tiny models: +8%) but LOSES ~11% at path scale,
+    // where the scan's carried-buffer copies outweigh the saved dispatches.
+    // Per the measure->keep-or-revert protocol the per-step loop stays the
+    // default; DIPACO_FUSED_STEPS=1 opts in.
+    let fused = tau > 0
+        && t.steps % tau == 0
+        && ctx.engine.has("train_steps")
+        && std::env::var("DIPACO_FUSED_STEPS").as_deref() == Ok("1");
+    if fused {
+        // §Perf fast path: tau steps per PJRT dispatch (lax.scan in HLO).
+        for chunk in 0..t.steps / tau {
+            let start = t.start_step + chunk * tau;
+            let lrs: Vec<f32> = (1..=tau).map(|i| ctx.diloco.lr_at(start + i)).collect();
+            let mut tokens = Vec::with_capacity(tau * mc.batch * mc.seq_train);
+            for _ in 0..tau {
+                let (b, _) = sampler.next_batch(&ctx.corpus);
+                tokens.extend_from_slice(&b);
+            }
+            let (th2, m2, v2, losses) =
+                ctx.engine
+                    .train_steps(&theta, &m, &v, start as f32, &lrs, &tokens)?;
+            theta = th2;
+            m = m2;
+            v = v2;
+            loss_sum += losses.iter().map(|&l| l as f64).sum::<f64>();
+        }
+    } else {
+        for i in 0..t.steps {
+            let step = t.start_step + i + 1;
+            let lr = ctx.diloco.lr_at(step);
+            let (tokens, _) = sampler.next_batch(&ctx.corpus);
+            let out = ctx
+                .engine
+                .train_step(&theta, &m, &v, step as f32, lr, &tokens)?;
+            theta = out.theta;
+            m = out.m;
+            v = out.v;
+            loss_sum += out.loss as f64;
+        }
+    }
+    let mean_loss = (loss_sum / t.steps.max(1) as f64) as f32;
+    // Simulated cross-DC checkpoint transfer (Effingo, paper §3.3).
+    if ctx.run.transfer_delay_ms > 0 {
+        std::thread::sleep(Duration::from_millis(ctx.run.transfer_delay_ms));
+    }
+    Checkpoint::new()
+        .with("theta", theta)
+        .with("m", m)
+        .with("v", v)
+        .with("loss", vec![mean_loss])
+        .save(&t.ckpt_out)?;
+    ctx.db.insert(CkptRow {
+        rowid: 0,
+        phase: t.phase,
+        path_id: t.path,
+        kind: "path".into(),
+        file: t.ckpt_out.clone(),
+        step: t.start_step + t.steps,
+        loss: mean_loss,
+    });
+    if ctx.eval_after_train {
+        let id = ctx.next_eval_id.fetch_add(1, Ordering::Relaxed);
+        ctx.queue.push(Task::Eval(EvalTask {
+            id,
+            phase: t.phase,
+            path: t.path,
+            ckpt: t.ckpt_out.clone(),
+        }));
+    }
+    Ok(())
+}
+
+fn run_eval(ctx: &WorkerCtx, t: &EvalTask) -> Result<()> {
+    let ck = Checkpoint::load(&t.ckpt)?;
+    let theta = ck.get("theta").context("ckpt missing theta")?;
+    let shard = &ctx.sharding.shards[t.path];
+    if shard.holdout.is_empty() {
+        return Ok(());
+    }
+    let mc = ctx.engine.model();
+    let (nll, count) = crate::eval::eval_docs(
+        &ctx.engine,
+        theta,
+        &shard.holdout,
+        &ctx.corpus,
+        mc.seq_train,
+    )?;
+    let per_tok = nll / count.max(1) as f64;
+    let mut best = ctx.best.lock().unwrap();
+    let entry = best.entry(t.path).or_insert((f64::INFINITY, t.ckpt.clone()));
+    if per_tok < entry.0 {
+        *entry = (per_tok, t.ckpt.clone());
+    }
+    ctx.db.insert(CkptRow {
+        rowid: 0,
+        phase: t.phase,
+        path_id: t.path,
+        kind: "eval".into(),
+        file: t.ckpt.clone(),
+        step: 0,
+        loss: per_tok as f32,
+    });
+    Ok(())
+}
+
+/// Handle to the pool for spawning/joining and monitor-driven respawns.
+pub struct WorkerPool {
+    ctx: Arc<WorkerCtx>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    next_id: AtomicU64,
+    pub target_workers: usize,
+}
+
+impl WorkerPool {
+    pub fn spawn(ctx: Arc<WorkerCtx>, primary: usize, backup: usize) -> Arc<WorkerPool> {
+        let pool = Arc::new(WorkerPool {
+            ctx,
+            handles: Mutex::new(Vec::new()),
+            next_id: AtomicU64::new(0),
+            target_workers: primary,
+        });
+        for _ in 0..primary {
+            pool.spawn_worker(false);
+        }
+        for _ in 0..backup {
+            pool.spawn_worker(true);
+        }
+        pool
+    }
+
+    pub fn spawn_worker(&self, backup: bool) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let name = if backup {
+            format!("backup-{id}")
+        } else {
+            format!("worker-{id}")
+        };
+        let ctx = Arc::clone(&self.ctx);
+        let h = std::thread::Builder::new()
+            .name(name.clone())
+            .spawn(move || worker_loop(ctx, name, backup))
+            .expect("spawn worker");
+        self.handles.lock().unwrap().push(h);
+    }
+
+    pub fn ctx(&self) -> &Arc<WorkerCtx> {
+        &self.ctx
+    }
+
+    /// Signal shutdown and join all workers (queue must be closed too).
+    pub fn shutdown(&self) {
+        self.ctx.shutting_down.store(true, Ordering::Relaxed);
+        self.ctx.queue.close();
+        let mut handles = self.handles.lock().unwrap();
+        for h in handles.drain(..) {
+            let _ = h.join();
+        }
+        info!("pool", "worker pool shut down");
+    }
+}

@@ -1,0 +1,155 @@
+//! Corpus container: documents tokenized once, split into train /
+//! validation / router-data subsets (paper §7.2.1 reserves a router split),
+//! exposed as token slices for sequence packing.
+
+use crate::config::CorpusConfig;
+use crate::data::synth::{self, Document};
+use crate::data::tokenizer::{ByteTokenizer, Tokenizer};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Split {
+    Train,
+    Valid,
+    Router,
+}
+
+#[derive(Debug)]
+pub struct Corpus {
+    pub docs: Vec<TokenizedDoc>,
+    pub train: Vec<usize>,
+    pub valid: Vec<usize>,
+    pub router: Vec<usize>,
+    pub n_domains: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenizedDoc {
+    pub tokens: Vec<i32>,
+    pub domain: usize,
+}
+
+impl Corpus {
+    /// Generate, tokenize and split the synthetic corpus.
+    /// Fractions: 80% train, 10% valid, 10% router data.
+    pub fn synthetic(cfg: &CorpusConfig) -> Corpus {
+        let docs = synth::generate_corpus(
+            cfg.n_domains,
+            cfg.n_docs,
+            cfg.doc_len,
+            cfg.skew,
+            cfg.seed,
+        );
+        Self::from_documents(docs, cfg.n_domains, cfg.seed)
+    }
+
+    pub fn from_documents(docs: Vec<Document>, n_domains: usize, seed: u64) -> Corpus {
+        let tok = ByteTokenizer;
+        let docs: Vec<TokenizedDoc> = docs
+            .into_iter()
+            .map(|d| TokenizedDoc {
+                tokens: tok.encode(&d.text),
+                domain: d.domain,
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..docs.len()).collect();
+        Rng::new(seed ^ 0x5115).shuffle(&mut order);
+        let n = docs.len();
+        let n_valid = n / 10;
+        let n_router = n / 10;
+        let n_train = n - n_valid - n_router;
+        let train = order[..n_train].to_vec();
+        let valid = order[n_train..n_train + n_valid].to_vec();
+        let router = order[n_train + n_valid..].to_vec();
+        Corpus {
+            docs,
+            train,
+            valid,
+            router,
+            n_domains,
+        }
+    }
+
+    pub fn split(&self, s: Split) -> &[usize] {
+        match s {
+            Split::Train => &self.train,
+            Split::Valid => &self.valid,
+            Split::Router => &self.router,
+        }
+    }
+
+    /// First `prefix` tokens of a document (router context, paper §2.4).
+    pub fn prefix(&self, doc: usize, prefix: usize) -> &[i32] {
+        let t = &self.docs[doc].tokens;
+        &t[..prefix.min(t.len())]
+    }
+
+    /// First `seq` tokens (training/eval window). Documents are generated
+    /// longer than `seq_eval`, so this never pads in practice; short docs
+    /// are right-padded with byte 0.
+    pub fn sequence(&self, doc: usize, seq: usize) -> Vec<i32> {
+        let t = &self.docs[doc].tokens;
+        let mut out = Vec::with_capacity(seq);
+        out.extend_from_slice(&t[..seq.min(t.len())]);
+        out.resize(seq, 0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Corpus {
+        Corpus::synthetic(&CorpusConfig {
+            n_domains: 4,
+            n_docs: 100,
+            doc_len: (60, 90),
+            skew: 0.0,
+            seed: 11,
+        })
+    }
+
+    #[test]
+    fn splits_partition_docs() {
+        let c = tiny();
+        let mut all: Vec<usize> = c
+            .train
+            .iter()
+            .chain(c.valid.iter())
+            .chain(c.router.iter())
+            .copied()
+            .collect();
+        all.sort();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        assert_eq!(c.valid.len(), 10);
+        assert_eq!(c.router.len(), 10);
+    }
+
+    #[test]
+    fn sequences_padded_and_truncated() {
+        let c = tiny();
+        let s = c.sequence(c.train[0], 64);
+        assert_eq!(s.len(), 64);
+        let long = c.sequence(c.train[0], 2000);
+        assert_eq!(long.len(), 2000);
+        assert_eq!(*long.last().unwrap(), 0); // padded tail
+    }
+
+    #[test]
+    fn deterministic_splits() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.router, b.router);
+    }
+
+    #[test]
+    fn prefix_is_prefix_of_sequence() {
+        let c = tiny();
+        let d = c.train[3];
+        let p = c.prefix(d, 16).to_vec();
+        let s = c.sequence(d, 32);
+        assert_eq!(&s[..16], &p[..]);
+    }
+}

@@ -1,0 +1,207 @@
+//! Shards and batch iterators.
+//!
+//! A [`Shard`] is the set of document ids routed to one path (paper §2.3:
+//! "the subset of data that is routed to path j will be called the j-th
+//! shard D_j"). [`Sharding`] holds all shards for a run plus the per-shard
+//! holdout used by early stopping (paper §2.7). [`BatchSampler`] draws
+//! fixed-shape `i32` token batches for the PJRT train-step executable.
+
+use crate::data::corpus::Corpus;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Default)]
+pub struct Shard {
+    /// Document ids (into `Corpus::docs`).
+    pub docs: Vec<usize>,
+    /// Held-out docs for early stopping (disjoint from `docs`).
+    pub holdout: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.docs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.docs.is_empty()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Sharding {
+    pub shards: Vec<Shard>,
+}
+
+impl Sharding {
+    /// Build shards from an assignment `doc -> one-or-more shard ids`
+    /// (top-n overlap, paper §2.4.4), carving `holdout_frac` of each shard
+    /// into its early-stopping holdout.
+    pub fn from_assignments(
+        n_shards: usize,
+        assignments: &[(usize, Vec<usize>)],
+        holdout_frac: f64,
+        seed: u64,
+    ) -> Sharding {
+        let mut shards = vec![Shard::default(); n_shards];
+        for (doc, sids) in assignments {
+            for &s in sids {
+                shards[s].docs.push(*doc);
+            }
+        }
+        let root = Rng::new(seed ^ 0x54a6d);
+        for (i, sh) in shards.iter_mut().enumerate() {
+            let mut rng = root.fork(i as u64);
+            rng.shuffle(&mut sh.docs);
+            let n_hold = ((sh.docs.len() as f64) * holdout_frac).floor() as usize;
+            sh.holdout = sh.docs.split_off(sh.docs.len() - n_hold);
+        }
+        shards
+            .iter_mut()
+            .for_each(|s| s.docs.sort_unstable());
+        Sharding { shards }
+    }
+
+    /// Single shard holding every train document (dense/DiLoCo baselines).
+    pub fn single(corpus: &Corpus, holdout_frac: f64, seed: u64) -> Sharding {
+        let assignments: Vec<(usize, Vec<usize>)> =
+            corpus.train.iter().map(|&d| (d, vec![0])).collect();
+        Self::from_assignments(1, &assignments, holdout_frac, seed)
+    }
+
+    /// `k` random shards of roughly equal size (uninformed baseline /
+    /// DiLoCo data parallelism).
+    pub fn random(corpus: &Corpus, k: usize, holdout_frac: f64, seed: u64) -> Sharding {
+        let mut rng = Rng::new(seed ^ 0xda7a);
+        let assignments: Vec<(usize, Vec<usize>)> = corpus
+            .train
+            .iter()
+            .map(|&d| (d, vec![rng.gen_range(k)]))
+            .collect();
+        Self::from_assignments(k, &assignments, holdout_frac, seed)
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+
+    pub fn total_docs(&self) -> usize {
+        self.sizes().iter().sum()
+    }
+}
+
+/// Samples fixed-shape batches `[batch, seq]` (flattened row-major) from a
+/// shard, reshuffling each epoch. Deterministic given the seed.
+#[derive(Debug)]
+pub struct BatchSampler {
+    docs: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl BatchSampler {
+    pub fn new(docs: &[usize], batch: usize, seq: usize, seed: u64) -> BatchSampler {
+        assert!(!docs.is_empty(), "empty shard");
+        let mut rng = Rng::new(seed ^ 0xba7c4);
+        let mut docs = docs.to_vec();
+        rng.shuffle(&mut docs);
+        BatchSampler {
+            docs,
+            cursor: 0,
+            rng,
+            batch,
+            seq,
+        }
+    }
+
+    /// Next flattened `[batch * seq]` token buffer (+ the doc ids used).
+    pub fn next_batch(&mut self, corpus: &Corpus) -> (Vec<i32>, Vec<usize>) {
+        let mut out = Vec::with_capacity(self.batch * self.seq);
+        let mut ids = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.docs.len() {
+                self.rng.shuffle(&mut self.docs);
+                self.cursor = 0;
+            }
+            let d = self.docs[self.cursor];
+            self.cursor += 1;
+            ids.push(d);
+            out.extend_from_slice(&corpus.sequence(d, self.seq));
+        }
+        (out, ids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::synthetic(&CorpusConfig {
+            n_domains: 4,
+            n_docs: 200,
+            doc_len: (80, 120),
+            skew: 0.0,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn random_sharding_partitions_train() {
+        let c = corpus();
+        let s = Sharding::random(&c, 4, 0.0, 1);
+        assert_eq!(s.total_docs(), c.train.len());
+        assert!(s.sizes().iter().all(|&n| n > 20));
+    }
+
+    #[test]
+    fn holdout_disjoint() {
+        let c = corpus();
+        let s = Sharding::random(&c, 2, 0.2, 1);
+        for sh in &s.shards {
+            for h in &sh.holdout {
+                assert!(!sh.docs.contains(h));
+            }
+            assert!(!sh.holdout.is_empty());
+        }
+    }
+
+    #[test]
+    fn overlap_duplicates_docs() {
+        let c = corpus();
+        let assignments: Vec<(usize, Vec<usize>)> =
+            c.train.iter().map(|&d| (d, vec![0, 1])).collect();
+        let s = Sharding::from_assignments(2, &assignments, 0.0, 1);
+        assert_eq!(s.shards[0].len(), c.train.len());
+        assert_eq!(s.shards[1].len(), c.train.len());
+    }
+
+    #[test]
+    fn sampler_shapes_and_coverage() {
+        let c = corpus();
+        let s = Sharding::single(&c, 0.0, 1);
+        let mut bs = BatchSampler::new(&s.shards[0].docs, 4, 32, 5);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let (buf, ids) = bs.next_batch(&c);
+            assert_eq!(buf.len(), 4 * 32);
+            assert_eq!(ids.len(), 4);
+            seen.extend(ids);
+        }
+        // with 200 batches of 4 over ~160 train docs, all get sampled
+        assert_eq!(seen.len(), c.train.len());
+    }
+
+    #[test]
+    fn sampler_deterministic() {
+        let c = corpus();
+        let docs = c.train.clone();
+        let mut a = BatchSampler::new(&docs, 2, 16, 9);
+        let mut b = BatchSampler::new(&docs, 2, 16, 9);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch(&c).0, b.next_batch(&c).0);
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Synthetic multi-domain corpus generator — the C4 substitution.
+//!
+//! Each domain is a distinct order-2 Markov source over a shared 28-char
+//! alphabet (a-z, space, period). Transition tables are sparse (few likely
+//! successors per bigram context) and seeded per domain, so:
+//!
+//! * documents are low-entropy and learnable by the small LM in hundreds
+//!   of steps;
+//! * the domain of a document is identifiable from a short prefix (the
+//!   premise behind DiPaCo's 32-token coarse routing);
+//! * specialists (paths) genuinely beat a generalist of the same size,
+//!   and flat MoE overfits when shards get small — the behaviours the
+//!   paper's tables measure.
+//!
+//! Domain weights follow a Zipf-like skew so shards have unequal sizes,
+//! exercising the loss-reweighing correction (paper §2.7 Eq. 2-3).
+
+use crate::util::rng::Rng;
+
+pub const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz .";
+
+/// Number of successor candidates per bigram context. Smaller = lower
+/// entropy = more domain-separable text.
+const SUCCESSORS: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct Domain {
+    pub id: usize,
+    /// For each bigram context (a*28+b): candidate successors and weights.
+    table: Vec<[(u8, f32); SUCCESSORS]>,
+}
+
+impl Domain {
+    pub fn generate(id: usize, rng: &mut Rng) -> Domain {
+        let a = ALPHABET.len();
+        // Each domain prefers a (seeded) subset of the alphabet: successor
+        // candidates are drawn from the preferred set with high probability.
+        // This gives domains strong character-level signatures (like real
+        // topical domains' vocabularies), which is what makes prefix-based
+        // coarse routing viable (paper §2.4).
+        let preferred = rng.sample_indices(a, a / 2);
+        let mut table = Vec::with_capacity(a * a);
+        for _ctx in 0..a * a {
+            let mut entry = [(0u8, 0.0f32); SUCCESSORS];
+            let mut total = 0.0;
+            let mut used = [usize::MAX; SUCCESSORS];
+            for (si, slot) in entry.iter_mut().enumerate() {
+                let cand = loop {
+                    let c = if rng.f64() < 0.85 {
+                        preferred[rng.gen_range(preferred.len())]
+                    } else {
+                        rng.gen_range(a)
+                    };
+                    if !used[..si].contains(&c) {
+                        break c;
+                    }
+                };
+                used[si] = cand;
+                let w = 0.2 + rng.f32();
+                *slot = (ALPHABET[cand], w);
+                total += w;
+            }
+            for slot in entry.iter_mut() {
+                slot.1 /= total;
+            }
+            table.push(entry);
+        }
+        Domain { id, table }
+    }
+
+    fn ctx_index(&self, prev2: u8, prev1: u8) -> usize {
+        let pos = |c: u8| ALPHABET.iter().position(|&x| x == c).unwrap_or(0);
+        pos(prev2) * ALPHABET.len() + pos(prev1)
+    }
+
+    pub fn sample_text(&self, len: usize, rng: &mut Rng) -> String {
+        let mut out = Vec::with_capacity(len);
+        let mut p2 = ALPHABET[rng.gen_range(ALPHABET.len())];
+        let mut p1 = ALPHABET[rng.gen_range(ALPHABET.len())];
+        out.push(p2);
+        out.push(p1);
+        while out.len() < len {
+            let entry = &self.table[self.ctx_index(p2, p1)];
+            let weights: Vec<f64> = entry.iter().map(|&(_, w)| w as f64).collect();
+            let next = entry[rng.categorical(&weights)].0;
+            out.push(next);
+            p2 = p1;
+            p1 = next;
+        }
+        String::from_utf8(out).unwrap()
+    }
+
+    /// Per-character entropy of the source in nats (average over contexts,
+    /// unweighted). Lower bound on achievable LM loss on this domain.
+    pub fn entropy_nats(&self) -> f64 {
+        let mut total = 0.0;
+        for entry in &self.table {
+            let mut h = 0.0;
+            for &(_, w) in entry {
+                if w > 0.0 {
+                    h -= (w as f64) * (w as f64).ln();
+                }
+            }
+            total += h;
+        }
+        total / self.table.len() as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Document {
+    pub text: String,
+    /// Ground-truth domain id — used only for diagnostics (routing
+    /// accuracy), never by the model or router.
+    pub domain: usize,
+}
+
+/// Generate `n_docs` documents across `n_domains` Zipf(skew)-weighted
+/// domains. Document lengths are uniform in `doc_len`.
+pub fn generate_corpus(
+    n_domains: usize,
+    n_docs: usize,
+    doc_len: (usize, usize),
+    skew: f64,
+    seed: u64,
+) -> Vec<Document> {
+    let root = Rng::new(seed);
+    let drng = root.fork(0xD0);
+    let domains: Vec<Domain> = (0..n_domains)
+        .map(|i| Domain::generate(i, &mut drng.fork(i as u64)))
+        .collect();
+    let weights: Vec<f64> = (1..=n_domains)
+        .map(|r| 1.0 / (r as f64).powf(skew))
+        .collect();
+    let mut rng = root.fork(0xD1);
+    (0..n_docs)
+        .map(|_| {
+            let d = rng.categorical(&weights);
+            let len = doc_len.0 + rng.gen_range(doc_len.1 - doc_len.0 + 1);
+            Document {
+                text: domains[d].sample_text(len, &mut rng),
+                domain: d,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = generate_corpus(4, 20, (100, 200), 0.5, 9);
+        let b = generate_corpus(4, 20, (100, 200), 0.5, 9);
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.domain, y.domain);
+        }
+    }
+
+    #[test]
+    fn lengths_in_range() {
+        for d in generate_corpus(2, 50, (300, 700), 0.0, 1) {
+            assert!((300..=700).contains(&d.text.len()));
+            assert!(d.text.bytes().all(|b| ALPHABET.contains(&b)));
+        }
+    }
+
+    #[test]
+    fn domains_are_distinguishable() {
+        // Character-bigram distributions of two domains must differ far
+        // more across domains than within a domain.
+        let rng = Rng::new(3);
+        let d0 = Domain::generate(0, &mut rng.fork(0));
+        let d1 = Domain::generate(1, &mut rng.fork(1));
+        let hist = |s: &str| {
+            let mut h = vec![0.0f64; 28 * 28];
+            let b = s.as_bytes();
+            let pos = |c: u8| ALPHABET.iter().position(|&x| x == c).unwrap();
+            for w in b.windows(2) {
+                h[pos(w[0]) * 28 + pos(w[1])] += 1.0;
+            }
+            let t: f64 = h.iter().sum();
+            h.iter_mut().for_each(|x| *x /= t);
+            h
+        };
+        let l2 = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let a1 = hist(&d0.sample_text(4000, &mut rng.fork(10)));
+        let a2 = hist(&d0.sample_text(4000, &mut rng.fork(11)));
+        let b1 = hist(&d1.sample_text(4000, &mut rng.fork(12)));
+        let within = l2(&a1, &a2);
+        let across = l2(&a1, &b1);
+        assert!(
+            across > 5.0 * within,
+            "across {across} should dwarf within {within}"
+        );
+    }
+
+    #[test]
+    fn entropy_is_low_but_positive() {
+        let mut rng = Rng::new(4);
+        let d = Domain::generate(0, &mut rng);
+        let h = d.entropy_nats();
+        // 3 successors max -> at most ln(3) nats
+        assert!(h > 0.1 && h <= 3f64.ln() + 1e-9, "h = {h}");
+    }
+
+    #[test]
+    fn skew_produces_imbalance() {
+        let docs = generate_corpus(8, 4000, (100, 101), 1.0, 5);
+        let mut counts = vec![0usize; 8];
+        for d in &docs {
+            counts[d.domain] += 1;
+        }
+        assert!(counts[0] > counts[7] * 2, "{counts:?}");
+    }
+}

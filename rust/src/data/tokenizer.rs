@@ -1,0 +1,59 @@
+//! Byte-level tokenizer (vocab = 256).
+//!
+//! Stands in for the paper's 32k SentencePiece vocabulary: at this model
+//! scale a subword vocabulary would dominate the parameter budget, and the
+//! routing/optimization claims under test are tokenizer-agnostic. The
+//! trait keeps the door open for richer tokenizers.
+
+pub trait Tokenizer: Send + Sync {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+    fn decode(&self, tokens: &[i32]) -> String;
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens
+            .iter()
+            .map(|&t| u8::try_from(t).unwrap_or(b'?'))
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the quick brown fox. 0123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let t = ByteTokenizer;
+        for tok in t.encode("héllo") {
+            assert!((0..256).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn out_of_range_decodes_lossy() {
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&[104, 105, 300]), "hi?");
+    }
+}

@@ -1,0 +1,276 @@
+//! Evaluation: validation perplexity with the paper's masking convention
+//! (§2.4: "calculating perplexity using all but the first 32 tokens of
+//! each sequence, which was used to determine the routing decision"),
+//! per-path routed evaluation, and chunked frequent re-routing (§2.4.3).
+//!
+//! Everything is built on the `token_logprobs` entrypoint: `lp[b, j]` is
+//! the logprob of token j+1 given tokens <= j, so a target index `t`
+//! (token position) maps to lp column `t - 1`.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::data::corpus::Corpus;
+use crate::runtime::engine::Engine;
+
+/// Sum of negative logprobs + token count over targets with index >=
+/// `prefix`, for the first `rows` rows of a `[batch, seq-1]` lp buffer.
+pub fn nll_masked(
+    lp: &[f32],
+    batch: usize,
+    seq: usize,
+    prefix: usize,
+    rows: usize,
+) -> (f64, usize) {
+    assert_eq!(lp.len(), batch * (seq - 1));
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for b in 0..rows.min(batch) {
+        for t in prefix..seq {
+            nll -= lp[b * (seq - 1) + (t - 1)] as f64;
+            count += 1;
+        }
+    }
+    (nll, count)
+}
+
+/// Evaluate `theta` on `docs` at sequence length `seq` (train or eval
+/// variant); returns (total nll, token count). The last partial batch is
+/// padded with doc 0 and its padding rows excluded.
+pub fn eval_docs(
+    engine: &Engine,
+    theta: &[f32],
+    docs: &[usize],
+    corpus: &Corpus,
+    seq: usize,
+) -> Result<(f64, usize)> {
+    let mc = engine.model();
+    let mut nll = 0.0;
+    let mut count = 0usize;
+    for chunk in docs.chunks(mc.batch) {
+        let mut toks = Vec::with_capacity(mc.batch * seq);
+        for &d in chunk {
+            toks.extend_from_slice(&corpus.sequence(d, seq));
+        }
+        for _ in chunk.len()..mc.batch {
+            toks.extend_from_slice(&corpus.sequence(docs[0], seq));
+        }
+        let lp = engine.token_logprobs(theta, &toks, seq)?;
+        let (n, c) = nll_masked(&lp, mc.batch, seq, mc.prefix, chunk.len());
+        nll += n;
+        count += c;
+    }
+    Ok((nll, count))
+}
+
+/// Validation perplexity of a single model over `docs`.
+pub fn ppl_docs(
+    engine: &Engine,
+    theta: &[f32],
+    docs: &[usize],
+    corpus: &Corpus,
+    seq: usize,
+) -> Result<f64> {
+    let (nll, count) = eval_docs(engine, theta, docs, corpus, seq)?;
+    Ok((nll / count.max(1) as f64).exp())
+}
+
+/// Routed evaluation (paper §2.6: "at test time, the paths are
+/// instantiated, and served independently, with text routed to each path
+/// via a router"): each doc is scored by exactly one path.
+pub fn eval_routed(
+    engine: &Engine,
+    thetas: &HashMap<usize, Vec<f32>>,
+    assign: impl Fn(usize) -> usize,
+    docs: &[usize],
+    corpus: &Corpus,
+    seq: usize,
+) -> Result<f64> {
+    let mut by_path: HashMap<usize, Vec<usize>> = HashMap::new();
+    for &d in docs {
+        by_path.entry(assign(d)).or_default().push(d);
+    }
+    let mut nll = 0.0;
+    let mut count = 0usize;
+    for (path, group) in by_path {
+        let theta = thetas
+            .get(&path)
+            .unwrap_or_else(|| panic!("no theta for path {path}"));
+        let (n, c) = eval_docs(engine, theta, &group, corpus, seq)?;
+        nll += n;
+        count += c;
+    }
+    Ok((nll / count.max(1) as f64).exp())
+}
+
+/// Per-path token logprobs for a set of docs at eval length. Returns
+/// `scores[path][doc_idx]` = full `[seq-1]` lp row per doc. Used by the
+/// chunked-routing evaluator and the discriminative-router label maker.
+pub fn all_path_logprobs(
+    engine: &Engine,
+    thetas: &HashMap<usize, Vec<f32>>,
+    docs: &[usize],
+    corpus: &Corpus,
+    seq: usize,
+) -> Result<HashMap<usize, Vec<Vec<f32>>>> {
+    let mc = engine.model();
+    let mut out: HashMap<usize, Vec<Vec<f32>>> = HashMap::new();
+    for (&path, theta) in thetas {
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(docs.len());
+        for chunk in docs.chunks(mc.batch) {
+            let mut toks = Vec::with_capacity(mc.batch * seq);
+            for &d in chunk {
+                toks.extend_from_slice(&corpus.sequence(d, seq));
+            }
+            for _ in chunk.len()..mc.batch {
+                toks.extend_from_slice(&corpus.sequence(docs[0], seq));
+            }
+            let lp = engine.token_logprobs(theta, &toks, seq)?;
+            for b in 0..chunk.len() {
+                rows.push(lp[b * (seq - 1)..(b + 1) * (seq - 1)].to_vec());
+            }
+        }
+        out.insert(path, rows);
+    }
+    Ok(out)
+}
+
+/// Chunked frequent re-routing (paper §2.4.3, Table 3): split positions
+/// `prefix..seq` into windows of `w` tokens; tokens in window i are scored
+/// by path `path_of(doc_idx, i)`. With `w >= seq - prefix` this reduces to
+/// routing once per sequence.
+///
+/// `scores` comes from [`all_path_logprobs`]; re-scoring every W from the
+/// same matrices is free, which is how Table 3's sweep is generated.
+pub fn ppl_chunked(
+    scores: &HashMap<usize, Vec<Vec<f32>>>,
+    n_docs: usize,
+    seq: usize,
+    prefix: usize,
+    w: usize,
+    path_of: impl Fn(usize, usize) -> usize,
+) -> f64 {
+    assert!(w >= 1);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for doc in 0..n_docs {
+        let mut chunk = 0usize;
+        let mut t = prefix;
+        while t < seq {
+            let path = path_of(doc, chunk);
+            let lp = &scores[&path][doc];
+            let end = (t + w).min(seq);
+            for ti in t..end {
+                nll -= lp[ti - 1] as f64;
+                count += 1;
+            }
+            t = end;
+            chunk += 1;
+        }
+    }
+    (nll / count.max(1) as f64).exp()
+}
+
+/// Oracle chunked routing: pick, per chunk, the path with the best score
+/// on that chunk (upper bound for Table 3's learned router).
+pub fn ppl_chunked_oracle(
+    scores: &HashMap<usize, Vec<Vec<f32>>>,
+    n_docs: usize,
+    seq: usize,
+    prefix: usize,
+    w: usize,
+) -> f64 {
+    let paths: Vec<usize> = scores.keys().copied().collect();
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for doc in 0..n_docs {
+        let mut t = prefix;
+        while t < seq {
+            let end = (t + w).min(seq);
+            let best = paths
+                .iter()
+                .map(|&p| -> f64 {
+                    (t..end).map(|ti| scores[&p][doc][ti - 1] as f64).sum()
+                })
+                .fold(f64::NEG_INFINITY, f64::max);
+            nll -= best;
+            count += end - t;
+            t = end;
+        }
+    }
+    (nll / count.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nll_masking_counts_right_targets() {
+        // batch=2, seq=5, prefix=3 -> targets 3,4 per row -> lp cols 2,3
+        let lp = vec![
+            -1.0, -2.0, -3.0, -4.0, // row 0
+            -1.5, -2.5, -3.5, -4.5, // row 1
+        ];
+        let (nll, count) = nll_masked(&lp, 2, 5, 3, 2);
+        assert_eq!(count, 4);
+        assert!((nll - (3.0 + 4.0 + 3.5 + 4.5)).abs() < 1e-9);
+        // only first row
+        let (nll1, c1) = nll_masked(&lp, 2, 5, 3, 1);
+        assert_eq!(c1, 2);
+        assert!((nll1 - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunked_reduces_to_single_route_for_large_w() {
+        let mut scores = HashMap::new();
+        // path 0 uniformly -1, path 1 uniformly -2 on a seq of 9
+        scores.insert(0, vec![vec![-1.0f32; 8]]);
+        scores.insert(1, vec![vec![-2.0f32; 8]]);
+        let once = ppl_chunked(&scores, 1, 9, 3, 100, |_, _| 0);
+        assert!((once - 1f64.exp()).abs() < 1e-9);
+        // chunked with alternating path selection
+        let alt = ppl_chunked(&scores, 1, 9, 3, 2, |_, c| c % 2);
+        // windows [3,4],[5,6],[7,8]: paths 0,1,0 -> mean = (2*1+2*2+2*1)/6
+        assert!((alt - (8.0f64 / 6.0).exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oracle_at_least_as_good_as_any_fixed_path() {
+        let mut scores = HashMap::new();
+        scores.insert(0, vec![vec![-1.0, -9.0, -1.0, -9.0, -1.0, -9.0]]);
+        scores.insert(1, vec![vec![-9.0, -1.0, -9.0, -1.0, -9.0, -1.0]]);
+        let seq = 7;
+        let oracle = ppl_chunked_oracle(&scores, 1, seq, 1, 1);
+        let fixed0 = ppl_chunked(&scores, 1, seq, 1, 100, |_, _| 0);
+        let fixed1 = ppl_chunked(&scores, 1, seq, 1, 100, |_, _| 1);
+        assert!(oracle <= fixed0 && oracle <= fixed1);
+        assert!((oracle - 1f64.exp()).abs() < 1e-9); // picks -1 every time
+    }
+
+    #[test]
+    fn smaller_w_never_hurts_oracle() {
+        // property: oracle PPL is monotone non-increasing as W shrinks
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut scores = HashMap::new();
+        for p in 0..3 {
+            scores.insert(
+                p,
+                vec![(0..31).map(|_| -(rng.f32() * 3.0)).collect::<Vec<f32>>(); 4]
+                    .into_iter()
+                    .map(|mut v| {
+                        v.iter_mut().for_each(|x| *x -= 0.01);
+                        v
+                    })
+                    .collect(),
+            );
+        }
+        let seq = 32;
+        let mut prev = f64::INFINITY;
+        for w in [24, 12, 6, 3, 1] {
+            let ppl = ppl_chunked_oracle(&scores, 4, seq, 8, w);
+            assert!(ppl <= prev + 1e-9, "w={w} ppl={ppl} prev={prev}");
+            prev = ppl;
+        }
+    }
+}

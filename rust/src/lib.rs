@@ -1,0 +1,97 @@
+//! # DiPaCo: Distributed Path Composition — reproduction library
+//!
+//! Rust L3 coordinator for the DiPaCo system (Douillard et al., 2024):
+//! modular sparsely-activated language models whose *paths* (compositions
+//! of per-level expert modules) are trained almost independently on
+//! pre-sharded data and kept in sync with per-module DiLoCo outer
+//! optimization.
+//!
+//! The compute (L2 transformer + L1 Pallas attention kernel) is AOT-lowered
+//! from JAX to HLO text at build time (`make artifacts`) and executed here
+//! via PJRT ([`runtime::engine::Engine`]); Python never runs after that.
+//!
+//! Layer map (see DESIGN.md for the full inventory):
+//! * [`util`] — substrates built in-repo because only the `xla` crate's
+//!   dependency closure is vendored: JSON, RNG, CLI, thread pool, stats,
+//!   logging, keyed barrier.
+//! * [`data`] — byte tokenizer, synthetic multi-domain corpus (the C4
+//!   substitution), sequence packing, shard storage.
+//! * [`routing`] — coarse offline routing: k-means / product k-means
+//!   (generative), multinomial logistic regression (discriminative),
+//!   EM alternation, overlapping shards, eval-time chunked re-routing.
+//! * [`params`] / [`topology`] — flat-parameter manifest, module/level/path
+//!   algebra, per-path parameter assembly and per-module delta splitting.
+//! * [`optim`] — per-module Nesterov outer optimizer with outer-gradient
+//!   norm rescaling and shard-size loss reweighing (paper §2.7).
+//! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — the paper's §3 infrastructure: fault-tolerant task
+//!   queue, worker pool (+ backup pool, preemption injection), checkpoint
+//!   DB, sharded outer-optimization executors with online averaging,
+//!   health monitor, phase orchestration of Algorithm 1.
+//! * [`train`] — end-to-end pipelines: dense baseline, DiLoCo, flat MoE,
+//!   DiPaCo, and the fully-synchronous ablation (§4.5).
+//! * [`eval`] — validation perplexity (prefix-masked), frequent re-routing,
+//!   early stopping.
+//! * [`benchkit`] / [`testkit`] — criterion/proptest stand-ins.
+
+pub mod util {
+    pub mod barrier;
+    pub mod cli;
+    pub mod json;
+    pub mod log;
+    pub mod rng;
+    pub mod stats;
+    pub mod threadpool;
+}
+
+pub mod config;
+
+pub mod data {
+    pub mod corpus;
+    pub mod dataset;
+    pub mod synth;
+    pub mod tokenizer;
+}
+
+pub mod routing {
+    pub mod features;
+    pub mod kmeans;
+    pub mod logistic;
+    pub mod router;
+}
+
+pub mod params {
+    pub mod checkpoint;
+    pub mod manifest;
+}
+
+pub mod topology;
+
+pub mod optim;
+
+pub mod runtime {
+    pub mod engine;
+}
+
+pub mod coordinator {
+    pub mod db;
+    pub mod monitor;
+    pub mod outer;
+    pub mod phases;
+    pub mod queue;
+    pub mod task;
+    pub mod worker;
+}
+
+pub mod train {
+    pub mod dense;
+    pub mod dipaco;
+    pub mod pipeline;
+    pub mod sync;
+}
+
+pub mod eval;
+pub mod metrics;
+
+pub mod benchkit;
+pub mod testkit;

@@ -1,0 +1,214 @@
+//! `dipaco` — CLI for the DiPaCo reproduction.
+//!
+//! Subcommands:
+//!   info                         inspect artifacts / manifest
+//!   corpus   [--docs N]          generate + describe the synthetic corpus
+//!   pretrain [--steps N]         pretrain the base dense model
+//!   train    [--grid 4x4 ...]    full DiPaCo pipeline (route + phases)
+//!   eval     [--ckpt FILE]       evaluate a checkpoint
+//!
+//! The paper's tables/figures regenerate via the dedicated drivers in
+//! `examples/` (see DESIGN.md's experiment index); this binary is the
+//! operational entrypoint a user would script against.
+
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use dipaco::config::{RunConfig, StemPlacement, TopologySpec};
+use dipaco::metrics;
+use dipaco::runtime::engine::{artifact_dir, Engine};
+use dipaco::train::dipaco::DipacoRecipe;
+use dipaco::train::pipeline::{default_corpus, default_schedule, Env};
+use dipaco::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_grid(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|p| p.parse::<usize>().context("bad grid"))
+        .collect()
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("info") => info_cmd(&args),
+        Some("corpus") => corpus_cmd(&args),
+        Some("pretrain") => pretrain_cmd(&args),
+        Some("train") => train_cmd(&args),
+        Some("eval") => eval_cmd(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            eprintln!(
+                "usage: dipaco <info|corpus|pretrain|train|eval> [options]\n\
+                 \n\
+                 common options:\n\
+                 --preset path|large      model artifacts (default path)\n\
+                 --docs N                 corpus size (default 3000)\n\
+                 \n\
+                 train options:\n\
+                 --grid KxK               DiPaCo grid (default 2x2)\n\
+                 --phases N               outer phases (default 8)\n\
+                 --inner N                inner steps per phase (default 50)\n\
+                 --workers N              worker pool size (default 4)\n\
+                 --backup N               backup pool size (default 0)\n\
+                 --preempt P              preemption probability (default 0)\n\
+                 --overlap N              top-n shard overlap (default 1)\n\
+                 --disc-phases N          discriminative phases (default 1)\n\
+                 --early-stop             enable per-shard early stopping\n\
+                 --path-specific          path-specific stem (flat-MoE style)"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info_cmd(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "path");
+    let dir = artifact_dir(preset);
+    let engine = Engine::load(&dir)?;
+    let man = &engine.manifest;
+    println!("preset            {}", man.preset);
+    println!("artifact dir      {}", dir.display());
+    println!("total params      {}", man.total_params);
+    println!("leaves            {}", man.leaves.len());
+    println!(
+        "model             d={} layers={} heads={} ff={}",
+        man.model.d_model, man.model.n_layers, man.model.n_heads, man.model.d_ff
+    );
+    println!(
+        "sequences         train={} eval={} prefix={} batch={}",
+        man.model.seq_train, man.model.seq_eval, man.model.prefix, man.model.batch
+    );
+    println!("entrypoints       {}", man.entrypoints.join(", "));
+    Ok(())
+}
+
+fn corpus_cmd(args: &Args) -> Result<()> {
+    let mut cfg = default_corpus(args.usize("docs", 3000));
+    cfg.n_domains = args.usize("domains", cfg.n_domains);
+    cfg.seed = args.u64("seed", cfg.seed);
+    let corpus = dipaco::data::corpus::Corpus::synthetic(&cfg);
+    println!(
+        "docs={} train={} valid={} router={}",
+        corpus.docs.len(),
+        corpus.train.len(),
+        corpus.valid.len(),
+        corpus.router.len()
+    );
+    let mut counts = vec![0usize; cfg.n_domains];
+    for d in &corpus.docs {
+        counts[d.domain] += 1;
+    }
+    println!("domain histogram: {counts:?}");
+    let sample = &corpus.docs[0];
+    let text = dipaco::data::tokenizer::Tokenizer::decode(
+        &dipaco::data::tokenizer::ByteTokenizer,
+        &sample.tokens[..80.min(sample.tokens.len())],
+    );
+    println!("sample (domain {}): {text}...", sample.domain);
+    Ok(())
+}
+
+fn pretrain_cmd(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "path");
+    let steps = args.usize("steps", 300);
+    let env = Env::new(
+        preset,
+        &default_corpus(args.usize("docs", 3000)),
+        metrics::results_dir().join("runs"),
+    )?;
+    let schedule = default_schedule(steps.max(1));
+    let theta = env.base_model(steps, &schedule, args.u64("seed", 7))?;
+    let ppl = env.valid_ppl(&theta)?;
+    println!("pretrained {steps} steps; validation ppl {ppl:.3}");
+    Ok(())
+}
+
+fn train_cmd(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "path");
+    let grid = parse_grid(args.get_or("grid", "2x2"))?;
+    let phases = args.usize("phases", 8);
+    let inner = args.usize("inner", 50);
+    let disc_phases = args.usize("disc-phases", 1);
+    let pre_steps = args.usize("pretrain", 200);
+    let env = Env::new(
+        preset,
+        &default_corpus(args.usize("docs", 3000)),
+        metrics::results_dir().join("runs"),
+    )?;
+    let total = pre_steps + (phases + disc_phases) * inner;
+    let schedule = {
+        let mut s = default_schedule(total);
+        s.inner_steps = inner;
+        s
+    };
+    let base = env.base_model(pre_steps, &schedule, 7)?;
+
+    let mut spec = TopologySpec::grid(grid.clone());
+    if args.flag("path-specific") {
+        spec.stem = StemPlacement::PathSpecific;
+    }
+    let routing = dipaco::config::RoutingConfig {
+        train_overlap: args.usize("overlap", 1),
+        ..Default::default()
+    };
+    let recipe = DipacoRecipe {
+        engine: Arc::clone(&env.engine),
+        corpus: Arc::clone(&env.corpus),
+        spec,
+        diloco: schedule,
+        routing,
+        run: RunConfig {
+            workers: args.usize("workers", 4),
+            backup_workers: args.usize("backup", 0),
+            preemption_prob: args.f64("preempt", 0.0),
+            lease_ms: 60_000,
+            transfer_delay_ms: args.u64("transfer-delay", 0),
+            outer_executors: args.usize("executors", 2),
+            seed: args.u64("seed", 7),
+        },
+        rundir: env.workdir.join(format!(
+            "dipaco-{}-{}",
+            grid.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x"),
+            args.u64("seed", 7)
+        )),
+        early_stop: args.flag("early-stop"),
+        holdout_frac: if args.flag("early-stop") { 0.1 } else { 0.0 },
+        grid: if grid.len() == 2 { Some((grid[0], grid[1])) } else { None },
+    };
+    let result = recipe.train(base, phases, disc_phases)?;
+    let ppl = result.eval_routed_once(&env.engine, &env.corpus)?;
+    println!("\nDiPaCo {grid:?}: validation ppl (route once) = {ppl:.3}");
+    for s in &result.phase_stats {
+        println!(
+            "  phase {:>2}: loss {:.4}  wall {:.1}s  outer {:.2}s  requeues {}",
+            s.phase, s.mean_train_loss, s.wallclock_s, s.outer_update_s, s.requeues
+        );
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "path");
+    let Some(ckpt) = args.get("ckpt") else {
+        bail!("--ckpt <file.dpc> required");
+    };
+    let env = Env::new(
+        preset,
+        &default_corpus(args.usize("docs", 3000)),
+        metrics::results_dir().join("runs"),
+    )?;
+    let ck = dipaco::params::checkpoint::Checkpoint::load(std::path::Path::new(ckpt))?;
+    let theta = ck.get("theta").context("checkpoint missing theta")?;
+    let ppl = env.valid_ppl(theta)?;
+    println!("validation ppl {ppl:.3}");
+    Ok(())
+}

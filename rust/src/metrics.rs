@@ -1,0 +1,109 @@
+//! Experiment output: CSV writers and run summaries for `results/` and
+//! EXPERIMENTS.md. Every experiment driver funnels through these so the
+//! paper tables regenerate reproducibly.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+pub struct CsvWriter {
+    file: std::fs::File,
+    pub path: PathBuf,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file =
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            file,
+            path: path.to_path_buf(),
+            columns: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.columns, "column count mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Pretty console table matching the paper's row layout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    println!("\n== {title} ==");
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:<w$}"))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("-+-"));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// JSON run summary (appended to results/ for EXPERIMENTS.md bookkeeping).
+pub fn write_summary(path: &Path, entries: Vec<(&str, Json)>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, Json::obj(entries).to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Results directory (crate-rooted, override with DIPACO_RESULTS).
+pub fn results_dir() -> PathBuf {
+    std::env::var("DIPACO_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = std::env::temp_dir().join(format!("dipaco-csv-{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&p, &["step", "loss"]).unwrap();
+        w.rowf(&[1.0, 2.5]).unwrap();
+        w.row(&["2".into(), "2.25".into()]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_rejects_bad_width() {
+        let p = std::env::temp_dir().join(format!("dipaco-csv2-{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        let _ = w.rowf(&[1.0]);
+    }
+}

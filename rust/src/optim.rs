@@ -1,0 +1,201 @@
+//! Per-module outer optimization (paper §2.5–§2.7, Algorithm 1 lines 11-16).
+//!
+//! Each module `(l, e)` receives outer gradients `theta(l,e)^{t-1} -
+//! theta(l,e)^t_i` from the paths `i` that traverse it. [`OuterAccumulator`]
+//! averages them **online** (paper §3.3: accumulate each checkpoint as it
+//! arrives instead of gathering all first), with optional shard-size
+//! weighting (Eq. 2-3). [`Nesterov`] then applies the outer update with
+//! optional norm rescaling by `sqrt(P_le / P_max)` (§2.7: "we have rescaled
+//! the outer gradient norm by the square root of the number of paths going
+//! through a module" — implemented relative to the most-shared module so
+//! the DiLoCo-calibrated outer LR of 0.7/0.9 stays valid for it).
+
+use std::collections::HashMap;
+
+use crate::topology::{ModuleId, Topology};
+
+/// Online weighted average of outer gradients for one module.
+#[derive(Debug, Clone)]
+pub struct OuterAccumulator {
+    sum: Vec<f32>,
+    weight: f64,
+    contributions: usize,
+}
+
+impl OuterAccumulator {
+    pub fn new(size: usize) -> Self {
+        OuterAccumulator {
+            sum: vec![0.0; size],
+            weight: 0.0,
+            contributions: 0,
+        }
+    }
+
+    /// Add one path's outer gradient with weight `w` (shard size under
+    /// loss reweighing, 1.0 otherwise). O(size); no buffering of deltas.
+    pub fn add(&mut self, delta: &[f32], w: f64) {
+        assert_eq!(delta.len(), self.sum.len());
+        assert!(w > 0.0);
+        for (s, &d) in self.sum.iter_mut().zip(delta) {
+            *s += (d as f64 * w) as f32;
+        }
+        self.weight += w;
+        self.contributions += 1;
+    }
+
+    pub fn contributions(&self) -> usize {
+        self.contributions
+    }
+
+    /// Weighted mean (Eq. 2-3 with alpha normalized by total weight).
+    pub fn average(&self) -> Vec<f32> {
+        assert!(self.weight > 0.0, "no contributions");
+        let inv = (1.0 / self.weight) as f32;
+        self.sum.iter().map(|&s| s * inv).collect()
+    }
+}
+
+/// Per-module Nesterov momentum, the outer optimizer DiLoCo/DiPaCo found
+/// most effective (paper §2.5; lr 0.7, momentum 0.9 in §7.1).
+#[derive(Debug)]
+pub struct Nesterov {
+    pub lr: f32,
+    pub momentum: f32,
+    velocity: HashMap<ModuleId, Vec<f32>>,
+}
+
+impl Nesterov {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Nesterov {
+            lr,
+            momentum,
+            velocity: HashMap::new(),
+        }
+    }
+
+    /// Nesterov step: v <- mu v + g;  theta <- theta - lr (g + mu v).
+    /// `g` is the (already averaged / rescaled) outer gradient.
+    pub fn step(&mut self, m: ModuleId, params: &mut [f32], g: &[f32]) {
+        assert_eq!(params.len(), g.len());
+        let v = self
+            .velocity
+            .entry(m)
+            .or_insert_with(|| vec![0.0; g.len()]);
+        let mu = self.momentum;
+        for ((p, v), &gi) in params.iter_mut().zip(v.iter_mut()).zip(g) {
+            *v = mu * *v + gi;
+            *p -= self.lr * (gi + mu * *v);
+        }
+    }
+
+    pub fn velocity_of(&self, m: ModuleId) -> Option<&[f32]> {
+        self.velocity.get(&m).map(|v| v.as_slice())
+    }
+}
+
+/// Norm-rescale factor for a module (paper §2.7), relative to the
+/// most-shared level so the most-averaged module keeps factor 1.0.
+pub fn rescale_factor(topo: &Topology, m: ModuleId, enabled: bool) -> f32 {
+    if !enabled {
+        return 1.0;
+    }
+    let p_le = topo.paths_through(m) as f32;
+    let p_max = topo
+        .levels
+        .iter()
+        .enumerate()
+        .map(|(l, _)| topo.paths_through(ModuleId { level: l, expert: 0 }))
+        .max()
+        .unwrap_or(1) as f32;
+    (p_le / p_max).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologySpec;
+    use crate::params::manifest::Manifest;
+    use crate::util::json::Json;
+
+    fn mid(l: usize, e: usize) -> ModuleId {
+        ModuleId { level: l, expert: e }
+    }
+
+    #[test]
+    fn accumulator_weighted_average() {
+        let mut acc = OuterAccumulator::new(3);
+        acc.add(&[1.0, 2.0, 3.0], 1.0);
+        acc.add(&[3.0, 2.0, 1.0], 3.0);
+        let avg = acc.average();
+        // (1*1+3*3)/4, (2*1+2*3)/4, (3*1+1*3)/4
+        assert!((avg[0] - 2.5).abs() < 1e-6);
+        assert!((avg[1] - 2.0).abs() < 1e-6);
+        assert!((avg[2] - 1.5).abs() < 1e-6);
+        assert_eq!(acc.contributions(), 2);
+    }
+
+    #[test]
+    fn online_equals_batch_average() {
+        let deltas: Vec<Vec<f32>> = (0..7)
+            .map(|i| (0..5).map(|j| (i * 5 + j) as f32 * 0.1).collect())
+            .collect();
+        let mut acc = OuterAccumulator::new(5);
+        for d in &deltas {
+            acc.add(d, 1.0);
+        }
+        let avg = acc.average();
+        for j in 0..5 {
+            let batch: f32 = deltas.iter().map(|d| d[j]).sum::<f32>() / 7.0;
+            assert!((avg[j] - batch).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nesterov_first_step() {
+        let mut opt = Nesterov::new(0.5, 0.9);
+        let mut p = vec![1.0f32, 1.0];
+        opt.step(mid(0, 0), &mut p, &[0.2, -0.2]);
+        // v = g; update = g + mu*v = 1.9*g; p -= lr*1.9*g
+        assert!((p[0] - (1.0 - 0.5 * 1.9 * 0.2)).abs() < 1e-6);
+        assert!((p[1] - (1.0 + 0.5 * 1.9 * 0.2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nesterov_momentum_accumulates() {
+        let mut opt = Nesterov::new(0.1, 0.9);
+        let mut p = vec![0.0f32];
+        opt.step(mid(0, 0), &mut p, &[1.0]);
+        let after1 = p[0];
+        opt.step(mid(0, 0), &mut p, &[1.0]);
+        let delta2 = after1 - p[0];
+        let delta1 = -after1;
+        // second step moves farther than first (momentum)
+        assert!(delta2 > -delta1 * 0.99 && delta2 > 0.0);
+        assert!(p[0] < after1);
+    }
+
+    #[test]
+    fn velocity_is_per_module() {
+        let mut opt = Nesterov::new(0.1, 0.9);
+        let mut a = vec![0.0f32];
+        let mut b = vec![0.0f32];
+        opt.step(mid(0, 0), &mut a, &[1.0]);
+        opt.step(mid(0, 0), &mut a, &[1.0]);
+        opt.step(mid(1, 0), &mut b, &[1.0]);
+        // b only saw one step: shallower update
+        assert!(b[0] > a[0] / 2.0);
+        assert!(opt.velocity_of(mid(1, 0)).is_some());
+        assert!(opt.velocity_of(mid(2, 2)).is_none());
+    }
+
+    #[test]
+    fn rescale_relative_to_most_shared() {
+        let j = crate::params::manifest::tests::fake_manifest_json(4, 8);
+        let man = Manifest::from_json(&Json::parse(&j).unwrap()).unwrap();
+        let topo = Topology::build(&man, &TopologySpec::grid(vec![4]));
+        // stem shared by 4 paths -> factor 1; grid level expert by 1 path -> 0.5
+        assert!((rescale_factor(&topo, mid(0, 0), true) - 1.0).abs() < 1e-6);
+        assert!((rescale_factor(&topo, mid(1, 0), true) - 0.5).abs() < 1e-6);
+        assert_eq!(rescale_factor(&topo, mid(1, 0), false), 1.0);
+    }
+}

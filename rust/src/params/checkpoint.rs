@@ -1,0 +1,193 @@
+//! Binary checkpoints — the GFS stand-in (paper §3: workers save
+//! checkpoints to the distributed file system; outer-optimization
+//! executors and evaluators load them as they appear in the DB).
+//!
+//! Format `DPC1`: per section `[name_len u32][name utf8][len u32][f32 LE
+//! data]`, with a Fletcher-64 checksum trailer so torn/corrupt writes are
+//! detected (workers get preempted mid-write in the failure-injection
+//! tests). Writes go through a temp file + atomic rename, matching the
+//! crash-consistency contract real checkpoint stores provide.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"DPC1";
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub sections: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, name: &str, data: Vec<f32>) -> Self {
+        self.sections.push((name.to_string(), data));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| d.as_slice())
+    }
+
+    pub fn take(&mut self, name: &str) -> Option<Vec<f32>> {
+        let i = self.sections.iter().position(|(n, _)| n == name)?;
+        Some(self.sections.remove(i).1)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut buf: Vec<u8> = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+            for (name, data) in &self.sections {
+                buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+                buf.extend_from_slice(name.as_bytes());
+                buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                for &v in data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            let sum = fletcher64(&buf);
+            buf.extend_from_slice(&sum.to_le_bytes());
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&buf)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        if buf.len() < 16 || &buf[..4] != MAGIC {
+            bail!("{}: not a DPC1 checkpoint", path.display());
+        }
+        let body = &buf[..buf.len() - 8];
+        let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        if fletcher64(body) != stored {
+            bail!("{}: checksum mismatch (torn write?)", path.display());
+        }
+        let mut pos = 4;
+        let rd_u32 = |buf: &[u8], pos: &mut usize| -> Result<u32> {
+            if *pos + 4 > buf.len() {
+                bail!("truncated checkpoint");
+            }
+            let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let n_sections = rd_u32(body, &mut pos)?;
+        let mut sections = Vec::with_capacity(n_sections as usize);
+        for _ in 0..n_sections {
+            let name_len = rd_u32(body, &mut pos)? as usize;
+            if pos + name_len > body.len() {
+                bail!("truncated checkpoint");
+            }
+            let name = std::str::from_utf8(&body[pos..pos + name_len])
+                .context("bad section name")?
+                .to_string();
+            pos += name_len;
+            let len = rd_u32(body, &mut pos)? as usize;
+            if pos + 4 * len > body.len() {
+                bail!("truncated checkpoint");
+            }
+            let mut data = Vec::with_capacity(len);
+            for i in 0..len {
+                data.push(f32::from_le_bytes(
+                    body[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
+                ));
+            }
+            pos += 4 * len;
+            sections.push((name, data));
+        }
+        Ok(Checkpoint { sections })
+    }
+}
+
+fn fletcher64(data: &[u8]) -> u64 {
+    let mut a: u64 = 0;
+    let mut b: u64 = 0;
+    for chunk in data.chunks(4) {
+        let mut w = [0u8; 4];
+        w[..chunk.len()].copy_from_slice(chunk);
+        a = (a + u32::from_le_bytes(w) as u64) % 0xFFFF_FFFF;
+        b = (b + a) % 0xFFFF_FFFF;
+    }
+    (b << 32) | a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("dipaco-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmpdir().join("a.dpc");
+        let ck = Checkpoint::new()
+            .with("theta", vec![1.0, -2.5, 3.25])
+            .with("m", vec![0.0; 10])
+            .with("loss", vec![4.2]);
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck, back);
+        assert_eq!(back.get("loss"), Some(&[4.2f32][..]));
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmpdir().join("b.dpc");
+        Checkpoint::new()
+            .with("theta", vec![1.0; 100])
+            .save(&p)
+            .unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[20] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let p = tmpdir().join("c.dpc");
+        Checkpoint::new()
+            .with("theta", vec![1.0; 100])
+            .save(&p)
+            .unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpdir().join("d.dpc");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn empty_sections_ok() {
+        let p = tmpdir().join("e.dpc");
+        Checkpoint::new().save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap().sections.len(), 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Flat-parameter manifest — the contract between the JAX compile path and
+//! the rust coordinator.
+//!
+//! `python/compile/aot.py` writes `manifest.json` next to the HLO files:
+//! an ordered table of leaves `(name, offset, size, shape)` describing how
+//! the flat `f32[N]` parameter vector decomposes, plus the resolved model
+//! config. Everything DiPaCo does with parameters — module slicing, path
+//! assembly, outer-gradient splitting, checkpointing — is range arithmetic
+//! over this table.
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Leaf {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+    pub shape: Vec<usize>,
+}
+
+impl Leaf {
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.offset..self.offset + self.size
+    }
+
+    /// Block index for `block{i}.*` leaves, None for stem leaves
+    /// (`embed.*`, `final.*`, `head.*`).
+    pub fn block(&self) -> Option<usize> {
+        let rest = self.name.strip_prefix("block")?;
+        let end = rest.find('.')?;
+        rest[..end].parse().ok()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub model: ModelConfig,
+    pub total_params: usize,
+    pub leaves: Vec<Leaf>,
+    pub entrypoints: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Manifest> {
+        let model = ModelConfig::from_manifest_json(v)?;
+        let total = v
+            .req("total_params")?
+            .as_usize()
+            .context("total_params")?;
+        let mut leaves = Vec::new();
+        let mut expect_off = 0usize;
+        for lj in v.req("leaves")?.as_arr().context("leaves")? {
+            let leaf = Leaf {
+                name: lj.req("name")?.as_str().context("leaf name")?.to_string(),
+                offset: lj.req("offset")?.as_usize().context("leaf offset")?,
+                size: lj.req("size")?.as_usize().context("leaf size")?,
+                shape: lj
+                    .req("shape")?
+                    .as_arr()
+                    .context("leaf shape")?
+                    .iter()
+                    .filter_map(|s| s.as_usize())
+                    .collect(),
+            };
+            if leaf.offset != expect_off {
+                bail!("leaf {} offset {} != expected {}", leaf.name, leaf.offset, expect_off);
+            }
+            if leaf.shape.iter().product::<usize>() != leaf.size {
+                bail!("leaf {} shape/size mismatch", leaf.name);
+            }
+            expect_off += leaf.size;
+            leaves.push(leaf);
+        }
+        if expect_off != total {
+            bail!("leaves sum {} != total_params {}", expect_off, total);
+        }
+        let entrypoints = v
+            .get("entrypoints")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        Ok(Manifest {
+            preset: model.preset.clone(),
+            model,
+            total_params: total,
+            leaves,
+            entrypoints,
+        })
+    }
+
+    pub fn leaf(&self, name: &str) -> Option<&Leaf> {
+        self.leaves.iter().find(|l| l.name == name)
+    }
+
+    /// All leaves of block `i`, in offset order.
+    pub fn block_leaves(&self, block: usize) -> Vec<&Leaf> {
+        self.leaves.iter().filter(|l| l.block() == Some(block)).collect()
+    }
+
+    /// Stem leaves (embedding, final LN, head).
+    pub fn stem_leaves(&self) -> Vec<&Leaf> {
+        self.leaves.iter().filter(|l| l.block().is_none()).collect()
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+
+    pub fn fake_manifest_json(n_layers: usize, d: usize) -> String {
+        // Mirrors python layout() ordering for a miniature model.
+        let mut leaves = Vec::new();
+        let mut off = 0usize;
+        let mut push = |name: String, shape: Vec<usize>, off: &mut usize| {
+            let size: usize = shape.iter().product();
+            leaves.push(format!(
+                r#"{{"name":"{name}","offset":{off},"size":{size},"shape":[{}]}}"#,
+                shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+            ));
+            *off += size;
+        };
+        push("embed.tok".into(), vec![64, d], &mut off);
+        push("embed.pos".into(), vec![48, d], &mut off);
+        for i in 0..n_layers {
+            for (suffix, shape) in [
+                ("ln1.scale", vec![d]),
+                ("ln1.bias", vec![d]),
+                ("attn.wq", vec![d, d]),
+                ("attn.wk", vec![d, d]),
+                ("attn.wv", vec![d, d]),
+                ("attn.wo", vec![d, d]),
+                ("ln2.scale", vec![d]),
+                ("ln2.bias", vec![d]),
+                ("mlp.w1", vec![d, 2 * d]),
+                ("mlp.b1", vec![2 * d]),
+                ("mlp.w2", vec![2 * d, d]),
+                ("mlp.b2", vec![d]),
+            ] {
+                push(format!("block{i}.{suffix}"), shape, &mut off);
+            }
+        }
+        push("final.ln.scale".into(), vec![d], &mut off);
+        push("final.ln.bias".into(), vec![d], &mut off);
+        push("head.w".into(), vec![d, 64], &mut off);
+        format!(
+            r#"{{"preset":"fake","config":{{"vocab":64,"d_model":{d},"n_layers":{n_layers},
+              "n_heads":2,"d_ff":{f},"seq_train":32,"seq_eval":48,"batch":2,"prefix":8,"d_head":{dh}}},
+              "total_params":{off},"leaves":[{leaves}],
+              "entrypoints":["init","train_step"]}}"#,
+            f = 2 * d,
+            dh = d / 2,
+            leaves = leaves.join(",")
+        )
+    }
+
+    #[test]
+    fn parse_fake_manifest() {
+        let m = Manifest::from_json(&Json::parse(&fake_manifest_json(2, 8)).unwrap()).unwrap();
+        assert_eq!(m.model.n_layers, 2);
+        assert_eq!(m.leaves.len(), 2 + 2 * 12 + 3);
+        assert_eq!(
+            m.leaves.iter().map(|l| l.size).sum::<usize>(),
+            m.total_params
+        );
+    }
+
+    #[test]
+    fn block_parsing() {
+        let m = Manifest::from_json(&Json::parse(&fake_manifest_json(3, 8)).unwrap()).unwrap();
+        assert_eq!(m.leaf("block2.attn.wq").unwrap().block(), Some(2));
+        assert_eq!(m.leaf("embed.tok").unwrap().block(), None);
+        assert_eq!(m.block_leaves(1).len(), 12);
+        assert_eq!(m.stem_leaves().len(), 5);
+    }
+
+    #[test]
+    fn rejects_gap_in_offsets() {
+        let bad = r#"{"preset":"x","config":{"vocab":4,"d_model":2,"n_layers":1,
+          "n_heads":1,"d_ff":4,"seq_train":8,"seq_eval":8,"batch":1,"prefix":2,"d_head":2},
+          "total_params":6,
+          "leaves":[{"name":"a","offset":0,"size":2,"shape":[2]},
+                    {"name":"b","offset":3,"size":3,"shape":[3]}]}"#;
+        assert!(Manifest::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn real_artifact_manifest_if_present() {
+        // When artifacts are built, validate the real thing end-to-end.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/test");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.model.preset, "test");
+            assert!(m.total_params > 0);
+            assert!(m.entrypoints.iter().any(|e| e == "train_step"));
+        }
+    }
+}

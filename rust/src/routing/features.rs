@@ -1,0 +1,67 @@
+//! Router feature extraction (paper §7.2.1): "the feature for the router
+//! is always the average of the hidden state from the last transformer
+//! block from the initial LM over the first 32 tokens of a document."
+//!
+//! Implemented via the `features` HLO entrypoint of the base (pretrained)
+//! model; documents are batched through PJRT, the last partial batch
+//! padded and its pad rows dropped.
+
+use anyhow::Result;
+
+use crate::data::corpus::Corpus;
+use crate::runtime::engine::Engine;
+
+/// Extract z for each doc id. Returns rows aligned with `docs`.
+pub fn extract_features(
+    engine: &Engine,
+    base_theta: &[f32],
+    docs: &[usize],
+    corpus: &Corpus,
+) -> Result<Vec<Vec<f32>>> {
+    let mc = engine.model();
+    let mut out = Vec::with_capacity(docs.len());
+    for chunk in docs.chunks(mc.batch) {
+        let mut toks = Vec::with_capacity(mc.batch * mc.prefix);
+        for &d in chunk {
+            let mut p = corpus.prefix(d, mc.prefix).to_vec();
+            p.resize(mc.prefix, 0);
+            toks.extend_from_slice(&p);
+        }
+        for _ in chunk.len()..mc.batch {
+            toks.extend(std::iter::repeat(0).take(mc.prefix));
+        }
+        let z = engine.features(base_theta, &toks)?;
+        for b in 0..chunk.len() {
+            out.push(z[b * mc.d_model..(b + 1) * mc.d_model].to_vec());
+        }
+    }
+    Ok(out)
+}
+
+/// Featurize an arbitrary 32-token window (for eval-time chunked routing,
+/// §2.4.3/§7.2.2): the window is the LAST `prefix` tokens before position
+/// `end` of the document's token stream.
+pub fn window_features(
+    engine: &Engine,
+    base_theta: &[f32],
+    windows: &[Vec<i32>],
+) -> Result<Vec<Vec<f32>>> {
+    let mc = engine.model();
+    let mut out = Vec::with_capacity(windows.len());
+    for chunk in windows.chunks(mc.batch) {
+        let mut toks = Vec::with_capacity(mc.batch * mc.prefix);
+        for w in chunk {
+            let mut p = w.clone();
+            p.resize(mc.prefix, 0);
+            toks.extend_from_slice(&p[..mc.prefix]);
+        }
+        for _ in chunk.len()..mc.batch {
+            toks.extend(std::iter::repeat(0).take(mc.prefix));
+        }
+        let z = engine.features(base_theta, &toks)?;
+        for b in 0..chunk.len() {
+            out.push(z[b * mc.d_model..(b + 1) * mc.d_model].to_vec());
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,267 @@
+//! k-means and Product k-means — the generative routers (paper §2.4.1,
+//! §7.3).
+//!
+//! Features are the LM's prefix embeddings z (extracted via the `features`
+//! HLO entrypoint); the sequence with prefix z is assigned to shard
+//! `argmin_i ||z - c_i||^2` (paper Eq. 1). Product k-means splits the
+//! feature vector into two halves clustered independently; the pair of
+//! assignments indexes `k1 x k2` shards, matching DiPaCo's two-level
+//! module grid.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f32>>,
+}
+
+impl KMeans {
+    /// Lloyd's algorithm with k-means++ seeding. Empty clusters are
+    /// re-seeded from the point farthest from its centroid.
+    pub fn fit(data: &[Vec<f32>], k: usize, iters: usize, rng: &mut Rng) -> KMeans {
+        assert!(!data.is_empty() && k > 0 && k <= data.len());
+        let mut centroids = plus_plus_init(data, k, rng);
+        let mut assign = vec![0usize; data.len()];
+        for _ in 0..iters {
+            let mut changed = false;
+            for (i, x) in data.iter().enumerate() {
+                let a = nearest(&centroids, x).0;
+                if a != assign[i] {
+                    assign[i] = a;
+                    changed = true;
+                }
+            }
+            // recompute centroids
+            let d = data[0].len();
+            let mut sums = vec![vec![0.0f64; d]; k];
+            let mut counts = vec![0usize; k];
+            for (i, x) in data.iter().enumerate() {
+                counts[assign[i]] += 1;
+                for (s, &v) in sums[assign[i]].iter_mut().zip(x.iter()) {
+                    *s += v as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // re-seed on the worst-fit point
+                    let far = (0..data.len())
+                        .max_by(|&a, &b| {
+                            let da = dist2(&centroids[assign[a]], &data[a]);
+                            let db = dist2(&centroids[assign[b]], &data[b]);
+                            da.partial_cmp(&db).unwrap()
+                        })
+                        .unwrap();
+                    centroids[c] = data[far].clone();
+                } else {
+                    centroids[c] = sums[c]
+                        .iter()
+                        .map(|&s| (s / counts[c] as f64) as f32)
+                        .collect();
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        KMeans { centroids }
+    }
+
+    pub fn k(&self) -> usize {
+        self.centroids.len()
+    }
+
+    /// Hard assignment (paper Eq. 1).
+    pub fn assign(&self, x: &[f32]) -> usize {
+        nearest(&self.centroids, x).0
+    }
+
+    /// Indices of the n nearest centroids, nearest first (top-n shard
+    /// overlap, paper §2.4.4).
+    pub fn assign_top_n(&self, x: &[f32], n: usize) -> Vec<usize> {
+        let mut d: Vec<(usize, f32)> = self
+            .centroids
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i, dist2(c, x)))
+            .collect();
+        d.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        d.into_iter().take(n).map(|(i, _)| i).collect()
+    }
+
+    /// Sum of squared distances to assigned centroids.
+    pub fn inertia(&self, data: &[Vec<f32>]) -> f64 {
+        data.iter()
+            .map(|x| nearest(&self.centroids, x).1 as f64)
+            .sum()
+    }
+}
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn nearest(centroids: &[Vec<f32>], x: &[f32]) -> (usize, f32) {
+    let mut best = (0, f32::INFINITY);
+    for (i, c) in centroids.iter().enumerate() {
+        let d = dist2(c, x);
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best
+}
+
+fn plus_plus_init(data: &[Vec<f32>], k: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    let mut centroids = vec![data[rng.gen_range(data.len())].clone()];
+    while centroids.len() < k {
+        let d2: Vec<f64> = data
+            .iter()
+            .map(|x| nearest(&centroids, x).1 as f64 + 1e-12)
+            .collect();
+        centroids.push(data[rng.categorical(&d2)].clone());
+    }
+    centroids
+}
+
+/// Product k-means (paper §7.3): cluster each half of the feature vector
+/// independently; the pair (i, j) indexes k1*k2 shards at sqrt cost.
+#[derive(Debug, Clone)]
+pub struct ProductKMeans {
+    pub left: KMeans,
+    pub right: KMeans,
+    split: usize,
+}
+
+impl ProductKMeans {
+    /// Reconstruct from serialized halves (router persistence).
+    pub fn from_parts(left: KMeans, right: KMeans, split: usize) -> Self {
+        ProductKMeans { left, right, split }
+    }
+
+    pub fn fit(data: &[Vec<f32>], k1: usize, k2: usize, iters: usize, rng: &mut Rng) -> Self {
+        let d = data[0].len();
+        let split = d / 2;
+        let lefts: Vec<Vec<f32>> = data.iter().map(|x| x[..split].to_vec()).collect();
+        let rights: Vec<Vec<f32>> = data.iter().map(|x| x[split..].to_vec()).collect();
+        ProductKMeans {
+            left: KMeans::fit(&lefts, k1, iters, rng),
+            right: KMeans::fit(&rights, k2, iters, rng),
+            split,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.left.k() * self.right.k()
+    }
+
+    pub fn assign(&self, x: &[f32]) -> usize {
+        let i = self.left.assign(&x[..self.split]);
+        let j = self.right.assign(&x[self.split..]);
+        i * self.right.k() + j
+    }
+
+    pub fn assign_top_n(&self, x: &[f32], n: usize) -> Vec<usize> {
+        // rank pairs by summed half-distances
+        let mut scored: Vec<(usize, f32)> = Vec::with_capacity(self.k());
+        for (i, ci) in self.left.centroids.iter().enumerate() {
+            let di = dist2(ci, &x[..self.split]);
+            for (j, cj) in self.right.centroids.iter().enumerate() {
+                let dj = dist2(cj, &x[self.split..]);
+                scored.push((i * self.right.k() + j, di + dj));
+            }
+        }
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        scored.into_iter().take(n).map(|(i, _)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(k: usize, per: usize, d: usize, sep: f32, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        let centers: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, sep)).collect())
+            .collect();
+        for (ci, c) in centers.iter().enumerate() {
+            for _ in 0..per {
+                data.push(c.iter().map(|&m| rng.normal_f32(m, 0.3)).collect());
+                labels.push(ci);
+            }
+        }
+        (data, labels)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (data, labels) = blobs(4, 60, 8, 5.0, 1);
+        let mut rng = Rng::new(2);
+        let km = KMeans::fit(&data, 4, 30, &mut rng);
+        // purity: each true cluster maps to a single centroid
+        for c in 0..4 {
+            let assigns: Vec<usize> = data
+                .iter()
+                .zip(&labels)
+                .filter(|(_, &l)| l == c)
+                .map(|(x, _)| km.assign(x))
+                .collect();
+            let first = assigns[0];
+            let agree = assigns.iter().filter(|&&a| a == first).count();
+            assert!(agree as f64 / assigns.len() as f64 > 0.95);
+        }
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let (data, _) = blobs(4, 40, 4, 3.0, 3);
+        let mut rng = Rng::new(4);
+        let i2 = KMeans::fit(&data, 2, 20, &mut rng).inertia(&data);
+        let i8 = KMeans::fit(&data, 8, 20, &mut rng).inertia(&data);
+        assert!(i8 < i2);
+    }
+
+    #[test]
+    fn top_n_starts_with_argmin() {
+        let (data, _) = blobs(3, 30, 4, 4.0, 5);
+        let mut rng = Rng::new(6);
+        let km = KMeans::fit(&data, 3, 20, &mut rng);
+        for x in data.iter().take(20) {
+            let top = km.assign_top_n(x, 2);
+            assert_eq!(top[0], km.assign(x));
+            assert_eq!(top.len(), 2);
+            assert_ne!(top[0], top[1]);
+        }
+    }
+
+    #[test]
+    fn no_empty_clusters() {
+        let (data, _) = blobs(2, 50, 4, 4.0, 7);
+        let mut rng = Rng::new(8);
+        let km = KMeans::fit(&data, 6, 25, &mut rng);
+        let mut counts = vec![0usize; 6];
+        for x in &data {
+            counts[km.assign(x)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn product_kmeans_covers_grid() {
+        let (data, _) = blobs(4, 50, 8, 4.0, 9);
+        let mut rng = Rng::new(10);
+        let pk = ProductKMeans::fit(&data, 2, 2, 20, &mut rng);
+        assert_eq!(pk.k(), 4);
+        let mut seen = std::collections::HashSet::new();
+        for x in &data {
+            let a = pk.assign(x);
+            assert!(a < 4);
+            seen.insert(a);
+            let top = pk.assign_top_n(x, 3);
+            assert_eq!(top[0], a);
+        }
+        assert!(seen.len() >= 2);
+    }
+}

@@ -1,0 +1,298 @@
+//! Multinomial logistic regression — the discriminative router
+//! (paper §2.4.2, §7.2.1).
+//!
+//! "The router is always trained using a K class linear logistic
+//! classifier with argmax_p sum_j S_ijp as the target and g(document) as
+//! the feature." Trained by mini-batch SGD with momentum on softmax
+//! cross-entropy; optionally calibrates per-class biases so the predicted
+//! document-to-path distribution matches a target distribution (the paper
+//! adds "a bias term to match the target document-to-path distribution"
+//! because rare paths were starved after regression).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Logistic {
+    /// Row-major [k][d] weights.
+    pub w: Vec<Vec<f32>>,
+    pub b: Vec<f32>,
+    pub k: usize,
+    pub d: usize,
+}
+
+pub struct TrainOpts {
+    pub epochs: usize,
+    pub lr: f64,
+    pub l2: f64,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        TrainOpts {
+            epochs: 60,
+            lr: 0.5,
+            l2: 1e-4,
+            batch: 32,
+            seed: 17,
+        }
+    }
+}
+
+impl Logistic {
+    pub fn fit(data: &[Vec<f32>], labels: &[usize], k: usize, opts: &TrainOpts) -> Logistic {
+        assert_eq!(data.len(), labels.len());
+        assert!(!data.is_empty());
+        let d = data[0].len();
+        // standardize features for conditioning
+        let (mu, sigma) = standardize_stats(data);
+        let mut model = Logistic {
+            w: vec![vec![0.0; d]; k],
+            b: vec![0.0; k],
+            k,
+            d,
+        };
+        let mut vel_w = vec![vec![0.0f64; d]; k];
+        let mut vel_b = vec![0.0f64; k];
+        let momentum = 0.9;
+        let mut rng = Rng::new(opts.seed);
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        let n = data.len() as f64;
+        for epoch in 0..opts.epochs {
+            rng.shuffle(&mut order);
+            let lr = opts.lr / (1.0 + 0.05 * epoch as f64);
+            for chunk in order.chunks(opts.batch) {
+                let mut gw = vec![vec![0.0f64; d]; k];
+                let mut gb = vec![0.0f64; k];
+                for &i in chunk {
+                    let x = normalize(&data[i], &mu, &sigma);
+                    let p = model.softmax_std(&x);
+                    for c in 0..k {
+                        let err = p[c] - if labels[i] == c { 1.0 } else { 0.0 };
+                        gb[c] += err;
+                        for (g, &xv) in gw[c].iter_mut().zip(x.iter()) {
+                            *g += err * xv as f64;
+                        }
+                    }
+                }
+                let scale = 1.0 / chunk.len() as f64;
+                for c in 0..k {
+                    for j in 0..d {
+                        let g = gw[c][j] * scale + opts.l2 * model.w[c][j] as f64 / n;
+                        vel_w[c][j] = momentum * vel_w[c][j] - lr * g;
+                        model.w[c][j] += vel_w[c][j] as f32;
+                    }
+                    vel_b[c] = momentum * vel_b[c] - lr * gb[c] * scale;
+                    model.b[c] += vel_b[c] as f32;
+                }
+            }
+        }
+        // Fold standardization into the weights so predict() takes raw x.
+        model.fold_standardization(&mu, &sigma);
+        model
+    }
+
+    fn fold_standardization(&mut self, mu: &[f32], sigma: &[f32]) {
+        for c in 0..self.k {
+            let mut shift = 0.0f32;
+            for j in 0..self.d {
+                let w = self.w[c][j] / sigma[j];
+                shift += w * mu[j];
+                self.w[c][j] = w;
+            }
+            self.b[c] -= shift;
+        }
+    }
+
+    fn softmax_std(&self, x_std: &[f32]) -> Vec<f64> {
+        let logits: Vec<f64> = (0..self.k)
+            .map(|c| {
+                self.b[c] as f64
+                    + self.w[c]
+                        .iter()
+                        .zip(x_std)
+                        .map(|(&w, &x)| w as f64 * x as f64)
+                        .sum::<f64>()
+            })
+            .collect();
+        softmax(&logits)
+    }
+
+    pub fn logits(&self, x: &[f32]) -> Vec<f64> {
+        (0..self.k)
+            .map(|c| {
+                self.b[c] as f64
+                    + self.w[c]
+                        .iter()
+                        .zip(x)
+                        .map(|(&w, &x)| w as f64 * x as f64)
+                        .sum::<f64>()
+            })
+            .collect()
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        argmax(&self.logits(x))
+    }
+
+    /// Top-n classes by logit, best first.
+    pub fn predict_top_n(&self, x: &[f32], n: usize) -> Vec<usize> {
+        let lg = self.logits(x);
+        let mut idx: Vec<usize> = (0..self.k).collect();
+        idx.sort_by(|&a, &b| lg[b].partial_cmp(&lg[a]).unwrap());
+        idx.truncate(n);
+        idx
+    }
+
+    pub fn accuracy(&self, data: &[Vec<f32>], labels: &[usize]) -> f64 {
+        let correct = data
+            .iter()
+            .zip(labels)
+            .filter(|(x, &l)| self.predict(x) == l)
+            .count();
+        correct as f64 / data.len() as f64
+    }
+
+    /// Adjust biases so that the predicted class distribution over `data`
+    /// matches `target` (unnormalized). Iterative proportional fitting on
+    /// the bias terms — paper §7.2.1's remedy for starved paths.
+    pub fn calibrate_bias(&mut self, data: &[Vec<f32>], target: &[f64], iters: usize) {
+        let t_total: f64 = target.iter().sum();
+        for _ in 0..iters {
+            let mut counts = vec![1e-9f64; self.k]; // smoothed
+            for x in data {
+                counts[self.predict(x)] += 1.0;
+            }
+            let n: f64 = data.len() as f64;
+            let mut max_ratio: f64 = 1.0;
+            for c in 0..self.k {
+                let want = (target[c] / t_total).max(1e-9);
+                let have = counts[c] / n;
+                let ratio = want / have;
+                self.b[c] += (ratio.ln() as f32) * 0.5;
+                max_ratio = max_ratio.max(ratio.max(1.0 / ratio));
+            }
+            if max_ratio < 1.15 {
+                break;
+            }
+        }
+    }
+
+    /// Predicted class histogram over a dataset.
+    pub fn class_histogram(&self, data: &[Vec<f32>]) -> Vec<usize> {
+        let mut h = vec![0usize; self.k];
+        for x in data {
+            h[self.predict(x)] += 1;
+        }
+        h
+    }
+}
+
+fn standardize_stats(data: &[Vec<f32>]) -> (Vec<f32>, Vec<f32>) {
+    let d = data[0].len();
+    let n = data.len() as f64;
+    let mut mu = vec![0.0f64; d];
+    for x in data {
+        for (m, &v) in mu.iter_mut().zip(x) {
+            *m += v as f64;
+        }
+    }
+    mu.iter_mut().for_each(|m| *m /= n);
+    let mut var = vec![0.0f64; d];
+    for x in data {
+        for ((s, &v), m) in var.iter_mut().zip(x).zip(&mu) {
+            *s += (v as f64 - m) * (v as f64 - m);
+        }
+    }
+    let sigma: Vec<f32> = var
+        .iter()
+        .map(|&v| ((v / n).sqrt() as f32).max(1e-6))
+        .collect();
+    (mu.iter().map(|&m| m as f32).collect(), sigma)
+}
+
+fn normalize(x: &[f32], mu: &[f32], sigma: &[f32]) -> Vec<f32> {
+    x.iter()
+        .zip(mu)
+        .zip(sigma)
+        .map(|((&v, &m), &s)| (v - m) / s)
+        .collect()
+}
+
+fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(k: usize, per: usize, d: usize, sep: f32, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, sep)).collect())
+            .collect();
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for _ in 0..per {
+                data.push(c.iter().map(|&m| rng.normal_f32(m, 0.4)).collect());
+                labels.push(ci);
+            }
+        }
+        (data, labels)
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let (data, labels) = blobs(4, 80, 8, 3.0, 1);
+        let m = Logistic::fit(&data, &labels, 4, &TrainOpts::default());
+        assert!(m.accuracy(&data, &labels) > 0.97);
+    }
+
+    #[test]
+    fn top_n_consistent_with_predict() {
+        let (data, labels) = blobs(3, 40, 6, 3.0, 2);
+        let m = Logistic::fit(&data, &labels, 3, &TrainOpts::default());
+        for x in data.iter().take(20) {
+            let top = m.predict_top_n(x, 2);
+            assert_eq!(top[0], m.predict(x));
+            assert_eq!(top.len(), 2);
+        }
+    }
+
+    #[test]
+    fn bias_calibration_matches_target() {
+        // Train on imbalanced but overlapping data, calibrate to uniform.
+        let (mut data, mut labels) = blobs(2, 200, 4, 0.5, 3);
+        let (d2, l2) = blobs(2, 40, 4, 0.5, 4);
+        data.extend(d2);
+        labels.extend(l2);
+        let mut m = Logistic::fit(&data, &labels, 2, &TrainOpts::default());
+        m.calibrate_bias(&data, &[0.5, 0.5], 20);
+        let h = m.class_histogram(&data);
+        let frac = h[0] as f64 / data.len() as f64;
+        assert!((frac - 0.5).abs() < 0.15, "frac {frac}");
+    }
+
+    #[test]
+    fn logits_finite() {
+        let (data, labels) = blobs(2, 20, 4, 2.0, 5);
+        let m = Logistic::fit(&data, &labels, 2, &TrainOpts::default());
+        for x in &data {
+            assert!(m.logits(x).iter().all(|l| l.is_finite()));
+        }
+    }
+}

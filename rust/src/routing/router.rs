@@ -1,0 +1,567 @@
+//! Coarse offline routing (paper §2.4, §7.2): generative sharding
+//! (k-means / product k-means on prefix features), discriminative
+//! re-sharding (the EM-style alternation of §2.4.2), shard overlap
+//! (§2.4.4), and the eval-time chunk router (§2.4.3/§7.2.2).
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::config::RoutingConfig;
+use crate::data::corpus::Corpus;
+use crate::data::dataset::Sharding;
+use crate::routing::kmeans::{KMeans, ProductKMeans};
+use crate::routing::logistic::{Logistic, TrainOpts};
+use crate::runtime::engine::Engine;
+use crate::util::rng::Rng;
+
+/// A trained router: maps prefix features to path ids.
+#[derive(Debug, Clone)]
+pub enum Router {
+    KMeans(KMeans),
+    ProductKMeans(ProductKMeans),
+    Discriminative(Logistic),
+}
+
+impl Router {
+    pub fn assign(&self, z: &[f32]) -> usize {
+        match self {
+            Router::KMeans(m) => m.assign(z),
+            Router::ProductKMeans(m) => m.assign(z),
+            Router::Discriminative(m) => m.predict(z),
+        }
+    }
+
+    pub fn assign_top_n(&self, z: &[f32], n: usize) -> Vec<usize> {
+        match self {
+            Router::KMeans(m) => m.assign_top_n(z, n),
+            Router::ProductKMeans(m) => m.assign_top_n(z, n),
+            Router::Discriminative(m) => m.predict_top_n(z, n),
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Router::KMeans(_) => "kmeans",
+            Router::ProductKMeans(_) => "product_kmeans",
+            Router::Discriminative(_) => "discriminative",
+        }
+    }
+}
+
+/// Fit the generative router on train-split features (paper §2.4.1).
+/// `grid` carries (k1, k2) for product k-means; plain k-means uses k1*k2.
+pub fn fit_generative(
+    features: &[Vec<f32>],
+    k: usize,
+    grid: Option<(usize, usize)>,
+    cfg: &RoutingConfig,
+    rng: &mut Rng,
+) -> Router {
+    match grid {
+        Some((k1, k2)) if cfg.product_kmeans => {
+            assert_eq!(k1 * k2, k);
+            Router::ProductKMeans(ProductKMeans::fit(features, k1, k2, cfg.kmeans_iters, rng))
+        }
+        _ => Router::KMeans(KMeans::fit(features, k, cfg.kmeans_iters, rng)),
+    }
+}
+
+/// Shard documents by a router with optional top-n overlap (paper §2.4.4).
+/// `features[i]` corresponds to `docs[i]`.
+pub fn shard_by_router(
+    router: &Router,
+    docs: &[usize],
+    features: &[Vec<f32>],
+    k: usize,
+    overlap: usize,
+    holdout_frac: f64,
+    seed: u64,
+) -> Sharding {
+    let assignments: Vec<(usize, Vec<usize>)> = docs
+        .iter()
+        .zip(features)
+        .map(|(&d, z)| (d, router.assign_top_n(z, overlap.max(1))))
+        .collect();
+    let mut sharding = Sharding::from_assignments(k, &assignments, holdout_frac, seed);
+    // Guard: a path with an empty shard cannot train. Give any empty shard
+    // the documents of the largest shard (parameter duplication is benign;
+    // the paper's bias calibration exists to avoid this situation).
+    let largest = (0..k)
+        .max_by_key(|&i| sharding.shards[i].len())
+        .unwrap_or(0);
+    let donor = sharding.shards[largest].clone();
+    for s in sharding.shards.iter_mut() {
+        if s.docs.is_empty() {
+            s.docs = donor.docs.clone();
+            s.holdout = donor.holdout.clone();
+        }
+    }
+    sharding
+}
+
+/// Per-document path scores on the router split: summed logprob of each
+/// document under each path (paper §7.2.1's S_ijp summed over j).
+/// Returns `scores[doc_idx][path]`.
+pub fn score_router_docs(
+    engine: &Engine,
+    thetas: &HashMap<usize, Vec<f32>>,
+    docs: &[usize],
+    corpus: &Corpus,
+) -> Result<Vec<Vec<f64>>> {
+    let mc = engine.model();
+    let seq = mc.seq_train;
+    let lp = crate::eval::all_path_logprobs(engine, thetas, docs, corpus, seq)?;
+    let paths: usize = thetas.len();
+    let mut out = vec![vec![0.0f64; paths]; docs.len()];
+    for (p, rows) in &lp {
+        for (i, row) in rows.iter().enumerate() {
+            // sum over targets past the routing prefix
+            let s: f64 = (mc.prefix..seq).map(|t| row[t - 1] as f64).sum();
+            out[i][*p] = s;
+        }
+    }
+    Ok(out)
+}
+
+/// One discriminative phase (paper §2.4.2 / §7.2.1):
+/// 1. score router-split docs under every path -> argmax labels,
+/// 2. fit a K-class logistic regressor features -> label,
+/// 3. calibrate biases toward the target document distribution.
+pub fn fit_discriminative(
+    features: &[Vec<f32>],
+    scores: &[Vec<f64>],
+    k: usize,
+    cfg: &RoutingConfig,
+) -> Router {
+    let labels: Vec<usize> = scores
+        .iter()
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect();
+    let mut model = Logistic::fit(
+        features,
+        &labels,
+        k,
+        &TrainOpts {
+            epochs: cfg.logistic_epochs,
+            lr: cfg.logistic_lr,
+            ..Default::default()
+        },
+    );
+    if cfg.calibrate_bias {
+        // Target: the label distribution itself (smoothed), so no path is
+        // starved relative to what the scores say it deserves.
+        let mut target = vec![1.0f64; k];
+        for &l in &labels {
+            target[l] += 1.0;
+        }
+        model.calibrate_bias(features, &target, 15);
+    }
+    Router::Discriminative(model)
+}
+
+/// Routing diagnostics: fraction of doc pairs from the same ground-truth
+/// domain that land in the same shard (purity proxy; diagnostics only).
+pub fn domain_alignment(corpus: &Corpus, docs: &[usize], assign: &[usize]) -> f64 {
+    let mut by_domain: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, &d) in docs.iter().enumerate() {
+        by_domain
+            .entry(corpus.docs[d].domain)
+            .or_default()
+            .push(assign[i]);
+    }
+    let mut agree = 0usize;
+    let mut total = 0usize;
+    for (_, shards) in by_domain {
+        let mut counts: HashMap<usize, usize> = HashMap::new();
+        for s in &shards {
+            *counts.entry(*s).or_default() += 1;
+        }
+        let max = counts.values().max().copied().unwrap_or(0);
+        agree += max;
+        total += shards.len();
+    }
+    agree as f64 / total.max(1) as f64
+}
+
+/// Eval-time chunk router (paper §2.4.3, §7.2.2): predicts the best path
+/// for chunk i+1 from the features of (the last 32 tokens of) chunk i.
+///
+/// Substitution note (DESIGN.md): the paper finetunes a transformer
+/// transducer for this; we train a logistic head on the same features the
+/// document router uses, with labels = argmax path score on the *next*
+/// window, which preserves the mechanism (cheap scoring-mode router
+/// invoked between chunks) at this model scale.
+pub struct ChunkRouter {
+    pub model: Logistic,
+}
+
+impl ChunkRouter {
+    /// Train from router-split docs. `w` is the label window size L
+    /// (paper found L = chunk size works best).
+    pub fn train(
+        engine: &Engine,
+        base_theta: &[f32],
+        thetas: &HashMap<usize, Vec<f32>>,
+        docs: &[usize],
+        corpus: &Corpus,
+        w: usize,
+        cfg: &RoutingConfig,
+    ) -> Result<ChunkRouter> {
+        let mc = engine.model();
+        let seq = mc.seq_eval;
+        let k = thetas.len();
+        let lp = crate::eval::all_path_logprobs(engine, thetas, docs, corpus, seq)?;
+        let mut feats: Vec<Vec<f32>> = Vec::new();
+        let mut labels: Vec<usize> = Vec::new();
+        let mut windows: Vec<Vec<i32>> = Vec::new();
+        let mut pending: Vec<usize> = Vec::new(); // label per window
+        for (i, &d) in docs.iter().enumerate() {
+            let toks = corpus.sequence(d, seq);
+            // chunk boundaries at prefix, prefix+w, ...
+            let mut t = mc.prefix;
+            while t + 1 < seq {
+                let end = (t + w).min(seq);
+                // label: best path on window [t, end)
+                let best = (0..k)
+                    .max_by(|&a, &b| {
+                        let sa: f64 = (t..end).map(|ti| lp[&a][i][ti - 1] as f64).sum();
+                        let sb: f64 = (t..end).map(|ti| lp[&b][i][ti - 1] as f64).sum();
+                        sa.partial_cmp(&sb).unwrap()
+                    })
+                    .unwrap();
+                // feature: last `prefix` tokens before t
+                let lo = t.saturating_sub(mc.prefix);
+                windows.push(toks[lo..t].to_vec());
+                pending.push(best);
+                t = end;
+            }
+        }
+        let zs = crate::routing::features::window_features(engine, base_theta, &windows)?;
+        feats.extend(zs);
+        labels.extend(pending);
+        let model = Logistic::fit(
+            &feats,
+            &labels,
+            k,
+            &TrainOpts {
+                epochs: cfg.logistic_epochs,
+                lr: cfg.logistic_lr,
+                ..Default::default()
+            },
+        );
+        Ok(ChunkRouter { model })
+    }
+
+    /// Select paths per chunk for evaluation docs. Returns
+    /// `choice[doc][chunk]`.
+    pub fn route_docs(
+        &self,
+        engine: &Engine,
+        base_theta: &[f32],
+        docs: &[usize],
+        corpus: &Corpus,
+        w: usize,
+    ) -> Result<Vec<Vec<usize>>> {
+        let mc = engine.model();
+        let seq = mc.seq_eval;
+        let mut windows: Vec<Vec<i32>> = Vec::new();
+        let mut spans: Vec<usize> = Vec::new(); // chunks per doc
+        for &d in docs {
+            let toks = corpus.sequence(d, seq);
+            let mut t = mc.prefix;
+            let mut n = 0;
+            while t < seq {
+                let lo = t.saturating_sub(mc.prefix);
+                windows.push(toks[lo..t].to_vec());
+                n += 1;
+                t = (t + w).min(seq);
+                if t == seq {
+                    break;
+                }
+            }
+            spans.push(n);
+        }
+        let zs = crate::routing::features::window_features(engine, base_theta, &windows)?;
+        let mut out = Vec::with_capacity(docs.len());
+        let mut cursor = 0;
+        for n in spans {
+            let choices = zs[cursor..cursor + n]
+                .iter()
+                .map(|z| self.model.predict(z))
+                .collect();
+            cursor += n;
+            out.push(choices);
+        }
+        Ok(out)
+    }
+}
+
+/// Convenience: assignment map doc -> path from a router + features.
+pub fn assignments_of(
+    router: &Router,
+    docs: &[usize],
+    features: &[Vec<f32>],
+) -> HashMap<usize, usize> {
+    docs.iter()
+        .zip(features)
+        .map(|(&d, z)| (d, router.assign(z)))
+        .collect()
+}
+
+/// Route validation docs given a router (features must be extracted with
+/// the same base model used at fit time).
+pub fn route_docs(
+    engine: &Engine,
+    base_theta: &[f32],
+    router: &Router,
+    docs: &[usize],
+    corpus: &Corpus,
+) -> Result<HashMap<usize, usize>> {
+    let zs = crate::routing::features::extract_features(engine, base_theta, docs, corpus)?;
+    Ok(assignments_of(router, docs, &zs))
+}
+
+/// Full sharding for training: route train docs with overlap (paper: the
+/// 16x16 run uses top-2 at train time, never at eval).
+pub fn shard_for_training(
+    engine: &Engine,
+    base_theta: &[f32],
+    router: &Router,
+    corpus: &Corpus,
+    k: usize,
+    cfg: &RoutingConfig,
+    holdout_frac: f64,
+    seed: u64,
+) -> Result<Sharding> {
+    let zs =
+        crate::routing::features::extract_features(engine, base_theta, &corpus.train, corpus)?;
+    Ok(shard_by_router(
+        router,
+        &corpus.train,
+        &zs,
+        k,
+        cfg.train_overlap,
+        holdout_frac,
+        seed,
+    ))
+}
+
+/// Sanity metric: accuracy of a discriminative router against argmax
+/// labels on held-out scored docs.
+pub fn router_label_accuracy(router: &Router, features: &[Vec<f32>], scores: &[Vec<f64>]) -> f64 {
+    let correct = features
+        .iter()
+        .zip(scores)
+        .filter(|(z, row)| {
+            let label = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            router.assign(z) == label
+        })
+        .count();
+    correct as f64 / features.len().max(1) as f64
+}
+
+/// Build a path->theta map with contiguous path ids checked.
+pub fn thetas_map(thetas: Vec<Vec<f32>>) -> HashMap<usize, Vec<f32>> {
+    thetas.into_iter().enumerate().collect()
+}
+
+#[allow(dead_code)]
+fn _assert_send() {
+    fn is_send<T: Send>() {}
+    is_send::<Router>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CorpusConfig;
+
+    fn fake_features(n: usize, k: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut zs = Vec::new();
+        let mut doms = Vec::new();
+        for i in 0..n {
+            let dom = i % k;
+            let z: Vec<f32> = (0..8)
+                .map(|j| if j == dom { 5.0 } else { 0.0 } + rng.normal_f32(0.0, 0.3))
+                .collect();
+            zs.push(z);
+            doms.push(dom);
+        }
+        (zs, doms)
+    }
+
+    #[test]
+    fn generative_sharding_respects_overlap() {
+        let (zs, _) = fake_features(120, 4, 1);
+        let mut rng = Rng::new(2);
+        let router = fit_generative(&zs, 4, None, &RoutingConfig::default(), &mut rng);
+        let docs: Vec<usize> = (0..120).collect();
+        let s1 = shard_by_router(&router, &docs, &zs, 4, 1, 0.0, 3);
+        let s2 = shard_by_router(&router, &docs, &zs, 4, 2, 0.0, 3);
+        assert_eq!(s1.total_docs(), 120);
+        assert_eq!(s2.total_docs(), 240); // top-2 duplicates every doc
+    }
+
+    #[test]
+    fn discriminative_learns_argmax_labels() {
+        let (zs, doms) = fake_features(200, 4, 4);
+        // scores: the "right" path scores higher
+        let scores: Vec<Vec<f64>> = doms
+            .iter()
+            .map(|&d| (0..4).map(|p| if p == d { -10.0 } else { -20.0 }).collect())
+            .collect();
+        let router = fit_discriminative(&zs, &scores, 4, &RoutingConfig::default());
+        assert!(router_label_accuracy(&router, &zs, &scores) > 0.95);
+    }
+
+    #[test]
+    fn empty_shard_guard() {
+        let (zs, _) = fake_features(50, 2, 5);
+        let mut rng = Rng::new(6);
+        // force k=8 shards over 2 real clusters — some will be empty-ish
+        let router = fit_generative(&zs, 8, None, &RoutingConfig::default(), &mut rng);
+        let docs: Vec<usize> = (0..50).collect();
+        let s = shard_by_router(&router, &docs, &zs, 8, 1, 0.1, 7);
+        assert!(s.shards.iter().all(|sh| !sh.docs.is_empty()));
+    }
+
+    #[test]
+    fn domain_alignment_metric() {
+        let corpus = Corpus::synthetic(&CorpusConfig {
+            n_domains: 2,
+            n_docs: 40,
+            doc_len: (60, 80),
+            skew: 0.0,
+            seed: 8,
+        });
+        let docs: Vec<usize> = (0..40).collect();
+        // perfect assignment: shard == domain
+        let perfect: Vec<usize> = docs.iter().map(|&d| corpus.docs[d].domain).collect();
+        assert!((domain_alignment(&corpus, &docs, &perfect) - 1.0).abs() < 1e-9);
+        // constant assignment: alignment is 1.0 trivially per-domain too
+        let constant: Vec<usize> = vec![0; 40];
+        assert!((domain_alignment(&corpus, &docs, &constant) - 1.0).abs() < 1e-9);
+        // random-ish split halves agreement
+        let alternating: Vec<usize> = (0..40).map(|i| i % 2).collect();
+        assert!(domain_alignment(&corpus, &docs, &alternating) < 0.8);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router persistence (drivers cache trained runs under results/)
+// ---------------------------------------------------------------------------
+
+impl Router {
+    /// Serialize into a checkpoint file (section names encode the kind).
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        use crate::params::checkpoint::Checkpoint;
+        let mut ck = Checkpoint::new();
+        match self {
+            Router::KMeans(m) => {
+                for (i, c) in m.centroids.iter().enumerate() {
+                    ck = ck.with(&format!("kmeans.c{i}"), c.clone());
+                }
+            }
+            Router::ProductKMeans(m) => {
+                for (i, c) in m.left.centroids.iter().enumerate() {
+                    ck = ck.with(&format!("pkm.left.c{i}"), c.clone());
+                }
+                for (i, c) in m.right.centroids.iter().enumerate() {
+                    ck = ck.with(&format!("pkm.right.c{i}"), c.clone());
+                }
+            }
+            Router::Discriminative(m) => {
+                for (c, w) in m.w.iter().enumerate() {
+                    ck = ck.with(&format!("disc.w{c}"), w.clone());
+                }
+                ck = ck.with("disc.b", m.b.clone());
+            }
+        }
+        ck.save(path).map_err(|e| anyhow::anyhow!("{e:#}"))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Router> {
+        use crate::params::checkpoint::Checkpoint;
+        use crate::routing::kmeans::{KMeans, ProductKMeans};
+        let ck = Checkpoint::load(path)?;
+        let collect = |prefix: &str| -> Vec<Vec<f32>> {
+            let mut out = Vec::new();
+            for i in 0.. {
+                match ck.get(&format!("{prefix}{i}")) {
+                    Some(c) => out.push(c.to_vec()),
+                    None => break,
+                }
+            }
+            out
+        };
+        if !collect("kmeans.c").is_empty() {
+            return Ok(Router::KMeans(KMeans { centroids: collect("kmeans.c") }));
+        }
+        if !collect("pkm.left.c").is_empty() {
+            let left = KMeans { centroids: collect("pkm.left.c") };
+            let right = KMeans { centroids: collect("pkm.right.c") };
+            let split = left.centroids[0].len();
+            return Ok(Router::ProductKMeans(ProductKMeans::from_parts(left, right, split)));
+        }
+        let w = collect("disc.w");
+        if !w.is_empty() {
+            let b = ck.get("disc.b").map(|b| b.to_vec()).unwrap_or_default();
+            let k = w.len();
+            let d = w[0].len();
+            return Ok(Router::Discriminative(crate::routing::logistic::Logistic { w, b, k, d }));
+        }
+        anyhow::bail!("{}: unrecognized router checkpoint", path.display())
+    }
+}
+
+#[cfg(test)]
+mod persist_tests {
+    use super::*;
+
+    #[test]
+    fn router_save_load_roundtrip() {
+        let tmp = std::env::temp_dir().join(format!("dipaco-router-{}.dpc", std::process::id()));
+        let km = crate::routing::kmeans::KMeans {
+            centroids: vec![vec![1.0, 2.0], vec![-1.0, 0.5], vec![3.0, 3.0]],
+        };
+        let r = Router::KMeans(km);
+        r.save(&tmp).unwrap();
+        let back = Router::load(&tmp).unwrap();
+        assert_eq!(back.kind(), "kmeans");
+        for z in [[1.1f32, 2.0], [-0.9, 0.4], [2.9, 3.1]] {
+            assert_eq!(r.assign(&z), back.assign(&z));
+        }
+        // discriminative
+        let (zs, labels): (Vec<Vec<f32>>, Vec<usize>) = (0..40)
+            .map(|i| {
+                let c = i % 2;
+                (vec![c as f32 * 4.0 + (i % 5) as f32 * 0.01, 1.0], c)
+            })
+            .unzip();
+        let lg = crate::routing::logistic::Logistic::fit(
+            &zs,
+            &labels,
+            2,
+            &crate::routing::logistic::TrainOpts::default(),
+        );
+        let r = Router::Discriminative(lg);
+        r.save(&tmp).unwrap();
+        let back = Router::load(&tmp).unwrap();
+        assert_eq!(back.kind(), "discriminative");
+        for z in &zs {
+            assert_eq!(r.assign(z), back.assign(z));
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! PJRT runtime — loads the AOT artifacts and executes them.
+//!
+//! One [`Engine`] per model preset: it owns the PJRT CPU client, parses
+//! each `*.hlo.txt` through `HloModuleProto::from_text_file` (HLO TEXT is
+//! the interchange format — see python/compile/aot.py), compiles each
+//! entrypoint once, and exposes typed wrappers. This is the ONLY module
+//! that touches the `xla` crate; everything above deals in `Vec<f32>` /
+//! `Vec<i32>`.
+//!
+//! Thread safety: the crate's wrapper types are raw-pointer newtypes and
+//! not `Send`/`Sync`-annotated, but the underlying PJRT CPU client and
+//! loaded executables are thread-safe and immutable after compilation
+//! (executions are const on the C++ side and the CPU client multiplexes
+//! its own thread pool). [`Engine`] is therefore marked `Send + Sync`
+//! so the worker pool can share one compiled executable per entrypoint.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::params::manifest::Manifest;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: see module docs — PJRT CPU client/executables are internally
+// synchronized; the wrapper structs are only lacking the auto-trait
+// annotations because they hold raw pointers.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+/// Entrypoints loaded eagerly by [`Engine::load`]. Others (e.g.
+/// `grad_step` for the sync ablation) load on demand via
+/// [`Engine::ensure_loaded`].
+pub const CORE_ENTRYPOINTS: &[&str] = &[
+    "init",
+    "train_step",
+    "token_logprobs_train",
+    "token_logprobs_eval",
+    "features",
+];
+
+impl Engine {
+    /// Load + compile the core entrypoints of `artifacts/<preset>/`.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut engine = Engine {
+            manifest,
+            dir: dir.to_path_buf(),
+            client,
+            exes: HashMap::new(),
+        };
+        for ep in CORE_ENTRYPOINTS {
+            engine.ensure_loaded(ep)?;
+        }
+        // Optional fused-step artifact (§Perf): present when the manifest
+        // was built with tau > 0; older artifacts fall back to train_step.
+        if engine.model().tau > 0 {
+            let _ = engine.ensure_loaded("train_steps");
+        }
+        Ok(engine)
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        &self.manifest.model
+    }
+
+    pub fn has(&self, entrypoint: &str) -> bool {
+        self.exes.contains_key(entrypoint)
+    }
+
+    /// Compile `entrypoint` if not already resident.
+    pub fn ensure_loaded(&mut self, entrypoint: &str) -> Result<()> {
+        if self.exes.contains_key(entrypoint) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{entrypoint}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "entrypoint {entrypoint:?} not in {} (run `make artifacts`)",
+                self.dir.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {entrypoint}: {e:?}"))?;
+        self.exes.insert(entrypoint.to_string(), exe);
+        Ok(())
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .with_context(|| format!("entrypoint {name:?} not loaded"))
+    }
+
+    /// Run an entrypoint with positional literals; returns the flattened
+    /// tuple elements.
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    fn f32_vec(v: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    fn tokens_literal(&self, tokens: &[i32], batch: usize, seq: usize) -> Result<xla::Literal> {
+        if tokens.len() != batch * seq {
+            bail!("token buffer {} != batch {batch} x seq {seq}", tokens.len());
+        }
+        let vocab = self.model().vocab as i32;
+        if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t >= vocab) {
+            bail!("token {bad} out of vocab range 0..{vocab} (silent NaN source)");
+        }
+        xla::Literal::vec1(tokens)
+            .reshape(&[batch as i64, seq as i64])
+            .map_err(|e| anyhow!("reshaping tokens: {e:?}"))
+    }
+
+    // ------------------------------------------------------- entrypoints
+
+    /// Fresh parameter vector from a seed (GPT-2-style init in the HLO).
+    pub fn init(&self, seed: u32) -> Result<Vec<f32>> {
+        let out = self.run("init", &[xla::Literal::scalar(seed)])?;
+        let theta = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        if theta.len() != self.manifest.total_params {
+            bail!("init returned {} params, manifest says {}", theta.len(), self.manifest.total_params);
+        }
+        Ok(theta)
+    }
+
+    /// One inner AdamW step (paper Algorithm 1 lines 5-9).
+    /// `step` is 1-based; `lr` comes from the cosine schedule in rust.
+    pub fn train_step(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        step: f32,
+        lr: f32,
+        tokens: &[i32],
+    ) -> Result<TrainStepOut> {
+        let mc = self.model();
+        let args = [
+            Self::f32_vec(theta),
+            Self::f32_vec(m),
+            Self::f32_vec(v),
+            xla::Literal::scalar(step),
+            xla::Literal::scalar(lr),
+            self.tokens_literal(tokens, mc.batch, mc.seq_train)?,
+        ];
+        let out = self.run("train_step", &args)?;
+        Ok(TrainStepOut {
+            theta: out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            m: out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            v: out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            loss: out[3].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// `tau` fused inner steps in ONE dispatch (lax.scan inside the HLO;
+    /// §Perf optimization — see EXPERIMENTS.md). `lrs.len()` must equal the
+    /// artifact's tau; tokens is `[tau, batch, seq_train]` flattened.
+    pub fn train_steps(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        start_step: f32,
+        lrs: &[f32],
+        tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mc = self.model();
+        let tau = mc.tau;
+        if lrs.len() != tau {
+            bail!("lrs length {} != artifact tau {tau}", lrs.len());
+        }
+        if tokens.len() != tau * mc.batch * mc.seq_train {
+            bail!("token buffer wrong size for fused train_steps");
+        }
+        let vocab = mc.vocab as i32;
+        if let Some(&bad) = tokens.iter().find(|&&t| t < 0 || t >= vocab) {
+            bail!("token {bad} out of vocab range 0..{vocab}");
+        }
+        let toks = xla::Literal::vec1(tokens)
+            .reshape(&[tau as i64, mc.batch as i64, mc.seq_train as i64])
+            .map_err(|e| anyhow!("reshaping scan tokens: {e:?}"))?;
+        let args = [
+            Self::f32_vec(theta),
+            Self::f32_vec(m),
+            Self::f32_vec(v),
+            xla::Literal::scalar(start_step),
+            Self::f32_vec(lrs),
+            toks,
+        ];
+        let out = self.run("train_steps", &args)?;
+        Ok((
+            out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            out[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Raw gradient + loss (fully-synchronous ablation, paper §4.5).
+    pub fn grad_step(&self, theta: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let mc = self.model();
+        let args = [
+            Self::f32_vec(theta),
+            self.tokens_literal(tokens, mc.batch, mc.seq_train)?,
+        ];
+        let out = self.run("grad_step", &args)?;
+        Ok((
+            out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            out[1].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// AdamW update from a pre-aggregated gradient (sync ablation).
+    pub fn adam_update(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g: &[f32],
+        step: f32,
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let args = [
+            Self::f32_vec(theta),
+            Self::f32_vec(m),
+            Self::f32_vec(v),
+            Self::f32_vec(g),
+            xla::Literal::scalar(step),
+            xla::Literal::scalar(lr),
+        ];
+        let out = self.run("adam_update", &args)?;
+        Ok((
+            out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            out[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            out[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        ))
+    }
+
+    /// Per-token logprobs `[batch, seq-1]` (flattened): logp of token j+1
+    /// given tokens <= j. `seq` selects the train- or eval-length variant.
+    pub fn token_logprobs(&self, theta: &[f32], tokens: &[i32], seq: usize) -> Result<Vec<f32>> {
+        let mc = self.model();
+        let name = if seq == mc.seq_train {
+            "token_logprobs_train"
+        } else if seq == mc.seq_eval {
+            "token_logprobs_eval"
+        } else {
+            bail!("no token_logprobs artifact for seq {seq}");
+        };
+        let args = [
+            Self::f32_vec(theta),
+            self.tokens_literal(tokens, mc.batch, seq)?,
+        ];
+        let out = self.run(name, &args)?;
+        let lp = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        if lp.len() != mc.batch * (seq - 1) {
+            bail!("logprobs size {} != batch x (seq-1)", lp.len());
+        }
+        Ok(lp)
+    }
+
+    /// Router features `z` `[batch, d_model]` (flattened) from prefix
+    /// tokens `[batch, prefix]`.
+    pub fn features(&self, theta: &[f32], prefix_tokens: &[i32]) -> Result<Vec<f32>> {
+        let mc = self.model();
+        let args = [
+            Self::f32_vec(theta),
+            self.tokens_literal(prefix_tokens, mc.batch, mc.prefix)?,
+        ];
+        let out = self.run("features", &args)?;
+        let z = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        if z.len() != mc.batch * mc.d_model {
+            bail!("features size {} != batch x d_model", z.len());
+        }
+        Ok(z)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainStepOut {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Resolve `artifacts/<preset>` relative to the crate root, allowing
+/// override via `DIPACO_ARTIFACTS`.
+pub fn artifact_dir(preset: &str) -> PathBuf {
+    let root = std::env::var("DIPACO_ARTIFACTS")
+        .unwrap_or_else(|_| format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")));
+    Path::new(&root).join(preset)
+}

@@ -1,0 +1,92 @@
+//! Property-testing harness (proptest is not vendored).
+//!
+//! `forall` runs a property over N generated cases from a seeded RNG; on
+//! failure it reports the case index and per-case seed so the exact case
+//! reproduces with `forall_case`. Used by `rust/tests/prop_invariants.rs`
+//! for the coordinator/topology invariants the brief calls out.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the failing
+/// seed on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn forall_case<T: std::fmt::Debug>(
+    seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("case (seed {seed}) failed: {msg}\n  input: {input:?}");
+    }
+}
+
+/// Common generators.
+pub mod gens {
+    use crate::util::rng::Rng;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.gen_range(hi - lo + 1)
+    }
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "addition commutes",
+            1,
+            50,
+            |rng| (rng.gen_range(100) as i64, rng.gen_range(100) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            "always fails at 3",
+            0,
+            10,
+            |rng| rng.gen_range(5),
+            |&x| if x == 3 { Err("hit 3".into()) } else { Ok(()) },
+        );
+    }
+}

@@ -1,0 +1,457 @@
+//! Module / level / path algebra — the heart of DiPaCo (paper §2.3, §2.6).
+//!
+//! A [`Topology`] partitions the flat parameter vector into *levels* (sets
+//! of leaf ranges), gives each level `K_l` expert modules, and defines the
+//! path set `P = prod K_l` over the grid levels. Special levels:
+//!
+//! * the **stem** (embedding, final LN, head) is either shared by all
+//!   paths (K=1) or path-specific (K=P, never communicated — paper §4.2);
+//! * **path-specific blocks** (paper §2.6.1 / Figure 5) form a K=P level;
+//! * a 1-level K=1 topology is exactly DiLoCo; a 1-level K=P topology
+//!   with a path-specific stem is the flat MoE baseline (§2.6.3).
+//!
+//! [`ModuleStore`] owns the global copy of every module's parameters and
+//! performs the two hot operations: *assemble* (modules -> theta_path, run
+//! before each inner phase) and *split* (Delta theta_path -> per-module
+//! outer gradients, run after).
+
+use crate::config::{StemPlacement, TopologySpec};
+use crate::params::manifest::Manifest;
+use std::collections::HashMap;
+use std::ops::Range;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModuleId {
+    pub level: usize,
+    pub expert: usize,
+}
+
+impl std::fmt::Display for ModuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}E{}", self.level, self.expert)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LevelKind {
+    /// Mixed-radix grid dimension `dim` (0-based) of the DiPaCo grid.
+    Grid { dim: usize },
+    /// Stem shared by all paths (K = 1).
+    SharedStem,
+    /// One private copy per path (K = P): path-specific stem or blocks.
+    PathSpecific,
+}
+
+#[derive(Debug, Clone)]
+pub struct Level {
+    pub name: String,
+    pub kind: LevelKind,
+    pub k: usize,
+    /// Theta ranges owned by this level, ascending and disjoint.
+    pub segments: Vec<Range<usize>>,
+    /// Total floats per module of this level.
+    pub size: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub levels: Vec<Level>,
+    pub paths: usize,
+    pub total_params: usize,
+    /// Experts per grid dimension, most-significant first.
+    grid_dims: Vec<usize>,
+    /// prod(grid_dims); replicas share grid assignments modulo this.
+    grid_paths: usize,
+}
+
+impl Topology {
+    pub fn build(manifest: &Manifest, spec: &TopologySpec) -> Topology {
+        let n_blocks = manifest.model.n_layers;
+        let n_grid = spec.experts_per_level.len();
+        assert!(n_grid >= 1, "need at least one level");
+        assert!(
+            spec.experts_per_level.iter().all(|&k| k >= 1),
+            "expert counts must be >= 1"
+        );
+        let grid_paths: usize = spec.experts_per_level.iter().product();
+        let paths = grid_paths * spec.replicas.max(1);
+
+        // Blocks not claimed as path-specific, split evenly (front-loaded)
+        // across grid levels in order.
+        let shared_blocks: Vec<usize> = (0..n_blocks)
+            .filter(|b| !spec.path_specific_blocks.contains(b))
+            .collect();
+        assert!(
+            shared_blocks.len() >= n_grid,
+            "fewer shared blocks than levels"
+        );
+        let per = shared_blocks.len() / n_grid;
+        let extra = shared_blocks.len() % n_grid;
+
+        let segs_for_blocks = |blocks: &[usize]| -> Vec<Range<usize>> {
+            let mut segs: Vec<Range<usize>> = Vec::new();
+            for &b in blocks {
+                for leaf in manifest.block_leaves(b) {
+                    segs.push(leaf.range());
+                }
+            }
+            coalesce(segs)
+        };
+
+        let mut levels = Vec::new();
+
+        // Stem level.
+        let stem_segs = coalesce(
+            manifest
+                .stem_leaves()
+                .iter()
+                .map(|l| l.range())
+                .collect(),
+        );
+        let stem_size: usize = stem_segs.iter().map(|r| r.len()).sum();
+        levels.push(Level {
+            name: "stem".into(),
+            kind: match spec.stem {
+                StemPlacement::Shared => LevelKind::SharedStem,
+                StemPlacement::PathSpecific => LevelKind::PathSpecific,
+            },
+            k: match spec.stem {
+                StemPlacement::Shared => 1,
+                StemPlacement::PathSpecific => paths,
+            },
+            segments: stem_segs,
+            size: stem_size,
+        });
+
+        // Grid levels over consecutive chunks of shared blocks.
+        let mut cursor = 0usize;
+        for (dim, &k) in spec.experts_per_level.iter().enumerate() {
+            let take = per + usize::from(dim < extra);
+            let blocks = &shared_blocks[cursor..cursor + take];
+            cursor += take;
+            let segments = segs_for_blocks(blocks);
+            let size = segments.iter().map(|r| r.len()).sum();
+            levels.push(Level {
+                name: format!("level{dim}(blocks {blocks:?})"),
+                kind: LevelKind::Grid { dim },
+                k,
+                segments,
+                size,
+            });
+        }
+
+        // Path-specific blocks level.
+        if !spec.path_specific_blocks.is_empty() {
+            let mut blocks = spec.path_specific_blocks.clone();
+            blocks.sort_unstable();
+            blocks.dedup();
+            let segments = segs_for_blocks(&blocks);
+            let size = segments.iter().map(|r| r.len()).sum();
+            levels.push(Level {
+                name: format!("path_specific(blocks {blocks:?})"),
+                kind: LevelKind::PathSpecific,
+                k: paths,
+                segments,
+                size,
+            });
+        }
+
+        let topo = Topology {
+            levels,
+            paths,
+            total_params: manifest.total_params,
+            grid_dims: spec.experts_per_level.clone(),
+            grid_paths,
+        };
+        debug_assert_eq!(topo.covered_params(), manifest.total_params);
+        topo
+    }
+
+    fn covered_params(&self) -> usize {
+        self.levels
+            .iter()
+            .map(|l| l.segments.iter().map(|r| r.len()).sum::<usize>())
+            .sum()
+    }
+
+    /// Which expert of `level` path `path` uses.
+    pub fn expert_of(&self, path: usize, level: usize) -> usize {
+        debug_assert!(path < self.paths);
+        match self.levels[level].kind {
+            LevelKind::SharedStem => 0,
+            LevelKind::PathSpecific => path,
+            LevelKind::Grid { dim } => {
+                // mixed radix over path % grid_paths (replicas repeat the
+                // grid pattern), most-significant dim first.
+                let q = path % self.grid_paths;
+                let mut stride = 1usize;
+                for &k in &self.grid_dims[dim + 1..] {
+                    stride *= k;
+                }
+                (q / stride) % self.grid_dims[dim]
+            }
+        }
+    }
+
+    /// Module ids a path traverses, one per level.
+    pub fn modules_of_path(&self, path: usize) -> Vec<ModuleId> {
+        (0..self.levels.len())
+            .map(|l| ModuleId {
+                level: l,
+                expert: self.expert_of(path, l),
+            })
+            .collect()
+    }
+
+    /// All module ids in the topology.
+    pub fn all_modules(&self) -> Vec<ModuleId> {
+        let mut out = Vec::new();
+        for (l, level) in self.levels.iter().enumerate() {
+            for e in 0..level.k {
+                out.push(ModuleId { level: l, expert: e });
+            }
+        }
+        out
+    }
+
+    /// Paths through module (paper: P_{l,e}); uniform across experts of a
+    /// level by construction.
+    pub fn paths_through(&self, m: ModuleId) -> usize {
+        self.paths / self.levels[m.level].k
+    }
+
+    /// Paths that traverse the given module.
+    pub fn paths_of_module(&self, m: ModuleId) -> Vec<usize> {
+        (0..self.paths)
+            .filter(|&p| self.expert_of(p, m.level) == m.expert)
+            .collect()
+    }
+
+    /// Gather a level's segments from a flat vector.
+    pub fn extract(&self, level: usize, theta: &[f32]) -> Vec<f32> {
+        let lv = &self.levels[level];
+        let mut out = Vec::with_capacity(lv.size);
+        for r in &lv.segments {
+            out.extend_from_slice(&theta[r.clone()]);
+        }
+        out
+    }
+
+    /// Scatter module data back into a flat vector.
+    pub fn scatter(&self, level: usize, data: &[f32], theta: &mut [f32]) {
+        let lv = &self.levels[level];
+        debug_assert_eq!(data.len(), lv.size);
+        let mut pos = 0;
+        for r in &lv.segments {
+            theta[r.clone()].copy_from_slice(&data[pos..pos + r.len()]);
+            pos += r.len();
+        }
+    }
+
+    /// Total parameters of the whole mixture (the paper's "Total
+    /// Parameters" column in Table 1): each module counted once.
+    pub fn mixture_params(&self) -> usize {
+        self.levels.iter().map(|l| l.k * l.size).sum()
+    }
+}
+
+fn coalesce(mut segs: Vec<Range<usize>>) -> Vec<Range<usize>> {
+    segs.sort_by_key(|r| r.start);
+    let mut out: Vec<Range<usize>> = Vec::new();
+    for s in segs {
+        match out.last_mut() {
+            Some(last) if last.end == s.start => last.end = s.end,
+            _ => out.push(s),
+        }
+    }
+    out
+}
+
+/// Global copy of every module's parameters (paper: theta(l,e) without the
+/// path index) plus assembly/splitting between module space and path space.
+#[derive(Debug, Clone)]
+pub struct ModuleStore {
+    pub modules: HashMap<ModuleId, Vec<f32>>,
+}
+
+impl ModuleStore {
+    /// Initialize every module from a single base theta (paper Algorithm 1:
+    /// all paths start from the pretrained model).
+    pub fn from_base(topo: &Topology, theta: &[f32]) -> ModuleStore {
+        assert_eq!(theta.len(), topo.total_params);
+        let mut modules = HashMap::new();
+        for m in topo.all_modules() {
+            modules.insert(m, topo.extract(m.level, theta));
+        }
+        ModuleStore { modules }
+    }
+
+    /// theta for a path: gather its module of each level.
+    pub fn assemble(&self, topo: &Topology, path: usize) -> Vec<f32> {
+        let mut theta = vec![0.0f32; topo.total_params];
+        for m in topo.modules_of_path(path) {
+            topo.scatter(m.level, &self.modules[&m], &mut theta);
+        }
+        theta
+    }
+
+    /// Outer gradient per module for one path: slices of
+    /// `theta_before - theta_after` (paper Algorithm 1 line 13).
+    pub fn split_delta(
+        &self,
+        topo: &Topology,
+        path: usize,
+        before: &[f32],
+        after: &[f32],
+    ) -> Vec<(ModuleId, Vec<f32>)> {
+        debug_assert_eq!(before.len(), after.len());
+        let delta: Vec<f32> = before.iter().zip(after).map(|(b, a)| b - a).collect();
+        topo.modules_of_path(path)
+            .into_iter()
+            .map(|m| (m, topo.extract(m.level, &delta)))
+            .collect()
+    }
+
+    pub fn get(&self, m: ModuleId) -> &[f32] {
+        &self.modules[&m]
+    }
+
+    pub fn get_mut(&mut self, m: ModuleId) -> &mut Vec<f32> {
+        self.modules.get_mut(&m).expect("unknown module")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn manifest() -> Manifest {
+        let j = crate::params::manifest::tests::fake_manifest_json(4, 8);
+        Manifest::from_json(&Json::parse(&j).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn grid_2x2_structure() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        assert_eq!(t.paths, 4);
+        assert_eq!(t.levels.len(), 3); // stem + 2 grid
+        assert_eq!(t.levels[0].k, 1);
+        assert_eq!(t.levels[1].k, 2);
+        // coverage: every param in exactly one level
+        let mut seen = vec![0u8; m.total_params];
+        for l in &t.levels {
+            for r in &l.segments {
+                for i in r.clone() {
+                    seen[i] += 1;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn mixed_radix_expert_assignment() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        // level indices: 0 stem, 1 dim0, 2 dim1
+        let digits: Vec<(usize, usize)> = (0..4)
+            .map(|p| (t.expert_of(p, 1), t.expert_of(p, 2)))
+            .collect();
+        assert_eq!(digits, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+        for p in 0..4 {
+            assert_eq!(t.expert_of(p, 0), 0); // shared stem
+        }
+    }
+
+    #[test]
+    fn paths_through_counts() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        assert_eq!(t.paths_through(ModuleId { level: 0, expert: 0 }), 4);
+        assert_eq!(t.paths_through(ModuleId { level: 1, expert: 0 }), 2);
+        let p = t.paths_of_module(ModuleId { level: 1, expert: 1 });
+        assert_eq!(p, vec![2, 3]);
+    }
+
+    #[test]
+    fn flat_moe_is_fully_path_specific() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::flat_moe(8));
+        assert_eq!(t.paths, 8);
+        for l in &t.levels {
+            assert_eq!(l.k, if matches!(l.kind, LevelKind::Grid { .. }) { 8 } else { 8 });
+        }
+        // mixture has 8 full copies
+        assert_eq!(t.mixture_params(), 8 * m.total_params);
+    }
+
+    #[test]
+    fn diloco_collapses_everything() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::diloco(4));
+        assert_eq!(t.paths, 4);
+        // every module is shared by all 4 replicas
+        assert_eq!(t.mixture_params(), m.total_params);
+        for mid in t.all_modules() {
+            assert_eq!(t.paths_through(mid), 4);
+        }
+        // all replicas assemble the identical theta
+        let theta: Vec<f32> = (0..m.total_params).map(|i| i as f32).collect();
+        let store = ModuleStore::from_base(&t, &theta);
+        assert_eq!(store.assemble(&t, 0), store.assemble(&t, 3));
+    }
+
+    #[test]
+    fn path_specific_blocks_form_level() {
+        let m = manifest();
+        let mut spec = TopologySpec::grid(vec![2]);
+        spec.path_specific_blocks = vec![0, 3];
+        let t = Topology::build(&m, &spec);
+        assert_eq!(t.levels.len(), 3);
+        let ps = t.levels.last().unwrap();
+        assert!(matches!(ps.kind, LevelKind::PathSpecific));
+        assert_eq!(ps.k, 2);
+        // grid level only covers blocks 1,2
+        assert_eq!(t.paths_through(ModuleId { level: 2, expert: 0 }), 1);
+    }
+
+    #[test]
+    fn assemble_identity_from_base() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        let theta: Vec<f32> = (0..m.total_params).map(|i| i as f32).collect();
+        let store = ModuleStore::from_base(&t, &theta);
+        for p in 0..t.paths {
+            assert_eq!(store.assemble(&t, p), theta, "path {p}");
+        }
+    }
+
+    #[test]
+    fn split_delta_roundtrip() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        let before: Vec<f32> = (0..m.total_params).map(|i| i as f32).collect();
+        let after: Vec<f32> = before.iter().map(|v| v * 0.5 + 1.0).collect();
+        let store = ModuleStore::from_base(&t, &before);
+        let parts = store.split_delta(&t, 3, &before, &after);
+        // scatter all parts back: must equal before-after elementwise
+        let mut recon = vec![0.0f32; m.total_params];
+        for (mid, data) in &parts {
+            t.scatter(mid.level, data, &mut recon);
+        }
+        for i in 0..recon.len() {
+            assert!((recon[i] - (before[i] - after[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mixture_params_grows_with_k() {
+        let m = manifest();
+        let small = Topology::build(&m, &TopologySpec::grid(vec![2, 2])).mixture_params();
+        let big = Topology::build(&m, &TopologySpec::grid(vec![4, 4])).mixture_params();
+        assert!(big > small);
+        assert!(small > m.total_params);
+    }
+}

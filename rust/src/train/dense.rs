@@ -1,0 +1,103 @@
+//! Dense single-model trainer — the paper's baselines (the "150M" path-
+//! sized model and the "1.3B"-analog large model) and the pretraining
+//! stage that seeds every DiPaCo experiment (Figure 8: "we first pretrain
+//! a 150M parameters model for 24k training steps").
+
+use anyhow::Result;
+use std::sync::Arc;
+
+use crate::config::DilocoConfig;
+use crate::data::corpus::Corpus;
+use crate::data::dataset::BatchSampler;
+use crate::info;
+use crate::runtime::engine::Engine;
+
+#[derive(Debug, Clone)]
+pub struct DenseResult {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// (global step, train loss) samples.
+    pub loss_curve: Vec<(usize, f32)>,
+    /// (global step, validation ppl) samples when eval_every > 0.
+    pub ppl_curve: Vec<(usize, f64)>,
+}
+
+pub struct DenseTrainer {
+    pub engine: Arc<Engine>,
+    pub corpus: Arc<Corpus>,
+    pub schedule: DilocoConfig,
+    pub eval_every: usize,
+    pub log_every: usize,
+}
+
+impl DenseTrainer {
+    pub fn new(engine: Arc<Engine>, corpus: Arc<Corpus>, schedule: DilocoConfig) -> Self {
+        DenseTrainer {
+            engine,
+            corpus,
+            schedule,
+            eval_every: 0,
+            log_every: 50,
+        }
+    }
+
+    /// Train for `steps` starting from (theta, m, v) at global step
+    /// `start_step`, sampling from `docs`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &self,
+        mut theta: Vec<f32>,
+        mut m: Vec<f32>,
+        mut v: Vec<f32>,
+        docs: &[usize],
+        steps: usize,
+        start_step: usize,
+        seed: u64,
+    ) -> Result<DenseResult> {
+        let mc = self.engine.model();
+        let mut sampler = BatchSampler::new(docs, mc.batch, mc.seq_train, seed);
+        let mut loss_curve = Vec::new();
+        let mut ppl_curve = Vec::new();
+        for i in 0..steps {
+            let step = start_step + i + 1;
+            let lr = self.schedule.lr_at(step);
+            let (tokens, _) = sampler.next_batch(&self.corpus);
+            let out = self.engine.train_step(&theta, &m, &v, step as f32, lr, &tokens)?;
+            theta = out.theta;
+            m = out.m;
+            v = out.v;
+            if self.log_every > 0 && (i + 1) % self.log_every == 0 {
+                info!("dense", "step {step}: loss {:.4} lr {lr:.2e}", out.loss);
+            }
+            loss_curve.push((step, out.loss));
+            if self.eval_every > 0 && (i + 1) % self.eval_every == 0 {
+                // Capped eval subset: keeps periodic evals affordable.
+                let n_eval = 64.min(self.corpus.valid.len());
+                let ppl = crate::eval::ppl_docs(
+                    &self.engine,
+                    &theta,
+                    &self.corpus.valid[..n_eval],
+                    &self.corpus,
+                    mc.seq_eval,
+                )?;
+                info!("dense", "step {step}: valid ppl {ppl:.3}");
+                ppl_curve.push((step, ppl));
+            }
+        }
+        Ok(DenseResult {
+            theta,
+            m,
+            v,
+            loss_curve,
+            ppl_curve,
+        })
+    }
+
+    /// Train from a fresh init.
+    pub fn train_from_scratch(&self, docs: &[usize], steps: usize, seed: u64) -> Result<DenseResult> {
+        let n = self.engine.manifest.total_params;
+        let theta = self.engine.init(seed as u32)?;
+        self.train(theta, vec![0.0; n], vec![0.0; n], docs, steps, 0, seed)
+    }
+}

@@ -1,0 +1,210 @@
+//! The full DiPaCo training recipe (paper §2.6 + §4 experimental setup):
+//!
+//! 1. pretrain (or receive) a base dense model;
+//! 2. extract prefix features and fit the **generative** router
+//!    (k-means / product k-means), pre-shard the train split (optional
+//!    top-n overlap);
+//! 3. train paths with per-module DiLoCo phases over the §3 coordinator;
+//! 4. optionally run **discriminative re-sharding** phases (§2.4.2 — "all
+//!    instances of DiPaCo use one phase of discriminative routing") and
+//!    continue training on the new shards;
+//! 5. return thetas (+ early-stopped variants) and the final router for
+//!    evaluation.
+
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::{DilocoConfig, RoutingConfig, RunConfig, TopologySpec};
+use crate::coordinator::phases::{DipacoRun, PhaseStats};
+use crate::data::corpus::Corpus;
+use crate::data::dataset::Sharding;
+use crate::info;
+use crate::routing::features::extract_features;
+use crate::routing::router::{
+    fit_discriminative, fit_generative, score_router_docs, shard_by_router, Router,
+};
+use crate::runtime::engine::Engine;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+pub struct DipacoRecipe {
+    pub engine: Arc<Engine>,
+    pub corpus: Arc<Corpus>,
+    pub spec: TopologySpec,
+    pub diloco: DilocoConfig,
+    pub routing: RoutingConfig,
+    pub run: RunConfig,
+    pub rundir: PathBuf,
+    pub early_stop: bool,
+    /// Holdout fraction per shard for early stopping.
+    pub holdout_frac: f64,
+    /// Grid hint for product k-means, e.g. (4, 4) for a 4x4 DiPaCo.
+    pub grid: Option<(usize, usize)>,
+}
+
+pub struct DipacoResult {
+    pub topo: Arc<Topology>,
+    pub router: Router,
+    pub sharding: Arc<Sharding>,
+    pub thetas: HashMap<usize, Vec<f32>>,
+    pub early_stopped: HashMap<usize, Vec<f32>>,
+    pub base_theta: Vec<f32>,
+    pub phase_stats: Vec<PhaseStats>,
+    /// (phase -> mean train loss), concatenated over stages.
+    pub loss_curve: Vec<(usize, f64)>,
+}
+
+impl DipacoRecipe {
+    /// Train for `gen_phases` on the generative sharding, then (if
+    /// `disc_phases > 0`) re-shard discriminatively and continue.
+    pub fn train(&self, base_theta: Vec<f32>, gen_phases: usize, disc_phases: usize) -> Result<DipacoResult> {
+        let topo = Arc::new(Topology::build(&self.engine.manifest, &self.spec));
+        let k = topo.paths;
+        let mut rng = Rng::new(self.run.seed ^ 0x0507);
+        info!(
+            "dipaco",
+            "topology: {} paths, {} modules, mixture {}M params",
+            topo.paths,
+            topo.all_modules().len(),
+            topo.mixture_params() / 1_000_000
+        );
+
+        // ---- stage 1: generative routing + sharding (paper §2.4.1) ----
+        let train_feats =
+            extract_features(&self.engine, &base_theta, &self.corpus.train, &self.corpus)?;
+        let router = fit_generative(&train_feats, k, self.grid, &self.routing, &mut rng);
+        let sharding = Arc::new(shard_by_router(
+            &router,
+            &self.corpus.train,
+            &train_feats,
+            k,
+            self.routing.train_overlap,
+            self.holdout_frac,
+            self.run.seed,
+        ));
+        info!("dipaco", "generative shard sizes: {:?}", sharding.sizes());
+
+        let mut run = DipacoRun::new(
+            Arc::clone(&self.engine),
+            Arc::clone(&self.corpus),
+            Arc::clone(&sharding),
+            Arc::clone(&topo),
+            &base_theta,
+            self.diloco.clone(),
+            self.run.clone(),
+            self.rundir.join("gen"),
+            self.early_stop,
+        )?;
+        run.run(gen_phases)?;
+        let mut loss_curve: Vec<(usize, f64)> = run
+            .stats
+            .iter()
+            .map(|s| ((s.phase + 1) * self.diloco.inner_steps, s.mean_train_loss))
+            .collect();
+        let mut phase_stats = run.stats.clone();
+        let mut thetas = run.all_path_thetas();
+        let mut early = run.early_stopped_thetas()?;
+        let mut final_router = router;
+        let mut final_sharding = sharding;
+        run.shutdown();
+        drop(run);
+
+        // ---- stage 2: discriminative re-shard + continue (§2.4.2) ----
+        if disc_phases > 0 {
+            let router_feats = extract_features(
+                &self.engine,
+                &base_theta,
+                &self.corpus.router,
+                &self.corpus,
+            )?;
+            let scores =
+                score_router_docs(&self.engine, &thetas, &self.corpus.router, &self.corpus)?;
+            let disc = fit_discriminative(&router_feats, &scores, k, &self.routing);
+            let disc_shard = Arc::new(shard_by_router(
+                &disc,
+                &self.corpus.train,
+                &train_feats,
+                k,
+                self.routing.train_overlap,
+                self.holdout_frac,
+                self.run.seed ^ 1,
+            ));
+            info!("dipaco", "discriminative shard sizes: {:?}", disc_shard.sizes());
+
+            // Continue from the CURRENT modules: rebuild a run whose store
+            // starts at the stage-1 result. We reconstruct per-path thetas
+            // into a fresh store via the base theta then overwrite modules.
+            let mut run2 = DipacoRun::new(
+                Arc::clone(&self.engine),
+                Arc::clone(&self.corpus),
+                Arc::clone(&disc_shard),
+                Arc::clone(&topo),
+                &base_theta,
+                self.diloco.clone(),
+                self.run.clone(),
+                self.rundir.join("disc"),
+                self.early_stop,
+            )?;
+            {
+                // Seed the new store with stage-1 module values.
+                let mut store = run2.store.lock().unwrap();
+                for m in topo.all_modules() {
+                    // module value = slice of any path through it
+                    let path = topo.paths_of_module(m)[0];
+                    let theta = &thetas[&path];
+                    let data = topo.extract(m.level, theta);
+                    *store.get_mut(m) = data;
+                }
+            }
+            // offset the schedule so LR continues decaying
+            for t in 0..disc_phases {
+                // phases continue numbering after stage 1
+                run2.run_phase(gen_phases + t)?;
+            }
+            loss_curve.extend(run2.stats.iter().map(|s| {
+                ((s.phase + 1) * self.diloco.inner_steps, s.mean_train_loss)
+            }));
+            phase_stats.extend(run2.stats.clone());
+            thetas = run2.all_path_thetas();
+            let e2 = run2.early_stopped_thetas()?;
+            early = e2;
+            final_router = disc;
+            final_sharding = disc_shard;
+            run2.shutdown();
+        }
+
+        Ok(DipacoResult {
+            topo,
+            router: final_router,
+            sharding: final_sharding,
+            thetas,
+            early_stopped: early,
+            base_theta,
+            phase_stats,
+            loss_curve,
+        })
+    }
+}
+
+impl DipacoResult {
+    /// Validation PPL with routing once per sequence (paper Table 3 row 1).
+    pub fn eval_routed_once(&self, engine: &Engine, corpus: &Corpus) -> Result<f64> {
+        let assign = crate::routing::router::route_docs(
+            engine,
+            &self.base_theta,
+            &self.router,
+            &corpus.valid,
+            corpus,
+        )?;
+        crate::eval::eval_routed(
+            engine,
+            &self.thetas,
+            |d| assign[&d],
+            &corpus.valid,
+            corpus,
+            engine.model().seq_eval,
+        )
+    }
+}

@@ -1,0 +1,345 @@
+//! Shared experiment plumbing: engine/corpus construction, cached base-
+//! model pretraining, and evaluation helpers reused by every driver in
+//! `examples/`. Keeping this in the library means the drivers stay thin
+//! and all experiments share identical setups.
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::config::{CorpusConfig, DilocoConfig};
+use crate::data::corpus::Corpus;
+use crate::info;
+use crate::params::checkpoint::Checkpoint;
+use crate::runtime::engine::{artifact_dir, Engine};
+use crate::train::dense::DenseTrainer;
+
+/// Standard experiment environment: one engine per preset + the shared
+/// synthetic corpus.
+pub struct Env {
+    pub engine: Arc<Engine>,
+    pub corpus: Arc<Corpus>,
+    pub workdir: PathBuf,
+}
+
+impl Env {
+    pub fn new(preset: &str, corpus_cfg: &CorpusConfig, workdir: PathBuf) -> Result<Env> {
+        std::fs::create_dir_all(&workdir)?;
+        let engine = Arc::new(
+            Engine::load(&artifact_dir(preset))
+                .with_context(|| format!("loading artifacts for preset {preset}"))?,
+        );
+        info!(
+            "env",
+            "engine {}: {} params, batch {} seq {}",
+            preset,
+            engine.manifest.total_params,
+            engine.model().batch,
+            engine.model().seq_train
+        );
+        let corpus = Arc::new(Corpus::synthetic(corpus_cfg));
+        info!(
+            "env",
+            "corpus: {} docs ({} train / {} valid / {} router), {} domains",
+            corpus.docs.len(),
+            corpus.train.len(),
+            corpus.valid.len(),
+            corpus.router.len(),
+            corpus.n_domains
+        );
+        Ok(Env {
+            engine,
+            corpus,
+            workdir,
+        })
+    }
+
+    /// Pretrain (or load from cache) the base dense model every DiPaCo
+    /// experiment forks from (paper Figure 8's purple segment).
+    pub fn base_model(&self, steps: usize, schedule: &DilocoConfig, seed: u64) -> Result<Vec<f32>> {
+        let cache = self.workdir.join(format!(
+            "base-{}-s{steps}-seed{seed}.dpc",
+            self.engine.manifest.preset
+        ));
+        if cache.exists() {
+            if let Ok(ck) = Checkpoint::load(&cache) {
+                if let Some(theta) = ck.get("theta") {
+                    if theta.len() == self.engine.manifest.total_params {
+                        info!("env", "base model loaded from {}", cache.display());
+                        return Ok(theta.to_vec());
+                    }
+                }
+            }
+            // fall through to retrain on any mismatch
+        }
+        info!("env", "pretraining base model for {steps} steps");
+        let trainer = DenseTrainer::new(Arc::clone(&self.engine), Arc::clone(&self.corpus), schedule.clone());
+        let res = trainer.train_from_scratch(&self.corpus.train, steps, seed)?;
+        Checkpoint::new()
+            .with("theta", res.theta.clone())
+            .with("m", res.m)
+            .with("v", res.v)
+            .save(&cache)?;
+        Ok(res.theta)
+    }
+
+    /// Validation PPL of a single dense model.
+    pub fn valid_ppl(&self, theta: &[f32]) -> Result<f64> {
+        crate::eval::ppl_docs(
+            &self.engine,
+            theta,
+            &self.corpus.valid,
+            &self.corpus,
+            self.engine.model().seq_eval,
+        )
+    }
+
+    /// Validation PPL over an explicit doc subset (drivers share one
+    /// deterministic subset so rows are comparable).
+    pub fn valid_ppl_subset(&self, theta: &[f32], docs: &[usize]) -> Result<f64> {
+        crate::eval::ppl_docs(
+            &self.engine,
+            theta,
+            docs,
+            &self.corpus,
+            self.engine.model().seq_eval,
+        )
+    }
+}
+
+/// Default inner-optimization schedule used across experiment drivers.
+/// (Peak LR tuned once on the dense baseline — paper §4 searched "mainly
+/// learning rate and value of Nesterov momentum".)
+pub fn default_schedule(total_steps: usize) -> DilocoConfig {
+    DilocoConfig {
+        total_steps,
+        warmup_steps: (total_steps / 20).clamp(20, 200),
+        peak_lr: 1e-3,
+        ..Default::default()
+    }
+}
+
+/// Default corpus for experiments: 16 domains, mild skew.
+pub fn default_corpus(n_docs: usize) -> CorpusConfig {
+    CorpusConfig {
+        n_domains: 16,
+        n_docs,
+        doc_len: (300, 700),
+        skew: 0.3,
+        seed: 1234,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cached DiPaCo runs: experiment drivers share expensive training runs
+// through results/runs/cache/<tag>/ so e.g. Table 1 reuses Figure 8's 4x4.
+// ---------------------------------------------------------------------------
+
+use crate::routing::router::Router;
+use std::collections::HashMap;
+
+/// The slice of a finished DiPaCo run the evaluation drivers need.
+pub struct TrainedPaths {
+    pub thetas: HashMap<usize, Vec<f32>>,
+    pub early: HashMap<usize, Vec<f32>>,
+    pub router: Router,
+    pub base: Vec<f32>,
+    /// (inner step, mean train loss) per phase.
+    pub loss_curve: Vec<(usize, f64)>,
+}
+
+impl TrainedPaths {
+    fn cache_dir(env: &Env, tag: &str) -> PathBuf {
+        env.workdir.join("cache").join(tag)
+    }
+
+    pub fn save(&self, env: &Env, tag: &str) -> Result<()> {
+        let dir = Self::cache_dir(env, tag);
+        std::fs::create_dir_all(&dir)?;
+        let mut thetas = Checkpoint::new();
+        for (p, t) in &self.thetas {
+            thetas = thetas.with(&format!("path{p}"), t.clone());
+        }
+        thetas.save(&dir.join("thetas.dpc"))?;
+        let mut early = Checkpoint::new();
+        for (p, t) in &self.early {
+            early = early.with(&format!("path{p}"), t.clone());
+        }
+        early.save(&dir.join("early.dpc"))?;
+        self.router.save(&dir.join("router.dpc"))?;
+        Checkpoint::new()
+            .with("theta", self.base.clone())
+            .save(&dir.join("base.dpc"))?;
+        let curve: Vec<f32> = self
+            .loss_curve
+            .iter()
+            .flat_map(|&(s, l)| [s as f32, l as f32])
+            .collect();
+        Checkpoint::new()
+            .with("curve", curve)
+            .save(&dir.join("curve.dpc"))?;
+        Ok(())
+    }
+
+    pub fn load(env: &Env, tag: &str) -> Option<TrainedPaths> {
+        let dir = Self::cache_dir(env, tag);
+        let read_map = |file: &str| -> Option<HashMap<usize, Vec<f32>>> {
+            let ck = Checkpoint::load(&dir.join(file)).ok()?;
+            let mut out = HashMap::new();
+            for (name, data) in ck.sections {
+                let p: usize = name.strip_prefix("path")?.parse().ok()?;
+                out.insert(p, data);
+            }
+            Some(out)
+        };
+        let thetas = read_map("thetas.dpc")?;
+        let early = read_map("early.dpc")?;
+        let router = Router::load(&dir.join("router.dpc")).ok()?;
+        let base = Checkpoint::load(&dir.join("base.dpc"))
+            .ok()?
+            .take("theta")?;
+        let curve_raw = Checkpoint::load(&dir.join("curve.dpc")).ok()?.take("curve")?;
+        let loss_curve = curve_raw
+            .chunks(2)
+            .map(|c| (c[0] as usize, c[1] as f64))
+            .collect();
+        crate::info!("cache", "loaded run {tag} ({} paths)", thetas.len());
+        Some(TrainedPaths {
+            thetas,
+            early,
+            router,
+            base,
+            loss_curve,
+        })
+    }
+
+    /// Validation PPL, routing once per sequence (Table 3 row 1/2).
+    pub fn ppl_once(&self, env: &Env, docs: &[usize], early_stop: bool) -> Result<f64> {
+        let assign = crate::routing::router::route_docs(
+            &env.engine,
+            &self.base,
+            &self.router,
+            docs,
+            &env.corpus,
+        )?;
+        let thetas = if early_stop { &self.early } else { &self.thetas };
+        crate::eval::eval_routed(
+            &env.engine,
+            thetas,
+            |d| assign[&d],
+            docs,
+            &env.corpus,
+            env.engine.model().seq_eval,
+        )
+    }
+}
+
+/// Run a DiPaCo recipe, or load it from the cache when `tag` exists.
+pub fn cached_dipaco(
+    env: &Env,
+    tag: &str,
+    recipe: &crate::train::dipaco::DipacoRecipe,
+    base: Vec<f32>,
+    gen_phases: usize,
+    disc_phases: usize,
+) -> Result<TrainedPaths> {
+    if let Some(hit) = TrainedPaths::load(env, tag) {
+        return Ok(hit);
+    }
+    let result = recipe.train(base, gen_phases, disc_phases)?;
+    let trained = TrainedPaths {
+        thetas: result.thetas,
+        early: result.early_stopped,
+        router: result.router,
+        base: result.base_theta,
+        loss_curve: result.loss_curve,
+    };
+    trained.save(env, tag)?;
+    Ok(trained)
+}
+
+/// Dense baseline, cached.
+pub fn cached_dense(
+    env: &Env,
+    tag: &str,
+    steps: usize,
+    schedule: &DilocoConfig,
+    seed: u64,
+) -> Result<(Vec<f32>, Vec<(usize, f32)>, Vec<(usize, f64)>)> {
+    let dir = env.workdir.join("cache").join(tag);
+    let f = dir.join("dense.dpc");
+    if let Ok(mut ck) = Checkpoint::load(&f) {
+        if let (Some(theta), Some(raw), Some(ppl_raw)) =
+            (ck.take("theta"), ck.take("curve"), ck.take("ppl"))
+        {
+            let curve = raw.chunks(2).map(|c| (c[0] as usize, c[1])).collect();
+            let ppl = ppl_raw.chunks(2).map(|c| (c[0] as usize, c[1] as f64)).collect();
+            crate::info!("cache", "loaded dense run {tag}");
+            return Ok((theta, curve, ppl));
+        }
+    }
+    let mut trainer =
+        DenseTrainer::new(Arc::clone(&env.engine), Arc::clone(&env.corpus), schedule.clone());
+    trainer.eval_every = (steps / 6).max(1);
+    let res = trainer.train_from_scratch(&env.corpus.train, steps, seed)?;
+    std::fs::create_dir_all(&dir)?;
+    let curve_raw: Vec<f32> = res.loss_curve.iter().flat_map(|&(s, l)| [s as f32, l]).collect();
+    let ppl_raw: Vec<f32> = res
+        .ppl_curve
+        .iter()
+        .flat_map(|&(s, p)| [s as f32, p as f32])
+        .collect();
+    Checkpoint::new()
+        .with("theta", res.theta.clone())
+        .with("curve", curve_raw)
+        .with("ppl", ppl_raw)
+        .save(&f)?;
+    Ok((res.theta, res.loss_curve, res.ppl_curve))
+}
+
+/// Evaluation subset: first `n` validation docs (keeps single-core eval
+/// affordable while staying deterministic across drivers).
+pub fn eval_docs(corpus: &crate::data::corpus::Corpus, n: usize) -> Vec<usize> {
+    corpus.valid.iter().copied().take(n).collect()
+}
+
+/// Router-data subset cap (discriminative scoring costs P x docs).
+pub fn router_docs(corpus: &crate::data::corpus::Corpus, n: usize) -> Vec<usize> {
+    corpus.router.iter().copied().take(n).collect()
+}
+
+/// Standard experiment recipe shared by the drivers (see DESIGN.md
+/// experiment index): τ=20 inner steps, 2 executors, 4 workers, seed 7.
+#[allow(clippy::too_many_arguments)]
+pub fn std_recipe(
+    env: &Env,
+    spec: crate::config::TopologySpec,
+    grid: Option<(usize, usize)>,
+    total_steps: usize,
+    overlap: usize,
+    early_stop: bool,
+    tag: &str,
+) -> crate::train::dipaco::DipacoRecipe {
+    let mut diloco = default_schedule(total_steps);
+    diloco.inner_steps = 20;
+    crate::train::dipaco::DipacoRecipe {
+        engine: Arc::clone(&env.engine),
+        corpus: Arc::clone(&env.corpus),
+        spec,
+        diloco,
+        routing: crate::config::RoutingConfig {
+            train_overlap: overlap,
+            ..Default::default()
+        },
+        run: crate::config::RunConfig {
+            workers: 4,
+            outer_executors: 2,
+            lease_ms: 120_000,
+            ..Default::default()
+        },
+        rundir: env.workdir.join("rd").join(tag),
+        early_stop,
+        holdout_frac: if early_stop { 0.1 } else { 0.0 },
+        grid,
+    }
+}

@@ -1,0 +1,99 @@
+//! Keyed barrier (paper §3.2): in the multi-host SPMD setting, DiPaCo
+//! synchronizes task-queue writes by blocking "until each program running
+//! on their host [has] made a call with the same unique key". This is the
+//! single-process equivalent: `wait(key)` blocks until `parties` callers
+//! have arrived with that key, then releases them all and retires the key.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+
+pub struct KeyedBarrier {
+    parties: usize,
+    state: Mutex<HashMap<String, BarrierState>>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+}
+
+impl KeyedBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0);
+        KeyedBarrier {
+            parties,
+            state: Mutex::new(HashMap::new()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until `parties` threads call `wait` with the same `key`.
+    /// Returns true for exactly one caller per release (the "leader").
+    pub fn wait(&self, key: &str) -> bool {
+        let mut guard = self.state.lock().unwrap();
+        let entry = guard.entry(key.to_string()).or_insert(BarrierState {
+            arrived: 0,
+            generation: 0,
+        });
+        entry.arrived += 1;
+        let gen = entry.generation;
+        if entry.arrived == self.parties {
+            // release this generation
+            entry.arrived = 0;
+            entry.generation += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        while guard.get(key).map(|e| e.generation) == Some(gen) {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn releases_when_all_arrive() {
+        let b = Arc::new(KeyedBarrier::new(4));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let b = Arc::clone(&b);
+                let leaders = Arc::clone(&leaders);
+                let done = Arc::clone(&done);
+                s.spawn(move || {
+                    if b.wait("ckpt-42") {
+                        leaders.fetch_add(1, Ordering::SeqCst);
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 4);
+        assert_eq!(leaders.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn keys_are_independent_and_reusable() {
+        let b = Arc::new(KeyedBarrier::new(2));
+        for round in 0..3 {
+            let key = format!("phase-{round}");
+            std::thread::scope(|s| {
+                for _ in 0..2 {
+                    let b = Arc::clone(&b);
+                    let key = key.clone();
+                    s.spawn(move || {
+                        b.wait(&key);
+                    });
+                }
+            });
+        }
+    }
+}

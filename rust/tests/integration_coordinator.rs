@@ -1,0 +1,237 @@
+//! Integration: the §3 infrastructure running real training on the test
+//! preset — worker pool + queue + DB + sharded outer executors + monitor,
+//! with failure injection. Requires `make artifacts` (skips otherwise).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dipaco::config::{DilocoConfig, RunConfig, TopologySpec};
+use dipaco::coordinator::monitor::Monitor;
+use dipaco::coordinator::phases::DipacoRun;
+use dipaco::data::corpus::Corpus;
+use dipaco::data::dataset::Sharding;
+use dipaco::runtime::engine::{artifact_dir, Engine};
+use dipaco::topology::Topology;
+
+fn setup() -> Option<(Arc<Engine>, Arc<Corpus>)> {
+    let dir = artifact_dir("test");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/test not built");
+        return None;
+    }
+    let engine = Arc::new(Engine::load(&dir).unwrap());
+    let corpus = Arc::new(Corpus::synthetic(&dipaco::config::CorpusConfig {
+        n_domains: 4,
+        n_docs: 300,
+        doc_len: (80, 140),
+        skew: 0.0,
+        seed: 5,
+    }));
+    Some((engine, corpus))
+}
+
+fn diloco(inner: usize, total: usize) -> DilocoConfig {
+    DilocoConfig {
+        inner_steps: inner,
+        total_steps: total,
+        warmup_steps: 5,
+        peak_lr: 2e-3,
+        ..Default::default()
+    }
+}
+
+fn rundir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("dipaco-it-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn dipaco_phases_train_and_average() {
+    let Some((engine, corpus)) = setup() else { return };
+    let spec = TopologySpec::grid(vec![2, 2]);
+    let topo = Arc::new(Topology::build(&engine.manifest, &spec));
+    let sharding = Arc::new(Sharding::random(&corpus, topo.paths, 0.1, 1));
+    let base = engine.init(0).unwrap();
+    let mut run = DipacoRun::new(
+        Arc::clone(&engine),
+        Arc::clone(&corpus),
+        sharding,
+        Arc::clone(&topo),
+        &base,
+        diloco(8, 64),
+        RunConfig {
+            workers: 3,
+            outer_executors: 2,
+            lease_ms: 60_000,
+            ..Default::default()
+        },
+        rundir("phases"),
+        true, // early stopping evals ride the queue
+    )
+    .unwrap();
+    run.run(4).unwrap();
+    // losses decrease over phases
+    let losses: Vec<f64> = run.stats.iter().map(|s| s.mean_train_loss).collect();
+    assert_eq!(losses.len(), 4);
+    assert!(
+        losses[3] < losses[0] - 0.1,
+        "no training progress: {losses:?}"
+    );
+    // every phase produced one checkpoint per path (dedup'd)
+    for phase in 0..4 {
+        assert_eq!(run.db.query(phase, "path").len(), topo.paths);
+    }
+    // modules actually moved from the base
+    let store = run.store.lock().unwrap();
+    let mut moved = 0;
+    for m in topo.all_modules() {
+        let before = topo.extract(m.level, &base);
+        let after = store.get(m);
+        if before.iter().zip(after).any(|(b, a)| (b - a).abs() > 1e-6) {
+            moved += 1;
+        }
+    }
+    assert_eq!(moved, topo.all_modules().len());
+    drop(store);
+    // paths share the stem module but differ in grid modules
+    let t0 = run.path_theta(0);
+    let t3 = run.path_theta(3);
+    assert_ne!(t0, t3);
+    // early-stopping ledger has an entry per path
+    {
+        let best = run.pool().ctx().best.lock().unwrap();
+        assert_eq!(best.len(), topo.paths);
+    }
+    run.shutdown();
+}
+
+#[test]
+fn progress_under_preemption_and_monitor() {
+    let Some((engine, corpus)) = setup() else { return };
+    let spec = TopologySpec::grid(vec![2]);
+    let topo = Arc::new(Topology::build(&engine.manifest, &spec));
+    let sharding = Arc::new(Sharding::random(&corpus, topo.paths, 0.0, 2));
+    let base = engine.init(1).unwrap();
+    let mut run = DipacoRun::new(
+        Arc::clone(&engine),
+        Arc::clone(&corpus),
+        sharding,
+        Arc::clone(&topo),
+        &base,
+        diloco(5, 40),
+        RunConfig {
+            workers: 3,
+            backup_workers: 2,      // paper §3.4 backup pool
+            preemption_prob: 0.4,   // heavy failure injection
+            lease_ms: 1500,         // short lease so hard crashes recover fast
+            outer_executors: 1,
+            ..Default::default()
+        },
+        rundir("preempt"),
+        false,
+    )
+    .unwrap();
+    let monitor = Monitor::start(Arc::clone(run.pool()), Duration::from_millis(200));
+    run.run(3).unwrap();
+    let stats = run.queue().stats();
+    // all tasks retired exactly once despite preemptions
+    assert_eq!(stats.completed, 3 * topo.paths as u64);
+    let total_requeues: u64 = run.stats.iter().map(|s| s.requeues).sum();
+    assert!(total_requeues > 0, "preemption injection never fired");
+    // losses still make progress
+    assert!(run.stats[2].mean_train_loss < run.stats[0].mean_train_loss + 0.05);
+    monitor.stop();
+    run.shutdown();
+}
+
+#[test]
+fn monitor_respawns_crashed_workers() {
+    let Some((engine, corpus)) = setup() else { return };
+    use dipaco::coordinator::db::CheckpointDb;
+    use dipaco::coordinator::queue::TaskQueue;
+    use dipaco::coordinator::task::{Task, TrainTask};
+    use dipaco::coordinator::worker::{WorkerCtx, WorkerPool};
+    use dipaco::params::checkpoint::Checkpoint;
+
+    let sharding = Arc::new(Sharding::random(&corpus, 2, 0.0, 3));
+    let queue = Arc::new(TaskQueue::new(Duration::from_secs(30)));
+    let db = Arc::new(CheckpointDb::new());
+    let mut ctx = WorkerCtx::new(
+        Arc::clone(&engine),
+        Arc::clone(&queue),
+        Arc::clone(&db),
+        Arc::clone(&corpus),
+        sharding,
+        diloco(2, 20),
+        RunConfig {
+            workers: 2,
+            ..Default::default()
+        },
+        false,
+    );
+    // every task crashes its worker afterward — monitor must keep respawning
+    Arc::get_mut(&mut ctx).unwrap().crash_prob = 1.0;
+    let pool = WorkerPool::spawn(Arc::clone(&ctx), 2, 0);
+    let monitor = Monitor::start(Arc::clone(&pool), Duration::from_millis(100));
+
+    let dir = rundir("monitor");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = engine.init(0).unwrap();
+    let n = engine.manifest.total_params;
+    for i in 0..6u64 {
+        let ckpt_in = dir.join(format!("t{i}.in.dpc"));
+        Checkpoint::new()
+            .with("theta", base.clone())
+            .with("m", vec![0.0; n])
+            .with("v", vec![0.0; n])
+            .save(&ckpt_in)
+            .unwrap();
+        queue.push(Task::Train(TrainTask {
+            id: i + 1,
+            phase: 0,
+            path: (i % 2) as usize,
+            steps: 2,
+            start_step: 0,
+            ckpt_in,
+            ckpt_out: dir.join(format!("t{i}.out.dpc")),
+        }));
+    }
+    queue.wait_idle(Duration::from_millis(20));
+    assert_eq!(queue.stats().completed, 6);
+    assert!(
+        monitor.respawns.load(std::sync::atomic::Ordering::Relaxed) >= 4,
+        "monitor should have respawned crashed workers"
+    );
+    monitor.stop();
+    pool.shutdown();
+}
+
+#[test]
+fn multiple_rounds_when_workers_fewer_than_paths() {
+    let Some((engine, corpus)) = setup() else { return };
+    let spec = TopologySpec::grid(vec![4]); // 4 paths
+    let topo = Arc::new(Topology::build(&engine.manifest, &spec));
+    let sharding = Arc::new(Sharding::random(&corpus, 4, 0.0, 4));
+    let base = engine.init(2).unwrap();
+    let mut run = DipacoRun::new(
+        Arc::clone(&engine),
+        Arc::clone(&corpus),
+        sharding,
+        Arc::clone(&topo),
+        &base,
+        diloco(4, 16),
+        RunConfig {
+            workers: 1, // one worker serves 4 paths in rounds (paper §3.4)
+            outer_executors: 2,
+            ..Default::default()
+        },
+        rundir("rounds"),
+        false,
+    )
+    .unwrap();
+    run.run(2).unwrap();
+    assert_eq!(run.queue().stats().completed, 8);
+    assert_eq!(run.db.query(1, "path").len(), 4);
+    run.shutdown();
+}

@@ -1,0 +1,215 @@
+//! Integration: the AOT bridge. Loads real `artifacts/test/` HLO text into
+//! the PJRT engine and checks shapes, determinism, numerics, and training
+//! behaviour end to end. Requires `make artifacts` (skips otherwise).
+
+use dipaco::runtime::engine::{artifact_dir, Engine};
+
+fn engine() -> Option<Engine> {
+    let dir = artifact_dir("test");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/test not built");
+        return None;
+    }
+    Some(Engine::load(&dir).expect("engine load"))
+}
+
+fn fake_tokens(engine: &Engine, seq: usize, seed: u64) -> Vec<i32> {
+    let mc = engine.model();
+    let mut rng = dipaco::util::rng::Rng::new(seed);
+    (0..mc.batch * seq)
+        .map(|_| rng.gen_range(mc.vocab) as i32)
+        .collect()
+}
+
+#[test]
+fn init_is_deterministic_and_sized() {
+    let Some(engine) = engine() else { return };
+    let a = engine.init(42).unwrap();
+    let b = engine.init(42).unwrap();
+    let c = engine.init(43).unwrap();
+    assert_eq!(a.len(), engine.manifest.total_params);
+    assert_eq!(a, b);
+    assert_ne!(a, c);
+    // LN scales initialized to 1: check one leaf
+    let leaf = engine.manifest.leaf("block0.ln1.scale").unwrap();
+    assert!(a[leaf.range()].iter().all(|&x| (x - 1.0).abs() < 1e-6));
+}
+
+#[test]
+fn train_step_reduces_loss_on_repeated_batch() {
+    let Some(engine) = engine() else { return };
+    let mc = engine.model().clone();
+    let n = engine.manifest.total_params;
+    let mut theta = engine.init(0).unwrap();
+    let mut m = vec![0.0; n];
+    let mut v = vec![0.0; n];
+    let tokens = fake_tokens(&engine, mc.seq_train, 1);
+    let mut first = None;
+    let mut last = 0.0;
+    for i in 0..12 {
+        let out = engine
+            .train_step(&theta, &m, &v, (i + 1) as f32, 1e-3, &tokens)
+            .unwrap();
+        theta = out.theta;
+        m = out.m;
+        v = out.v;
+        last = out.loss;
+        first.get_or_insert(out.loss);
+        assert!(out.loss.is_finite());
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.2,
+        "loss did not drop: {first} -> {last}"
+    );
+}
+
+#[test]
+fn token_logprobs_shapes_and_range() {
+    let Some(engine) = engine() else { return };
+    let mc = engine.model().clone();
+    let theta = engine.init(0).unwrap();
+    for seq in [mc.seq_train, mc.seq_eval] {
+        let tokens = fake_tokens(&engine, seq, 2);
+        let lp = engine.token_logprobs(&theta, &tokens, seq).unwrap();
+        assert_eq!(lp.len(), mc.batch * (seq - 1));
+        assert!(lp.iter().all(|&x| x <= 1e-4 && x.is_finite()));
+        // near-uniform at init: mean logprob ~ -ln(vocab)
+        let mean = lp.iter().map(|&x| x as f64).sum::<f64>() / lp.len() as f64;
+        let uniform = -(mc.vocab as f64).ln();
+        assert!(
+            (mean - uniform).abs() < 1.0,
+            "mean lp {mean} vs uniform {uniform}"
+        );
+    }
+}
+
+#[test]
+fn features_shape_and_determinism() {
+    let Some(engine) = engine() else { return };
+    let mc = engine.model().clone();
+    let theta = engine.init(0).unwrap();
+    let tokens = fake_tokens(&engine, mc.prefix, 3);
+    let z = engine.features(&theta, &tokens).unwrap();
+    assert_eq!(z.len(), mc.batch * mc.d_model);
+    assert!(z.iter().all(|x| x.is_finite()));
+    let z2 = engine.features(&theta, &tokens).unwrap();
+    assert_eq!(z, z2);
+}
+
+#[test]
+fn grad_step_plus_adam_update_matches_train_step() {
+    let Some(mut engine) = engine() else { return };
+    engine.ensure_loaded("grad_step").unwrap();
+    engine.ensure_loaded("adam_update").unwrap();
+    let n = engine.manifest.total_params;
+    let theta = engine.init(5).unwrap();
+    let m = vec![0.0; n];
+    let v = vec![0.0; n];
+    let tokens = fake_tokens(&engine, engine.model().seq_train, 4);
+    let a = engine.train_step(&theta, &m, &v, 1.0, 1e-3, &tokens).unwrap();
+    let (g, loss) = engine.grad_step(&theta, &tokens).unwrap();
+    assert!((loss - a.loss).abs() < 1e-5);
+    let (theta_b, m_b, v_b) = engine.adam_update(&theta, &m, &v, &g, 1.0, 1e-3).unwrap();
+    for i in (0..n).step_by(97) {
+        assert!(
+            (a.theta[i] - theta_b[i]).abs() < 1e-5,
+            "theta[{i}] {} vs {}",
+            a.theta[i],
+            theta_b[i]
+        );
+        assert!((a.m[i] - m_b[i]).abs() < 1e-6);
+        assert!((a.v[i] - v_b[i]).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn concurrent_execution_is_safe_and_deterministic() {
+    // The worker pool shares one Engine across threads; PJRT must return
+    // identical results under concurrency.
+    let Some(engine) = engine() else { return };
+    let engine = std::sync::Arc::new(engine);
+    let mc = engine.model().clone();
+    let theta = engine.init(0).unwrap();
+    let tokens = fake_tokens(&engine, mc.seq_train, 6);
+    let expect = engine.token_logprobs(&theta, &tokens, mc.seq_train).unwrap();
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let engine = std::sync::Arc::clone(&engine);
+            let theta = theta.clone();
+            let tokens = tokens.clone();
+            let expect = expect.clone();
+            s.spawn(move || {
+                for _ in 0..3 {
+                    let lp = engine
+                        .token_logprobs(&theta, &tokens, engine.model().seq_train)
+                        .unwrap();
+                    assert_eq!(lp, expect);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn missing_entrypoint_is_a_clean_error() {
+    let Some(mut engine) = engine() else { return };
+    let err = engine.ensure_loaded("nonexistent").unwrap_err();
+    assert!(format!("{err:#}").contains("nonexistent"));
+}
+
+#[test]
+fn fused_train_steps_matches_per_step_loop() {
+    // §Perf optimization correctness: tau fused steps (lax.scan in HLO)
+    // must reproduce the per-step dispatch loop exactly.
+    let Some(engine) = engine() else { return };
+    let mc = engine.model().clone();
+    if mc.tau == 0 || !engine.has("train_steps") {
+        eprintln!("skipping: artifacts built without train_steps");
+        return;
+    }
+    let n = engine.manifest.total_params;
+    let theta0 = engine.init(3).unwrap();
+    let tau = mc.tau;
+    let mut rng = dipaco::util::rng::Rng::new(9);
+    let batches: Vec<Vec<i32>> = (0..tau)
+        .map(|_| {
+            (0..mc.batch * mc.seq_train)
+                .map(|_| rng.gen_range(mc.vocab) as i32)
+                .collect()
+        })
+        .collect();
+    let lrs: Vec<f32> = (0..tau).map(|i| 1e-3 - (i as f32) * 1e-5).collect();
+
+    // per-step loop
+    let (mut theta, mut m, mut v) = (theta0.clone(), vec![0.0; n], vec![0.0; n]);
+    let mut losses_a = Vec::new();
+    for i in 0..tau {
+        let out = engine
+            .train_step(&theta, &m, &v, (i + 1) as f32, lrs[i], &batches[i])
+            .unwrap();
+        theta = out.theta;
+        m = out.m;
+        v = out.v;
+        losses_a.push(out.loss);
+    }
+    // fused
+    let flat: Vec<i32> = batches.concat();
+    let (theta_b, m_b, v_b, losses_b) = engine
+        .train_steps(&theta0, &vec![0.0; n], &vec![0.0; n], 0.0, &lrs, &flat)
+        .unwrap();
+    assert_eq!(losses_b.len(), tau);
+    for i in 0..tau {
+        assert!(
+            (losses_a[i] - losses_b[i]).abs() < 1e-4,
+            "loss[{i}] {} vs {}",
+            losses_a[i],
+            losses_b[i]
+        );
+    }
+    for i in (0..n).step_by(131) {
+        assert!((theta[i] - theta_b[i]).abs() < 1e-4, "theta[{i}]");
+        assert!((m[i] - m_b[i]).abs() < 1e-5, "m[{i}]");
+        assert!((v[i] - v_b[i]).abs() < 1e-7, "v[{i}]");
+    }
+}

@@ -1,0 +1,338 @@
+//! Property-based invariants via the in-repo testkit (proptest stand-in):
+//! topology/module algebra, queue exactly-once retirement under random
+//! failure schedules, outer-averaging equivalences, checkpoint and JSON
+//! round-trips.
+
+use std::time::Duration;
+
+use dipaco::config::{StemPlacement, TopologySpec};
+use dipaco::coordinator::queue::TaskQueue;
+use dipaco::coordinator::task::{Task, TrainTask};
+use dipaco::optim::OuterAccumulator;
+use dipaco::params::checkpoint::Checkpoint;
+use dipaco::params::manifest::Manifest;
+use dipaco::testkit::forall;
+use dipaco::topology::{ModuleStore, Topology};
+use dipaco::util::json::Json;
+use dipaco::util::rng::Rng;
+
+/// Random miniature manifest mirroring the python layout.
+fn fake_manifest(rng: &mut Rng) -> Manifest {
+    let n_layers = 2 + rng.gen_range(5); // 2..=6
+    let d = 4 * (1 + rng.gen_range(3)); // 4,8,12
+    let mut leaves = Vec::new();
+    let mut off = 0usize;
+    let mut push = |name: String, shape: Vec<usize>, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        leaves.push(format!(
+            r#"{{"name":"{name}","offset":{off},"size":{size},"shape":[{}]}}"#,
+            shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        ));
+        *off += size;
+    };
+    push("embed.tok".into(), vec![32, d], &mut off);
+    push("embed.pos".into(), vec![16, d], &mut off);
+    for i in 0..n_layers {
+        push(format!("block{i}.attn.wq"), vec![d, d], &mut off);
+        push(format!("block{i}.ln1.scale"), vec![d], &mut off);
+        push(format!("block{i}.mlp.w1"), vec![d, 2 * d], &mut off);
+    }
+    push("head.w".into(), vec![d, 32], &mut off);
+    let text = format!(
+        r#"{{"preset":"prop","config":{{"vocab":32,"d_model":{d},"n_layers":{n_layers},
+          "n_heads":2,"d_ff":{f},"seq_train":16,"seq_eval":16,"batch":1,"prefix":4,"d_head":{dh}}},
+          "total_params":{off},"leaves":[{ls}],"entrypoints":[]}}"#,
+        f = 2 * d,
+        dh = d / 2,
+        ls = leaves.join(",")
+    );
+    Manifest::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+fn random_spec(rng: &mut Rng, n_layers: usize) -> TopologySpec {
+    let n_levels = 1 + rng.gen_range(n_layers.min(3));
+    let experts: Vec<usize> = (0..n_levels).map(|_| 1 + rng.gen_range(4)).collect();
+    let mut spec = TopologySpec::grid(experts);
+    if rng.f64() < 0.3 {
+        spec.stem = StemPlacement::PathSpecific;
+    }
+    if rng.f64() < 0.3 && n_layers > n_levels {
+        spec.path_specific_blocks = vec![rng.gen_range(n_layers)];
+    }
+    spec
+}
+
+#[test]
+fn prop_topology_covers_every_param_exactly_once() {
+    forall(
+        "coverage",
+        100,
+        40,
+        |rng| {
+            let man = fake_manifest(rng);
+            let spec = random_spec(rng, man.model.n_layers);
+            (man, spec)
+        },
+        |(man, spec)| {
+            let topo = Topology::build(man, spec);
+            let mut count = vec![0u32; man.total_params];
+            for level in &topo.levels {
+                for r in &level.segments {
+                    for i in r.clone() {
+                        count[i] += 1;
+                    }
+                }
+            }
+            if count.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{} params not covered exactly once",
+                    count.iter().filter(|&&c| c != 1).count()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_assemble_then_split_is_identity() {
+    forall(
+        "assemble/split",
+        200,
+        30,
+        |rng| {
+            let man = fake_manifest(rng);
+            let spec = random_spec(rng, man.model.n_layers);
+            let theta: Vec<f32> = (0..man.total_params).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (man, spec, theta)
+        },
+        |(man, spec, theta)| {
+            let topo = Topology::build(man, spec);
+            let store = ModuleStore::from_base(&topo, theta);
+            for p in 0..topo.paths {
+                let assembled = store.assemble(&topo, p);
+                if &assembled != theta {
+                    return Err(format!("path {p} assembly differs from base"));
+                }
+                // split of (theta - assembled) must be all zeros
+                for (mid, delta) in store.split_delta(&topo, p, theta, &assembled) {
+                    if delta.iter().any(|&x| x != 0.0) {
+                        return Err(format!("nonzero delta for module {mid}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_paths_through_consistent_with_enumeration() {
+    forall(
+        "paths_through",
+        300,
+        30,
+        |rng| {
+            let man = fake_manifest(rng);
+            let spec = random_spec(rng, man.model.n_layers);
+            (man, spec)
+        },
+        |(man, spec)| {
+            let topo = Topology::build(man, spec);
+            for m in topo.all_modules() {
+                let listed = topo.paths_of_module(m).len();
+                let claimed = topo.paths_through(m);
+                if listed != claimed {
+                    return Err(format!("module {m}: {listed} enumerated vs {claimed} claimed"));
+                }
+            }
+            // every path traverses exactly one expert per level
+            for p in 0..topo.paths {
+                let mods = topo.modules_of_path(p);
+                if mods.len() != topo.levels.len() {
+                    return Err(format!("path {p} traverses {} levels", mods.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_online_average_equals_batch() {
+    forall(
+        "online average",
+        400,
+        50,
+        |rng| {
+            let n = 1 + rng.gen_range(32);
+            let k = 1 + rng.gen_range(8);
+            let deltas: Vec<(Vec<f32>, f64)> = (0..k)
+                .map(|_| {
+                    (
+                        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                        0.5 + rng.f64() * 10.0,
+                    )
+                })
+                .collect();
+            deltas
+        },
+        |deltas| {
+            let n = deltas[0].0.len();
+            let mut acc = OuterAccumulator::new(n);
+            for (d, w) in deltas {
+                acc.add(d, *w);
+            }
+            let avg = acc.average();
+            let total_w: f64 = deltas.iter().map(|(_, w)| w).sum();
+            for j in 0..n {
+                let batch: f64 =
+                    deltas.iter().map(|(d, w)| d[j] as f64 * w).sum::<f64>() / total_w;
+                if (avg[j] as f64 - batch).abs() > 1e-4 {
+                    return Err(format!("dim {j}: {} vs {batch}", avg[j]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_queue_exactly_once_under_random_failures() {
+    forall(
+        "queue exactly-once",
+        500,
+        8,
+        |rng| {
+            let n_tasks = 5 + rng.gen_range(30);
+            let n_workers = 1 + rng.gen_range(6);
+            let fail_p = rng.f64() * 0.5;
+            (n_tasks as u64, n_workers, fail_p, rng.next_u64())
+        },
+        |&(n_tasks, n_workers, fail_p, seed)| {
+            let q = std::sync::Arc::new(TaskQueue::new(Duration::from_millis(25)));
+            for i in 0..n_tasks {
+                q.push(Task::Train(TrainTask {
+                    id: i + 1,
+                    phase: 0,
+                    path: i as usize,
+                    steps: 1,
+                    start_step: 0,
+                    ckpt_in: "x".into(),
+                    ckpt_out: "y".into(),
+                }));
+            }
+            let retired = std::sync::Arc::new(std::sync::Mutex::new(Vec::<u64>::new()));
+            std::thread::scope(|s| {
+                for w in 0..n_workers {
+                    let q = std::sync::Arc::clone(&q);
+                    let retired = std::sync::Arc::clone(&retired);
+                    s.spawn(move || {
+                        let mut rng = Rng::new(seed ^ w as u64);
+                        while let Some((lease, task)) =
+                            q.lease(&format!("w{w}"), Duration::from_millis(150))
+                        {
+                            let r = rng.f64();
+                            if r < fail_p / 2.0 {
+                                continue; // hard crash: lease expires
+                            } else if r < fail_p {
+                                q.fail(lease); // graceful preemption
+                                continue;
+                            }
+                            if q.complete(lease) {
+                                retired.lock().unwrap().push(task.id());
+                            }
+                        }
+                    });
+                }
+                q.wait_idle(Duration::from_millis(5));
+                q.close();
+            });
+            let mut ids = retired.lock().unwrap().clone();
+            ids.sort();
+            let expect: Vec<u64> = (1..=n_tasks).collect();
+            if ids == expect {
+                Ok(())
+            } else {
+                Err(format!("retired {} of {} tasks (dups or losses)", ids.len(), n_tasks))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_arbitrary_sections() {
+    forall(
+        "checkpoint roundtrip",
+        600,
+        25,
+        |rng| {
+            let n_sections = rng.gen_range(5);
+            (0..n_sections)
+                .map(|i| {
+                    let len = rng.gen_range(2000);
+                    (
+                        format!("sec{i}"),
+                        (0..len).map(|_| rng.normal_f32(0.0, 10.0)).collect::<Vec<f32>>(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        },
+        |sections| {
+            let mut ck = Checkpoint::new();
+            for (name, data) in sections {
+                ck = ck.with(name, data.clone());
+            }
+            let p = std::env::temp_dir().join(format!(
+                "dipaco-prop-ck-{}-{:x}.dpc",
+                std::process::id(),
+                sections.iter().map(|(_, d)| d.len()).sum::<usize>()
+            ));
+            ck.save(&p).map_err(|e| e.to_string())?;
+            let back = Checkpoint::load(&p).map_err(|e| e.to_string())?;
+            if back == ck {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.normal_f32(0.0, 1000.0) as f64 * 100.0).round() / 100.0),
+            3 => Json::Str(
+                (0..rng.gen_range(12))
+                    .map(|_| char::from_u32(32 + rng.gen_range(90) as u32).unwrap())
+                    .collect(),
+            ),
+            4 => Json::Arr((0..rng.gen_range(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), gen_value(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(
+        "json roundtrip",
+        700,
+        60,
+        |rng| gen_value(rng, 3),
+        |v| {
+            let s = v.to_string();
+            let back = Json::parse(&s).map_err(|e| e.to_string())?;
+            if &back == v {
+                Ok(())
+            } else {
+                Err(format!("{s} reparsed differently"))
+            }
+        },
+    );
+}
