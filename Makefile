@@ -1,0 +1,25 @@
+# DiPaCo reproduction — build entrypoints.
+#
+# `make artifacts` is the only step that runs Python: it AOT-lowers the
+# JAX/Pallas model to HLO text under artifacts/<preset>/ (see DESIGN.md,
+# "AOT artifact pipeline"). Everything after is `cargo`.
+
+PYTHON ?= python3
+PRESETS ?= test path large
+
+.PHONY: artifacts build test bench fmt
+
+artifacts:
+	@for p in $(PRESETS); do \
+		echo "== lowering preset $$p"; \
+		(cd python && $(PYTHON) -m compile.aot --preset $$p --out ../artifacts) || exit 1; \
+	done
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check

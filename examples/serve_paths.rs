@@ -2,123 +2,103 @@
 //! and served independently, with text routed to each path via a router";
 //! only a single 150M path executes per query, never the full mixture.
 //!
-//! Loads the cached 2x2 run (trains a short one if missing), instantiates
-//! one "path server" per path (each owns only ITS parameters), routes a
-//! stream of incoming documents by prefix features, and reports
-//! per-request latency percentiles + throughput.
+//! Thin client of the `serve::` subsystem (see DESIGN.md, "serve"): loads
+//! the cached 2x2 run (trains a short one if missing), starts one path
+//! server per path (each owns only ITS parameters), routes a stream of
+//! incoming documents INDIVIDUALLY by prefix features — the old inline
+//! demo executed whole batches on their first document's path — and
+//! reports per-request latency percentiles + throughput from `ServeStats`.
 //!
 //! Run: `cargo run --release --example serve_paths` (after train_dipaco)
 
 use anyhow::Result;
-use std::sync::Arc;
 use std::time::Instant;
 
-use dipaco::config::TopologySpec;
+use dipaco::config::ServeConfig;
 use dipaco::metrics::{print_table, results_dir};
-use dipaco::train::pipeline::{
-    cached_dipaco, default_corpus, default_schedule, std_recipe, Env, TrainedPaths,
-};
-use dipaco::util::stats::percentile;
+use dipaco::serve::server::{engine_executors, Server};
+use dipaco::train::pipeline::{default_corpus, serve_demo_paths, Env};
 
 const DOCS: usize = 2500;
+const REQUESTS: usize = 96;
 
 fn main() -> Result<()> {
     let env = Env::new("path", &default_corpus(DOCS), results_dir().join("runs"))?;
     let mc = env.engine.model().clone();
 
-    // load (or train) a small DiPaCo
-    let trained: TrainedPaths = match TrainedPaths::load(&env, "serve-2x2") {
-        Some(t) => t,
-        None => {
-            let total = 200 + 60;
-            let sched = default_schedule(total);
-            let base = env.base_model(200, &sched, 7)?;
-            let recipe = std_recipe(
-                &env,
-                TopologySpec::grid(vec![2, 2]),
-                Some((2, 2)),
-                total,
-                1,
-                false,
-                "serve-2x2",
-            );
-            cached_dipaco(&env, "serve-2x2", &recipe, base, 3, 0)?
-        }
-    };
-    let paths: Vec<usize> = {
-        let mut p: Vec<usize> = trained.thetas.keys().copied().collect();
-        p.sort();
-        p
-    };
+    let trained = serve_demo_paths(&env, "serve-2x2")?;
     println!(
         "serving {} paths of {} params each (mixture never materialized)",
-        paths.len(),
+        trained.thetas.len(),
         env.engine.manifest.total_params
     );
 
-    // request stream: validation docs, batched per routed path
-    let requests: Vec<usize> = env.corpus.valid.iter().copied().take(96).collect();
-    let engine = Arc::clone(&env.engine);
+    // request stream: validation docs
+    let requests: Vec<usize> = env.corpus.valid.iter().copied().take(REQUESTS).collect();
 
+    // step 1: per-document routing features (router admission cost)
     let t0 = Instant::now();
-    // step 1: route each request from its prefix (router cost)
     let feats = dipaco::routing::features::extract_features(
-        &engine,
+        &env.engine,
         &trained.base,
         &requests,
         &env.corpus,
     )?;
-    let routed: Vec<usize> = feats.iter().map(|z| trained.router.assign(z)).collect();
     let route_time = t0.elapsed();
 
-    // step 2: each path server scores its own queue
-    let mut latencies: Vec<f64> = Vec::new();
-    let mut per_path = vec![0usize; paths.len()];
+    // step 2: the serve:: subsystem — each document goes to ITS OWN
+    // assigned path's queue; partial micro-batches flush on deadline.
+    let cfg = ServeConfig::default();
+    let server = Server::start(
+        &cfg,
+        trained.router.clone(),
+        engine_executors(&env.engine, trained.thetas)?,
+    );
+    // The park policy can still reject if a path stays saturated past the
+    // admission timeout — count that as backpressure, don't crash.
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for (i, (&d, z)) in requests.iter().zip(&feats).enumerate() {
+        match server.submit(z, env.corpus.sequence(d, mc.seq_eval)) {
+            Ok(t) => tickets.push((i, t)),
+            Err(e) => {
+                eprintln!("request rejected: {e}");
+                rejected += 1;
+            }
+        }
+    }
+
     let mut total_nll = 0.0f64;
     let mut total_tok = 0usize;
-    let serve_t0 = Instant::now();
-    for (batch_start, chunk) in requests.chunks(mc.batch).enumerate() {
-        let t = Instant::now();
-        // group this batch per path (a real deployment would queue per server)
-        for (i, &doc) in chunk.iter().enumerate() {
-            let gi = batch_start * mc.batch + i;
-            per_path[routed[gi]] += 1;
-        }
-        // serve: execute the (single) assigned path per doc, batched
-        let mut toks = Vec::with_capacity(mc.batch * mc.seq_eval);
-        for &d in chunk {
-            toks.extend_from_slice(&env.corpus.sequence(d, mc.seq_eval));
-        }
-        for _ in chunk.len()..mc.batch {
-            toks.extend_from_slice(&env.corpus.sequence(requests[0], mc.seq_eval));
-        }
-        let path = routed[batch_start * mc.batch]; // batch-major routing
-        let lp = engine.token_logprobs(&trained.thetas[&path], &toks, mc.seq_eval)?;
-        let (nll, n) =
-            dipaco::eval::nll_masked(&lp, mc.batch, mc.seq_eval, mc.prefix, chunk.len());
-        total_nll += nll;
-        total_tok += n;
-        latencies.push(t.elapsed().as_secs_f64() * 1e3);
+    for (i, t) in tickets {
+        // regression guard for the old batch-major bug: the answering
+        // path must be the one assigned to THIS document's features
+        let expect = trained.router.assign(&feats[i]);
+        let resp = t.wait().expect("server answers every admitted request");
+        assert_eq!(
+            resp.path, expect,
+            "doc {i} served by path {} but routed to {expect}",
+            resp.path
+        );
+        total_nll += resp.nll;
+        total_tok += resp.tokens_scored;
     }
-    let serve_time = serve_t0.elapsed();
-    let served_tokens = requests.len() * (mc.seq_eval - mc.prefix);
+    let report = server.shutdown();
+    assert_eq!(report.served as usize, requests.len() - rejected);
 
-    print_table(
-        "serving stats",
-        &["metric", "value"],
-        &[
-            vec!["requests".into(), requests.len().to_string()],
-            vec!["routing time (all)".into(), format!("{:.1} ms", route_time.as_secs_f64() * 1e3)],
-            vec!["batch latency p50".into(), format!("{:.1} ms", percentile(&latencies, 50.0))],
-            vec!["batch latency p95".into(), format!("{:.1} ms", percentile(&latencies, 95.0))],
-            vec![
-                "throughput".into(),
-                format!("{:.0} tok/s", served_tokens as f64 / serve_time.as_secs_f64()),
-            ],
-            vec!["per-path load".into(), format!("{per_path:?}")],
-            vec!["served ppl".into(), format!("{:.3}", (total_nll / total_tok as f64).exp())],
+    let mut rows = vec![
+        vec!["requests".into(), requests.len().to_string()],
+        vec![
+            "routing time (all)".into(),
+            format!("{:.1} ms", route_time.as_secs_f64() * 1e3),
         ],
-    );
-    println!("\nserve_paths OK");
+    ];
+    rows.extend(report.rows());
+    rows.push(vec![
+        "served ppl".into(),
+        format!("{:.3}", (total_nll / total_tok.max(1) as f64).exp()),
+    ]);
+    print_table("serving stats", &["metric", "value"], &rows);
+    println!("\nserve_paths OK (per-document routing honored)");
     Ok(())
 }

@@ -1,0 +1,173 @@
+//! §2.6 serving bench — tok/s and p50/p95/p99 latency of the `serve::`
+//! subsystem under skewed per-path load, on a synthetic executor with a
+//! fixed per-batch + per-row cost (so the bench isolates queueing,
+//! batching, and routing overhead from PJRT compute).
+//!
+//! Scenarios: uniform vs zipf-skewed path popularity, park vs reject
+//! backpressure under overload, and the latency/throughput trade of the
+//! micro-batch flush deadline.
+
+use std::time::{Duration, Instant};
+
+use dipaco::benchkit::{header, Bencher};
+use dipaco::config::ServeConfig;
+use dipaco::serve::server::{PathExecutor, Server};
+use dipaco::serve::stats::ServeReport;
+use dipaco::testkit::routers::{one_hot, one_hot_router};
+use dipaco::util::rng::Rng;
+
+const PATHS: usize = 8;
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+const REQUESTS: usize = 800;
+const CLIENTS: usize = 4;
+
+/// Deterministic-cost executor: busy-waits per_batch + rows * per_row.
+struct SynthExec {
+    per_batch: Duration,
+    per_row: Duration,
+}
+
+impl PathExecutor for SynthExec {
+    fn batch(&self) -> usize {
+        BATCH
+    }
+    fn seq(&self) -> usize {
+        SEQ
+    }
+    fn forward(&mut self, _toks: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+        let end = Instant::now() + self.per_batch + self.per_row * rows as u32;
+        while Instant::now() < end {
+            std::hint::spin_loop();
+        }
+        Ok((0..rows).map(|_| (1.0, SEQ - 1)).collect())
+    }
+}
+
+fn synth_fleet() -> Vec<SynthExec> {
+    (0..PATHS)
+        .map(|_| SynthExec {
+            per_batch: Duration::from_micros(300),
+            per_row: Duration::from_micros(40),
+        })
+        .collect()
+}
+
+/// Path popularity: uniform (skew 0) or zipf-like 1/(p+1)^skew.
+fn path_stream(skew: f64, seed: u64) -> Vec<usize> {
+    let w: Vec<f64> = (0..PATHS).map(|p| 1.0 / ((p + 1) as f64).powf(skew)).collect();
+    let total: f64 = w.iter().sum();
+    let mut rng = Rng::new(seed);
+    (0..REQUESTS)
+        .map(|_| {
+            let mut x = rng.f64() * total;
+            for (p, wp) in w.iter().enumerate() {
+                x -= wp;
+                if x <= 0.0 {
+                    return p;
+                }
+            }
+            PATHS - 1
+        })
+        .collect()
+}
+
+/// Full serve round: start, submit from CLIENTS threads via the router,
+/// drain, shut down. Returns the final report.
+fn drive(cfg: &ServeConfig, stream: &[usize]) -> ServeReport {
+    let server = Server::start(cfg, one_hot_router(PATHS), synth_fleet());
+    std::thread::scope(|s| {
+        for w in 0..CLIENTS {
+            let server = &server;
+            s.spawn(move || {
+                let mut tickets = Vec::new();
+                for i in (w..stream.len()).step_by(CLIENTS) {
+                    let z = one_hot(PATHS, stream[i]);
+                    if let Ok(t) = server.submit(&z, vec![0i32; SEQ]) {
+                        tickets.push(t);
+                    }
+                }
+                for t in tickets {
+                    let _ = t.wait();
+                }
+            });
+        }
+    });
+    server.shutdown()
+}
+
+fn report_line(name: &str, r: &ServeReport) -> String {
+    println!(
+        "  {name}: p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  {:.0} tok/s  fill {:.1}  \
+         served {}  rejected {}  load {:?}",
+        r.p50_ms, r.p95_ms, r.p99_ms, r.tok_per_s, r.mean_batch_fill, r.served, r.rejected,
+        r.per_path_served
+    );
+    format!(
+        "{name},{:.4},{:.4},{:.4},{:.0},{},{}",
+        r.p50_ms, r.p95_ms, r.p99_ms, r.tok_per_s, r.served, r.rejected
+    )
+}
+
+fn main() {
+    println!("path-serving bench (paper §2.6), {PATHS} paths, {REQUESTS} requests\n");
+    let mut csv =
+        vec!["scenario,p50_ms,p95_ms,p99_ms,tok_per_s,served,rejected".to_string()];
+
+    let park = ServeConfig::default();
+    let tight = ServeConfig {
+        max_wait_ms: 0,
+        ..Default::default()
+    };
+    let overload = ServeConfig {
+        queue_cap: 4,
+        reject_on_full: true,
+        ..Default::default()
+    };
+    let uniform = path_stream(0.0, 1);
+    let skewed = path_stream(1.2, 2);
+
+    println!("representative runs:");
+    for (name, cfg, stream) in [
+        ("uniform load, park, 15ms window", &park, &uniform),
+        ("zipf-1.2 load, park, 15ms window", &park, &skewed),
+        ("uniform load, park, 0ms window", &tight, &uniform),
+        ("zipf-1.2 overload, reject, cap 4", &overload, &skewed),
+    ] {
+        let r = drive(cfg, stream);
+        csv.push(report_line(name, &r));
+        assert_eq!(
+            r.served + r.rejected,
+            REQUESTS as u64,
+            "every request is served or visibly rejected"
+        );
+    }
+
+    println!("\nwall-clock per full round ({REQUESTS} requests):");
+    header();
+    for (name, cfg, stream) in [
+        ("serve round: uniform, park", &park, &uniform),
+        ("serve round: zipf-1.2, park", &park, &skewed),
+        ("serve round: zipf-1.2, reject", &overload, &skewed),
+    ] {
+        let r = Bencher::new(name)
+            .warmup(1)
+            .runs(3, 10)
+            .budget(Duration::from_secs(6))
+            .throughput(REQUESTS as f64)
+            .run(|| {
+                std::hint::black_box(drive(cfg, stream).served);
+            });
+        csv.push(format!(
+            "{name} (wall),{:.4},{:.4},0,{:.0},{REQUESTS},0",
+            r.mean_s * 1e3,
+            r.p95_s * 1e3,
+            r.throughput.unwrap_or(0.0)
+        ));
+    }
+
+    let out = dipaco::metrics::results_dir().join("bench_serve.csv");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("\ncsv: {}", out.display());
+}

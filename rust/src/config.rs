@@ -297,6 +297,79 @@ impl Default for CorpusConfig {
     }
 }
 
+/// Serving subsystem settings (paper §2.6 deployment: independent path
+/// servers behind a document router — see DESIGN.md, "serve").
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    /// Bounded per-path queue capacity (admission backpressure).
+    pub queue_cap: usize,
+    /// Micro-batch flush size; 0 = the engine's compiled batch shape.
+    /// Values above the compiled batch are clamped to it.
+    pub max_batch: usize,
+    /// Micro-batch flush deadline, ms from the first queued document.
+    pub max_wait_ms: u64,
+    /// Backpressure policy when a path queue is full: reject immediately
+    /// (true) or park admission until space frees (false).
+    pub reject_on_full: bool,
+    /// Park timeout for the block policy, ms; parked admissions that
+    /// outlast it are rejected as overloaded.
+    pub admission_timeout_ms: u64,
+    /// Concurrent admission (client) threads the CLI driver and bench use
+    /// to generate traffic. Path-server workers are always one per path.
+    pub workers: usize,
+    /// Worker housekeeping tick when its queue is idle, ms.
+    pub idle_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            queue_cap: 64,
+            max_batch: 0,
+            max_wait_ms: 15,
+            reject_on_full: false,
+            admission_timeout_ms: 1000,
+            workers: 4,
+            idle_ms: 50,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+            ("max_batch", Json::num(self.max_batch as f64)),
+            ("max_wait_ms", Json::num(self.max_wait_ms as f64)),
+            ("reject_on_full", Json::Bool(self.reject_on_full)),
+            (
+                "admission_timeout_ms",
+                Json::num(self.admission_timeout_ms as f64),
+            ),
+            ("workers", Json::num(self.workers as f64)),
+            ("idle_ms", Json::num(self.idle_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let d = ServeConfig::default();
+        let get = |k: &str, dv: usize| v.get(k).and_then(|x| x.as_usize()).unwrap_or(dv);
+        Ok(ServeConfig {
+            queue_cap: get("queue_cap", d.queue_cap).max(1),
+            max_batch: get("max_batch", d.max_batch),
+            max_wait_ms: get("max_wait_ms", d.max_wait_ms as usize) as u64,
+            reject_on_full: v
+                .get("reject_on_full")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.reject_on_full),
+            admission_timeout_ms: get("admission_timeout_ms", d.admission_timeout_ms as usize)
+                as u64,
+            workers: get("workers", d.workers).max(1),
+            idle_ms: get("idle_ms", d.idle_ms as usize) as u64,
+        })
+    }
+}
+
 /// Coordinator runtime settings (paper §3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -373,6 +446,24 @@ mod tests {
             let lr = d.lr_at(s);
             assert!((0.0..=1.0 + 1e-6).contains(&lr), "step {s} lr {lr}");
         }
+    }
+
+    #[test]
+    fn serve_config_json_roundtrip() {
+        let s = ServeConfig {
+            queue_cap: 128,
+            max_batch: 8,
+            max_wait_ms: 5,
+            reject_on_full: true,
+            admission_timeout_ms: 250,
+            workers: 7,
+            idle_ms: 9,
+        };
+        let s2 = ServeConfig::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(s, s2);
+        // missing fields fall back to defaults
+        let d = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, ServeConfig::default());
     }
 
     #[test]

@@ -13,6 +13,16 @@ use std::collections::HashMap;
 use crate::data::corpus::Corpus;
 use crate::runtime::engine::Engine;
 
+/// Prefix-masked NLL of ONE `[seq-1]` logprob row: targets are token
+/// positions `prefix..seq`, and lp column `t - 1` scores token `t`. The
+/// single source of the masking convention — `nll_masked` and the
+/// serving executor both build on it.
+pub fn nll_row(row: &[f32], seq: usize, prefix: usize) -> (f64, usize) {
+    debug_assert_eq!(row.len(), seq - 1);
+    let nll: f64 = (prefix..seq).map(|t| -(row[t - 1] as f64)).sum();
+    (nll, seq - prefix)
+}
+
 /// Sum of negative logprobs + token count over targets with index >=
 /// `prefix`, for the first `rows` rows of a `[batch, seq-1]` lp buffer.
 pub fn nll_masked(
@@ -26,10 +36,9 @@ pub fn nll_masked(
     let mut nll = 0.0f64;
     let mut count = 0usize;
     for b in 0..rows.min(batch) {
-        for t in prefix..seq {
-            nll -= lp[b * (seq - 1) + (t - 1)] as f64;
-            count += 1;
-        }
+        let (n, c) = nll_row(&lp[b * (seq - 1)..(b + 1) * (seq - 1)], seq, prefix);
+        nll += n;
+        count += c;
     }
     (nll, count)
 }

@@ -32,6 +32,9 @@
 //!   DiPaCo, and the fully-synchronous ablation (§4.5).
 //! * [`eval`] — validation perplexity (prefix-masked), frequent re-routing,
 //!   early stopping.
+//! * [`serve`] — test-time path serving (paper §2.6): per-document router
+//!   admission, bounded per-path queues, deadline micro-batching, one
+//!   path-server worker per path owning only its own theta.
 //! * [`benchkit`] / [`testkit`] — criterion/proptest stand-ins.
 
 pub mod util {
@@ -92,6 +95,13 @@ pub mod train {
 
 pub mod eval;
 pub mod metrics;
+
+pub mod serve {
+    pub mod batcher;
+    pub mod request;
+    pub mod server;
+    pub mod stats;
+}
 
 pub mod benchkit;
 pub mod testkit;

@@ -6,6 +6,7 @@
 //!   pretrain [--steps N]         pretrain the base dense model
 //!   train    [--grid 4x4 ...]    full DiPaCo pipeline (route + phases)
 //!   eval     [--ckpt FILE]       evaluate a checkpoint
+//!   serve    [--requests N ...]  serve paths behind the router (§2.6)
 //!
 //! The paper's tables/figures regenerate via the dedicated drivers in
 //! `examples/` (see DESIGN.md's experiment index); this binary is the
@@ -14,11 +15,11 @@
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
-use dipaco::config::{RunConfig, StemPlacement, TopologySpec};
+use dipaco::config::{RunConfig, ServeConfig, StemPlacement, TopologySpec};
 use dipaco::metrics;
 use dipaco::runtime::engine::{artifact_dir, Engine};
 use dipaco::train::dipaco::DipacoRecipe;
-use dipaco::train::pipeline::{default_corpus, default_schedule, Env};
+use dipaco::train::pipeline::{default_corpus, default_schedule, serve_demo_paths, Env};
 use dipaco::util::cli::Args;
 
 fn main() {
@@ -42,6 +43,7 @@ fn run() -> Result<()> {
         Some("pretrain") => pretrain_cmd(&args),
         Some("train") => train_cmd(&args),
         Some("eval") => eval_cmd(&args),
+        Some("serve") => serve_cmd(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
@@ -63,7 +65,15 @@ fn run() -> Result<()> {
                  --overlap N              top-n shard overlap (default 1)\n\
                  --disc-phases N          discriminative phases (default 1)\n\
                  --early-stop             enable per-shard early stopping\n\
-                 --path-specific          path-specific stem (flat-MoE style)"
+                 --path-specific          path-specific stem (flat-MoE style)\n\
+                 \n\
+                 serve options:\n\
+                 --requests N             request stream size (default 96)\n\
+                 --queue-cap N            per-path queue capacity (default 64)\n\
+                 --max-batch N            micro-batch flush size (default engine batch)\n\
+                 --max-wait-ms N          micro-batch flush deadline (default 15)\n\
+                 --serve-workers N        concurrent client threads (default 4)\n\
+                 --reject                 reject-on-full backpressure (default park)"
             );
             Ok(())
         }
@@ -192,6 +202,111 @@ fn train_cmd(args: &Args) -> Result<()> {
             "  phase {:>2}: loss {:.4}  wall {:.1}s  outer {:.2}s  requeues {}",
             s.phase, s.mean_train_loss, s.wallclock_s, s.outer_update_s, s.requeues
         );
+    }
+    Ok(())
+}
+
+/// Serve a stream of validation documents through the §2.6 subsystem:
+/// per-document router admission, bounded per-path queues, one path
+/// server per path, deadline micro-batching. Reports latency percentiles
+/// and throughput from the shared `ServeStats`.
+fn serve_cmd(args: &Args) -> Result<()> {
+    use dipaco::serve::server::{engine_executors, Server};
+
+    let preset = args.get_or("preset", "path");
+    let n_requests = args.usize("requests", 96);
+    let env = Env::new(
+        preset,
+        &default_corpus(args.usize("docs", 2500)),
+        metrics::results_dir().join("runs"),
+    )?;
+    let trained = serve_demo_paths(&env, "serve-2x2")?;
+    let cfg = ServeConfig {
+        queue_cap: args.usize("queue-cap", 64),
+        max_batch: args.usize("max-batch", 0),
+        max_wait_ms: args.u64("max-wait-ms", 15),
+        reject_on_full: args.flag("reject"),
+        workers: args.usize("serve-workers", 4).max(1),
+        ..Default::default()
+    };
+    let seq = env.engine.model().seq_eval;
+
+    // Request stream: validation docs, cycled up to --requests.
+    let docs: Vec<usize> = env
+        .corpus
+        .valid
+        .iter()
+        .copied()
+        .cycle()
+        .take(n_requests)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let feats = dipaco::routing::features::extract_features(
+        &env.engine,
+        &trained.base,
+        &docs,
+        &env.corpus,
+    )?;
+    let route_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let server = Server::start(
+        &cfg,
+        trained.router.clone(),
+        engine_executors(&env.engine, trained.thetas)?,
+    );
+
+    // cfg.workers concurrent clients: each submits its slice, then waits.
+    let clients = cfg.workers;
+    let (total_nll, total_tok, rejects) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|w| {
+                let server = &server;
+                let docs = &docs;
+                let feats = &feats;
+                let corpus = &env.corpus;
+                s.spawn(move || {
+                    let mut tickets = Vec::new();
+                    let mut rejects = 0usize;
+                    for i in (w..docs.len()).step_by(clients) {
+                        let toks = corpus.sequence(docs[i], seq);
+                        match server.submit(&feats[i], toks) {
+                            Ok(t) => tickets.push(t),
+                            Err(_) => rejects += 1,
+                        }
+                    }
+                    let mut nll = 0.0f64;
+                    let mut tok = 0usize;
+                    for t in tickets {
+                        if let Some(r) = t.wait() {
+                            nll += r.nll;
+                            tok += r.tokens_scored;
+                        }
+                    }
+                    (nll, tok, rejects)
+                })
+            })
+            .collect();
+        let mut acc = (0.0f64, 0usize, 0usize);
+        for h in handles {
+            let (n, t, r) = h.join().expect("client thread panicked");
+            acc = (acc.0 + n, acc.1 + t, acc.2 + r);
+        }
+        acc
+    });
+    let report = server.shutdown();
+
+    let mut rows = vec![
+        vec!["requests".into(), n_requests.to_string()],
+        vec!["routing time (all)".into(), format!("{route_ms:.1} ms")],
+    ];
+    rows.extend(report.rows());
+    rows.push(vec![
+        "served ppl".into(),
+        format!("{:.3}", (total_nll / (total_tok.max(1)) as f64).exp()),
+    ]);
+    metrics::print_table("serving stats", &["metric", "value"], &rows);
+    if rejects > 0 {
+        println!("({rejects} requests rejected by backpressure)");
     }
     Ok(())
 }

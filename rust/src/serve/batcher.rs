@@ -1,0 +1,372 @@
+//! Bounded per-path queues with deadline-based micro-batching.
+//!
+//! Each path server owns one [`BoundedQueue`]: admission pushes documents
+//! (non-blocking reject or parked push, the backpressure knob), the
+//! worker drains micro-batches with [`BoundedQueue::pop_batch`] — flush
+//! when `max_batch` documents are waiting OR `max_wait` has elapsed since
+//! the first document of the batch was taken, whichever comes first. The
+//! compiled HLO batch shape is fixed, so partial batches are padded to
+//! full rows with [`pad_batch`] (pad rows are excluded from scoring by
+//! the caller, same convention as `eval::eval_docs`).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Push failure, returning the rejected item to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at capacity (after any park timeout elapsed).
+    Full(T),
+    /// Queue closed for shutdown.
+    Closed(T),
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPSC bounded queue: many admission threads push, one path worker pops.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be >= 1");
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(cap),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push (reject-on-full backpressure). On success returns
+    /// the queue depth INCLUDING the new item.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back(item);
+        let depth = g.items.len();
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Parked push (block-on-full backpressure): waits up to `timeout` for
+    /// space, then gives up with `Full`.
+    pub fn push(&self, item: T, timeout: Duration) -> Result<usize, PushError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.items.len() < self.cap {
+                g.items.push_back(item);
+                let depth = g.items.len();
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(depth);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Full(item));
+            }
+            let (g2, _) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Close for shutdown: pushes fail from now on; the worker drains what
+    /// is left and then gets `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Drain one micro-batch.
+    ///
+    /// Blocks up to `idle_timeout` for the first item; an idle tick
+    /// returns `Some(vec![])` so the worker can do housekeeping and call
+    /// again. Once the first item is taken, keeps collecting until
+    /// `max_batch` items are in hand or `max_wait` has elapsed since the
+    /// first item was taken (the flush deadline). Returns `None` only when
+    /// the queue is closed AND drained.
+    pub fn pop_batch(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+        idle_timeout: Duration,
+    ) -> Option<Vec<T>> {
+        assert!(max_batch >= 1);
+        let idle_deadline = Instant::now() + idle_timeout;
+        let mut g = self.inner.lock().unwrap();
+        // Phase 1: wait for the first item.
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= idle_deadline {
+                return Some(Vec::new()); // idle tick
+            }
+            let (g2, _) = self.not_empty.wait_timeout(g, idle_deadline - now).unwrap();
+            g = g2;
+        }
+        // Phase 2: collect until size or deadline.
+        let flush_deadline = Instant::now() + max_wait;
+        let mut out = Vec::with_capacity(max_batch);
+        loop {
+            while out.len() < max_batch {
+                match g.items.pop_front() {
+                    Some(item) => out.push(item),
+                    None => break,
+                }
+            }
+            if !out.is_empty() {
+                self.not_full.notify_all();
+            }
+            if out.len() >= max_batch || g.closed {
+                return Some(out);
+            }
+            let now = Instant::now();
+            if now >= flush_deadline {
+                return Some(out);
+            }
+            let (g2, _) = self
+                .not_empty
+                .wait_timeout(g, flush_deadline - now)
+                .unwrap();
+            g = g2;
+        }
+    }
+}
+
+/// Pad a partial micro-batch of equal-length token rows to the compiled
+/// `batch` row count by repeating the first row (same convention as
+/// `eval::eval_docs`, which pads with doc 0). Returns the flattened
+/// `[batch, seq]` buffer; the caller scores only the first `rows.len()`
+/// rows.
+pub fn pad_batch(rows: &[&[i32]], batch: usize) -> Vec<i32> {
+    assert!(!rows.is_empty(), "cannot pad an empty batch");
+    assert!(rows.len() <= batch, "{} rows > batch {batch}", rows.len());
+    let seq = rows[0].len();
+    let mut out = Vec::with_capacity(batch * seq);
+    for r in rows {
+        assert_eq!(r.len(), seq, "ragged token rows in one batch");
+        out.extend_from_slice(r);
+    }
+    for _ in rows.len()..batch {
+        out.extend_from_slice(rows[0]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn flush_on_size_does_not_wait_for_deadline() {
+        let q = BoundedQueue::new(16);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(4, Duration::from_secs(5), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "full batch must flush immediately"
+        );
+    }
+
+    #[test]
+    fn flush_on_deadline_returns_partial_batch() {
+        let q = BoundedQueue::new(16);
+        q.try_push(42).unwrap();
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(8, Duration::from_millis(40), Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(b, vec![42]);
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Duration::from_millis(30),
+            "partial batch flushed before the deadline ({waited:?})"
+        );
+    }
+
+    #[test]
+    fn idle_tick_then_closed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let b = q
+            .pop_batch(4, Duration::from_millis(1), Duration::from_millis(5))
+            .unwrap();
+        assert!(b.is_empty(), "idle tick is an empty batch, not None");
+        q.close();
+        assert!(q
+            .pop_batch(4, Duration::from_millis(1), Duration::from_millis(5))
+            .is_none());
+    }
+
+    #[test]
+    fn close_drains_remaining_items_first() {
+        let q = BoundedQueue::new(8);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        let b = q
+            .pop_batch(8, Duration::from_millis(1), Duration::from_millis(5))
+            .unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(q
+            .pop_batch(8, Duration::from_millis(1), Duration::from_millis(5))
+            .is_none());
+    }
+
+    #[test]
+    fn bounded_reject_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        assert_eq!(q.try_push(2).unwrap(), 2);
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        // parked push with a short timeout also gives up
+        match q.push(3, Duration::from_millis(20)) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parked_push_unblocks_when_worker_drains() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push(2, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        let b = q
+            .pop_batch(1, Duration::from_millis(1), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(h.join().unwrap().is_ok(), "parked push must succeed after drain");
+    }
+
+    #[test]
+    fn push_after_close_is_rejected() {
+        let q = BoundedQueue::new(2);
+        q.close();
+        assert!(matches!(q.try_push(1), Err(PushError::Closed(1))));
+        assert!(matches!(
+            q.push(1, Duration::from_millis(1)),
+            Err(PushError::Closed(1))
+        ));
+    }
+
+    #[test]
+    fn pad_batch_repeats_first_row() {
+        let r0: &[i32] = &[1, 2, 3];
+        let r1: &[i32] = &[4, 5, 6];
+        let out = pad_batch(&[r0, r1], 4);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 1, 2, 3, 1, 2, 3]);
+        // already full: no padding
+        assert_eq!(pad_batch(&[r0], 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn pad_batch_rejects_ragged_rows() {
+        let r0: &[i32] = &[1, 2, 3];
+        let r1: &[i32] = &[4, 5];
+        let _ = pad_batch(&[r0, r1], 4);
+    }
+
+    // Property (testkit): any interleaving of pushes and batch pops
+    // preserves FIFO order, never exceeds capacity, and loses nothing.
+    #[test]
+    fn prop_fifo_bounded_lossless() {
+        crate::testkit::forall(
+            "bounded queue is FIFO, bounded, lossless",
+            11,
+            40,
+            |rng| {
+                let cap = 1 + rng.gen_range(6);
+                let max_batch = 1 + rng.gen_range(5);
+                let ops: Vec<bool> = (0..30).map(|_| rng.f64() < 0.6).collect(); // true = push
+                (cap, max_batch, ops)
+            },
+            |&(cap, max_batch, ref ops)| {
+                let q = BoundedQueue::new(cap);
+                let mut next = 0u32;
+                let mut accepted = 0usize;
+                let mut popped: Vec<u32> = Vec::new();
+                for &is_push in ops {
+                    if is_push {
+                        if q.try_push(next).is_ok() {
+                            accepted += 1;
+                        }
+                        if q.len() > cap {
+                            return Err(format!("depth {} > cap {cap}", q.len()));
+                        }
+                        next += 1;
+                    } else {
+                        let b = q
+                            .pop_batch(max_batch, Duration::ZERO, Duration::ZERO)
+                            .unwrap_or_default();
+                        if b.len() > max_batch {
+                            return Err(format!("batch {} > max {max_batch}", b.len()));
+                        }
+                        popped.extend(b);
+                    }
+                }
+                q.close();
+                while let Some(b) = q.pop_batch(max_batch, Duration::ZERO, Duration::ZERO) {
+                    popped.extend(b);
+                }
+                if popped.len() != accepted {
+                    return Err(format!("popped {} != accepted {accepted}", popped.len()));
+                }
+                if popped.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err(format!("FIFO order violated: {popped:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

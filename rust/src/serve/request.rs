@@ -1,0 +1,153 @@
+//! Serving request/response types (paper §2.6: each query is routed to
+//! ONE path and served by that path's server alone).
+//!
+//! A request is a single document: its token window plus the path the
+//! admission router chose for it. Responses travel back to the submitting
+//! client over a per-request mpsc channel wrapped in a [`Ticket`], so the
+//! path-server workers never block on slow clients.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// One admitted document, queued on its assigned path's server.
+pub struct ServeRequest {
+    pub id: u64,
+    /// Token window, exactly `seq` tokens (the admission front-end
+    /// validates the length; the batcher only pads whole rows).
+    pub tokens: Vec<i32>,
+    /// Path chosen for THIS document by `router::assign` at admission —
+    /// never inherited from a batch neighbour.
+    pub path: usize,
+    /// Admission timestamp; end-to-end latency is measured from here.
+    pub accepted_at: Instant,
+    pub(crate) tx: Sender<ServeResponse>,
+}
+
+/// Scoring result for one request.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub id: u64,
+    /// Path that actually executed the document.
+    pub path: usize,
+    /// Summed negative log-likelihood over the scored targets.
+    pub nll: f64,
+    /// Number of target tokens scored (past the routing prefix).
+    pub tokens_scored: usize,
+    /// End-to-end latency (admission -> response), milliseconds.
+    pub latency_ms: f64,
+    /// Real documents that shared the executed micro-batch.
+    pub batch_fill: usize,
+}
+
+/// Client-side handle for one submitted request.
+pub struct Ticket {
+    pub id: u64,
+    /// Path the request was routed to (known at admission).
+    pub path: usize,
+    rx: Receiver<ServeResponse>,
+}
+
+impl Ticket {
+    /// Block until the response arrives. Returns `None` if the server was
+    /// shut down (or its worker failed) before this request was scored.
+    pub fn wait(self) -> Option<ServeResponse> {
+        self.rx.recv().ok()
+    }
+
+    /// Bounded wait.
+    pub fn wait_timeout(&self, d: Duration) -> Option<ServeResponse> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+/// Build the (request, ticket) pair for one admitted document.
+pub fn admit(id: u64, path: usize, tokens: Vec<i32>) -> (ServeRequest, Ticket) {
+    let (tx, rx) = channel();
+    (
+        ServeRequest {
+            id,
+            tokens,
+            path,
+            accepted_at: Instant::now(),
+            tx,
+        },
+        Ticket { id, path, rx },
+    )
+}
+
+/// Why admission refused a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The assigned path's queue is full (reject-on-full policy), or did
+    /// not drain within the admission timeout (block policy).
+    Overloaded { path: usize },
+    /// The server is shutting down.
+    Closed,
+    /// Token window has the wrong length for the compiled sequence shape.
+    BadRequest { expect: usize, got: usize },
+    /// Pre-routed path id with no path server behind it (router and
+    /// executor fleet disagree on the path space).
+    UnknownPath { path: usize, paths: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { path } => write!(f, "path {path} queue overloaded"),
+            ServeError::Closed => write!(f, "server closed"),
+            ServeError::BadRequest { expect, got } => {
+                write!(f, "token window length {got} != compiled seq {expect}")
+            }
+            ServeError::UnknownPath { path, paths } => {
+                write!(f, "path {path} has no server (serving {paths} paths)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticket_roundtrip() {
+        let (req, ticket) = admit(7, 2, vec![1, 2, 3]);
+        assert_eq!(ticket.id, 7);
+        assert_eq!(ticket.path, 2);
+        req.tx
+            .send(ServeResponse {
+                id: req.id,
+                path: req.path,
+                nll: 1.5,
+                tokens_scored: 3,
+                latency_ms: 0.1,
+                batch_fill: 1,
+            })
+            .unwrap();
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.path, 2);
+        assert!((resp.nll - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dropped_request_yields_none() {
+        let (req, ticket) = admit(1, 0, vec![]);
+        drop(req); // worker died / server shut down before scoring
+        assert!(ticket.wait().is_none());
+    }
+
+    #[test]
+    fn error_display() {
+        assert_eq!(
+            ServeError::Overloaded { path: 3 }.to_string(),
+            "path 3 queue overloaded"
+        );
+        assert_eq!(
+            ServeError::BadRequest { expect: 8, got: 4 }.to_string(),
+            "token window length 4 != compiled seq 8"
+        );
+    }
+}

@@ -1,0 +1,400 @@
+//! Path-serving server (paper §2.6: "at test time, the paths are
+//! instantiated, and served independently, with text routed to each path
+//! via a router" — only a single path executes per query, never the full
+//! mixture).
+//!
+//! Topology: an admission front-end routes EACH document individually via
+//! `router::assign`, then enqueues it on the bounded queue of its path.
+//! One path-server worker per path (a dedicated `util::threadpool`
+//! thread) owns only its own assembled `theta` and drains its queue with
+//! deadline micro-batching ([`super::batcher`]), pads partial batches to
+//! the compiled HLO batch shape, scores them, and answers each request
+//! over its [`super::request::Ticket`]. Telemetry flows into a shared
+//! [`super::stats::ServeStats`].
+//!
+//! The executor is a trait so tests and benches can serve synthetic
+//! backends; production uses [`EnginePathExecutor`] over the PJRT
+//! [`Engine`] with thetas from a trained run (`TrainedPaths`).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::routing::router::Router;
+use crate::runtime::engine::Engine;
+use crate::serve::batcher::{pad_batch, BoundedQueue, PushError};
+use crate::serve::request::{admit, ServeError, ServeRequest, ServeResponse, Ticket};
+use crate::serve::stats::{ServeReport, ServeStats};
+use crate::util::threadpool::ThreadPool;
+use crate::warn_;
+
+/// One path's compute backend. Implementations own their path's
+/// parameters; the server never materializes the mixture.
+pub trait PathExecutor: Send + 'static {
+    /// Compiled batch shape (rows per forward call).
+    fn batch(&self) -> usize;
+    /// Sequence length every token row must have.
+    fn seq(&self) -> usize;
+    /// Score the first `rows` rows of `toks` (`[batch, seq]` flattened,
+    /// pad rows beyond `rows` ignored). Returns per-row
+    /// `(nll, tokens_scored)`.
+    fn forward(&mut self, toks: &[i32], rows: usize) -> Result<Vec<(f64, usize)>>;
+}
+
+/// Production executor: PJRT engine + this path's assembled theta,
+/// scoring at `seq_eval` with the paper's prefix masking.
+pub struct EnginePathExecutor {
+    engine: Arc<Engine>,
+    theta: Vec<f32>,
+}
+
+impl EnginePathExecutor {
+    pub fn new(engine: Arc<Engine>, theta: Vec<f32>) -> Self {
+        EnginePathExecutor { engine, theta }
+    }
+}
+
+impl PathExecutor for EnginePathExecutor {
+    fn batch(&self) -> usize {
+        self.engine.model().batch
+    }
+
+    fn seq(&self) -> usize {
+        self.engine.model().seq_eval
+    }
+
+    fn forward(&mut self, toks: &[i32], rows: usize) -> Result<Vec<(f64, usize)>> {
+        let mc = self.engine.model();
+        let seq = mc.seq_eval;
+        let lp = self.engine.token_logprobs(&self.theta, toks, seq)?;
+        Ok((0..rows.min(mc.batch))
+            .map(|b| {
+                crate::eval::nll_row(&lp[b * (seq - 1)..(b + 1) * (seq - 1)], seq, mc.prefix)
+            })
+            .collect())
+    }
+}
+
+/// Build one [`EnginePathExecutor`] per path from a trained run's theta
+/// map. Takes the map by value and MOVES each theta into its executor —
+/// at real path sizes a clone would double resident parameter memory.
+/// Path ids must be contiguous `0..P` (as produced by
+/// `routing::router::thetas_map`), since `router::assign` returns ids in
+/// that range.
+pub fn engine_executors(
+    engine: &Arc<Engine>,
+    mut thetas: HashMap<usize, Vec<f32>>,
+) -> Result<Vec<EnginePathExecutor>> {
+    (0..thetas.len())
+        .map(|p| {
+            let theta = thetas
+                .remove(&p)
+                .with_context(|| format!("path ids not contiguous: missing path {p}"))?;
+            Ok(EnginePathExecutor::new(Arc::clone(engine), theta))
+        })
+        .collect()
+}
+
+/// The serving subsystem: admission front-end + per-path workers.
+pub struct Server {
+    router: Router,
+    queues: Vec<Arc<BoundedQueue<ServeRequest>>>,
+    stats: Arc<ServeStats>,
+    seq: usize,
+    reject_on_full: bool,
+    admission_timeout: Duration,
+    next_id: AtomicU64,
+    pool: Option<ThreadPool>,
+}
+
+impl Server {
+    /// Spawn one dedicated worker per executor (executor index == path
+    /// id) and start accepting traffic.
+    pub fn start<E: PathExecutor>(cfg: &ServeConfig, router: Router, executors: Vec<E>) -> Server {
+        assert!(!executors.is_empty(), "need at least one path executor");
+        let paths = executors.len();
+        let stats = Arc::new(ServeStats::new(paths));
+        let queues: Vec<Arc<BoundedQueue<ServeRequest>>> = (0..paths)
+            .map(|_| Arc::new(BoundedQueue::new(cfg.queue_cap.max(1))))
+            .collect();
+        let pool = ThreadPool::new(paths);
+        let seq = executors[0].seq();
+        for (path, mut exec) in executors.into_iter().enumerate() {
+            assert_eq!(exec.seq(), seq, "executors disagree on seq length");
+            let queue = Arc::clone(&queues[path]);
+            let stats = Arc::clone(&stats);
+            // Flush size is capped by the compiled batch shape: a larger
+            // micro-batch cannot fit one forward call.
+            let max_batch = if cfg.max_batch == 0 {
+                exec.batch()
+            } else {
+                cfg.max_batch.min(exec.batch())
+            };
+            let max_wait = Duration::from_millis(cfg.max_wait_ms);
+            let idle = Duration::from_millis(cfg.idle_ms.max(1));
+            pool.execute(move || {
+                path_worker(path, &mut exec, &queue, &stats, max_batch, max_wait, idle)
+            });
+        }
+        Server {
+            router,
+            queues,
+            stats,
+            seq,
+            reject_on_full: cfg.reject_on_full,
+            admission_timeout: Duration::from_millis(cfg.admission_timeout_ms),
+            next_id: AtomicU64::new(0),
+            pool: Some(pool),
+        }
+    }
+
+    pub fn paths(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Admission: route ONE document by its own features, then enqueue it
+    /// on its path's queue. This is the per-document replacement for the
+    /// old demo's batch-major `routed[batch_start * batch]` assignment.
+    pub fn submit(&self, z: &[f32], tokens: Vec<i32>) -> Result<Ticket, ServeError> {
+        let path = self.router.assign(z);
+        self.submit_to(path, tokens)
+    }
+
+    /// Enqueue on an explicit path (pre-routed clients, tests, benches).
+    pub fn submit_to(&self, path: usize, tokens: Vec<i32>) -> Result<Ticket, ServeError> {
+        if tokens.len() != self.seq {
+            return Err(ServeError::BadRequest {
+                expect: self.seq,
+                got: tokens.len(),
+            });
+        }
+        if path >= self.queues.len() {
+            return Err(ServeError::UnknownPath {
+                path,
+                paths: self.queues.len(),
+            });
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (req, ticket) = admit(id, path, tokens);
+        let pushed = if self.reject_on_full {
+            self.queues[path].try_push(req)
+        } else {
+            self.queues[path].push(req, self.admission_timeout)
+        };
+        match pushed {
+            Ok(depth) => {
+                self.stats.record_enqueue(path, depth);
+                Ok(ticket)
+            }
+            Err(PushError::Full(_)) => {
+                self.stats.record_reject(path);
+                Err(ServeError::Overloaded { path })
+            }
+            Err(PushError::Closed(_)) => Err(ServeError::Closed),
+        }
+    }
+
+    /// Live telemetry snapshot.
+    pub fn report(&self) -> ServeReport {
+        self.stats.snapshot()
+    }
+
+    /// Stop admission, drain every queue, join the workers, and return
+    /// the final report.
+    pub fn shutdown(mut self) -> ServeReport {
+        for q in &self.queues {
+            q.close();
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+        self.stats.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        // ThreadPool's own Drop joins the workers.
+    }
+}
+
+/// Drain loop of one path server (runs on a dedicated pool thread until
+/// its queue is closed and empty).
+fn path_worker<E: PathExecutor>(
+    path: usize,
+    exec: &mut E,
+    queue: &BoundedQueue<ServeRequest>,
+    stats: &ServeStats,
+    max_batch: usize,
+    max_wait: Duration,
+    idle: Duration,
+) {
+    loop {
+        let batch = match queue.pop_batch(max_batch, max_wait, idle) {
+            None => break,       // closed + drained
+            Some(b) if b.is_empty() => continue, // idle tick
+            Some(b) => b,
+        };
+        let taken = Instant::now();
+        let fill = batch.len();
+        let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+        let toks = pad_batch(&rows, exec.batch());
+        stats.record_batch(path, fill);
+        match exec.forward(&toks, fill) {
+            Ok(scored) if scored.len() != fill => {
+                // A short/long result would silently drop tail requests in
+                // the zip below — surface it as a batch-level failure.
+                stats.record_exec_error(path);
+                warn_!(
+                    "serve",
+                    "path {path} executor returned {} results for {fill}-doc batch",
+                    scored.len()
+                );
+            }
+            Ok(scored) => {
+                for (req, (nll, ntok)) in batch.into_iter().zip(scored) {
+                    let wait_ms =
+                        taken.saturating_duration_since(req.accepted_at).as_secs_f64() * 1e3;
+                    let latency_ms = req.accepted_at.elapsed().as_secs_f64() * 1e3;
+                    stats.record_response(path, latency_ms, wait_ms, ntok);
+                    // A gone client is not a server error; drop silently.
+                    let _ = req.tx.send(ServeResponse {
+                        id: req.id,
+                        path,
+                        nll,
+                        tokens_scored: ntok,
+                        latency_ms,
+                        batch_fill: fill,
+                    });
+                }
+            }
+            Err(e) => {
+                // Dropping the batch drops its senders; every waiting
+                // ticket resolves to None rather than hanging.
+                stats.record_exec_error(path);
+                warn_!("serve", "path {path} forward failed on {fill}-doc batch: {e:#}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::exec::logging_fleet;
+    use crate::testkit::routers::{one_hot, one_hot_router};
+
+    /// Regression for the old demo's batch-major bug: every document must
+    /// execute on ITS OWN assigned path, even when a contiguous submission
+    /// window mixes paths.
+    #[test]
+    fn per_document_routing_honored() {
+        let paths = 3;
+        let (execs, log) = logging_fleet(paths, 4, 8, Duration::ZERO);
+        let server = Server::start(&ServeConfig::default(), one_hot_router(paths), execs);
+        // Interleaved stream: doc i belongs to path i % 3. The old demo
+        // would have executed a whole 4-doc window on the first doc's path.
+        let tickets: Vec<Ticket> = (0..24)
+            .map(|i| {
+                let mut toks = vec![0i32; 8];
+                toks[0] = i as i32; // marker: which doc is this row
+                server.submit(&one_hot(paths, (i as usize) % paths), toks).unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let resp = t.wait().expect("response");
+            assert_eq!(resp.path, i % paths, "doc {i} answered by the wrong path");
+            assert!(resp.tokens_scored > 0);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.served, 24);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.per_path_served, vec![8, 8, 8]);
+        // The executors themselves saw each doc on its assigned path.
+        for &(path, marker) in log.lock().unwrap().iter() {
+            assert_eq!(
+                marker as usize % paths,
+                path,
+                "doc {marker} executed on path {path}"
+            );
+        }
+    }
+
+    #[test]
+    fn reject_on_full_backpressure() {
+        let (execs, _log) = logging_fleet(1, 2, 4, Duration::from_millis(30));
+        let cfg = ServeConfig {
+            queue_cap: 2,
+            reject_on_full: true,
+            max_wait_ms: 1,
+            ..Default::default()
+        };
+        let server = Server::start(&cfg, one_hot_router(1), execs);
+        let mut accepted = Vec::new();
+        let mut rejected = 0usize;
+        for _ in 0..50 {
+            match server.submit_to(0, vec![0; 4]) {
+                Ok(t) => accepted.push(t),
+                Err(ServeError::Overloaded { path: 0 }) => rejected += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(rejected > 0, "50 instant submits must overflow a 2-slot queue");
+        for t in accepted {
+            assert!(t.wait().is_some(), "accepted requests are always answered");
+        }
+        let report = server.shutdown();
+        assert_eq!(report.served + report.rejected, 50);
+        assert_eq!(report.rejected as usize, rejected);
+    }
+
+    #[test]
+    fn bad_request_and_shutdown_drain() {
+        let (execs, _log) = logging_fleet(2, 4, 8, Duration::ZERO);
+        let server = Server::start(&ServeConfig::default(), one_hot_router(2), execs);
+        assert!(matches!(
+            server.submit_to(0, vec![0; 5]),
+            Err(ServeError::BadRequest { expect: 8, got: 5 })
+        ));
+        // out-of-range pre-routed path is an error, not a panic
+        assert!(matches!(
+            server.submit_to(7, vec![0; 8]),
+            Err(ServeError::UnknownPath { path: 7, paths: 2 })
+        ));
+        let tickets: Vec<Ticket> = (0..9)
+            .map(|i| server.submit_to(i % 2, vec![0; 8]).unwrap())
+            .collect();
+        // shutdown drains everything already admitted
+        let report = server.shutdown();
+        assert_eq!(report.served, 9);
+        for t in tickets {
+            assert!(t.wait().is_some());
+        }
+    }
+
+    #[test]
+    fn partial_batches_flush_on_deadline() {
+        let (execs, _log) = logging_fleet(1, 8, 4, Duration::ZERO);
+        let cfg = ServeConfig {
+            max_wait_ms: 10,
+            ..Default::default()
+        };
+        let server = Server::start(&cfg, one_hot_router(1), execs);
+        // 3 docs never fill the 8-row batch; only the deadline flushes them.
+        let tickets: Vec<Ticket> =
+            (0..3).map(|_| server.submit_to(0, vec![0; 4]).unwrap()).collect();
+        for t in tickets {
+            let r = t.wait().expect("deadline flush");
+            assert!(r.batch_fill <= 3);
+        }
+        let report = server.shutdown();
+        assert_eq!(report.served, 3);
+        assert!(report.mean_batch_fill <= 3.0);
+    }
+}

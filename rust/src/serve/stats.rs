@@ -1,0 +1,284 @@
+//! Shared serving telemetry: per-request latency, per-path load and queue
+//! depth, micro-batch occupancy, throughput.
+//!
+//! One [`ServeStats`] is shared (Arc) between the admission front-end and
+//! every path-server worker; recording is a short Mutex critical section.
+//! Latency percentiles come from a bounded uniform reservoir (exact until
+//! [`LATENCY_RESERVOIR`] samples, unbiased estimates after), sorted once
+//! per snapshot; means are exact streaming (Welford) statistics.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::OnlineStats;
+
+/// Latency samples kept for percentile estimation. Beyond this the
+/// recorder switches to uniform reservoir sampling (Algorithm R), so
+/// memory stays bounded on long-running servers while percentiles remain
+/// unbiased estimates over the whole run.
+const LATENCY_RESERVOIR: usize = 65_536;
+
+#[derive(Debug, Default, Clone)]
+struct PathCounters {
+    served: u64,
+    rejected: u64,
+    batches: u64,
+    exec_errors: u64,
+    max_depth: usize,
+}
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    per_path: Vec<PathCounters>,
+    latencies_ms: Vec<f64>,
+    /// Total latency samples seen (>= latencies_ms.len() once the
+    /// reservoir is full).
+    latency_seen: u64,
+    /// xorshift64* state for reservoir replacement.
+    rng_state: u64,
+    latency: OnlineStats,
+    queue_wait_ms: OnlineStats,
+    batch_fill: OnlineStats,
+    tokens_scored: u64,
+}
+
+impl StatsInner {
+    /// Algorithm R: keep the first LATENCY_RESERVOIR samples, then
+    /// replace a uniformly random slot with probability reservoir/seen.
+    fn push_latency(&mut self, x: f64) {
+        self.latency_seen += 1;
+        if self.latencies_ms.len() < LATENCY_RESERVOIR {
+            self.latencies_ms.push(x);
+            return;
+        }
+        // xorshift64* — cheap, statistically fine for sampling slots.
+        let mut s = self.rng_state;
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        self.rng_state = s;
+        let j = (s.wrapping_mul(0x2545F4914F6CDD1D) >> 1) as usize % self.latency_seen as usize;
+        if j < LATENCY_RESERVOIR {
+            self.latencies_ms[j] = x;
+        }
+    }
+}
+
+pub struct ServeStats {
+    started: Instant,
+    inner: Mutex<StatsInner>,
+}
+
+impl ServeStats {
+    pub fn new(paths: usize) -> Self {
+        ServeStats {
+            started: Instant::now(),
+            inner: Mutex::new(StatsInner {
+                per_path: vec![PathCounters::default(); paths],
+                latencies_ms: Vec::new(),
+                latency_seen: 0,
+                rng_state: 0x9E3779B97F4A7C15,
+                latency: OnlineStats::new(),
+                queue_wait_ms: OnlineStats::new(),
+                batch_fill: OnlineStats::new(),
+                tokens_scored: 0,
+            }),
+        }
+    }
+
+    /// Admission accepted a request; `depth` is the queue depth after the
+    /// push (tracked as a high-water mark per path).
+    pub fn record_enqueue(&self, path: usize, depth: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let c = &mut g.per_path[path];
+        c.max_depth = c.max_depth.max(depth);
+    }
+
+    /// Admission refused a request (queue full / park timeout).
+    pub fn record_reject(&self, path: usize) {
+        self.inner.lock().unwrap().per_path[path].rejected += 1;
+    }
+
+    /// A worker flushed a micro-batch of `fill` real documents.
+    pub fn record_batch(&self, path: usize, fill: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_path[path].batches += 1;
+        g.batch_fill.push(fill as f64);
+    }
+
+    /// A worker's forward call failed; its documents got no response.
+    pub fn record_exec_error(&self, path: usize) {
+        self.inner.lock().unwrap().per_path[path].exec_errors += 1;
+    }
+
+    /// One request completed. `queue_wait_ms` is time spent queued before
+    /// its batch was taken; `latency_ms` is end-to-end.
+    pub fn record_response(
+        &self,
+        path: usize,
+        latency_ms: f64,
+        queue_wait_ms: f64,
+        tokens_scored: usize,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        g.per_path[path].served += 1;
+        g.push_latency(latency_ms);
+        g.latency.push(latency_ms);
+        g.queue_wait_ms.push(queue_wait_ms);
+        g.tokens_scored += tokens_scored as u64;
+    }
+
+    /// Consistent snapshot of everything recorded so far. The Mutex is
+    /// held only to copy out the raw state; the O(n log n) percentile
+    /// sort (bounded by `LATENCY_RESERVOIR`) happens after the guard is
+    /// dropped, so polling telemetry never stalls the serving threads.
+    pub fn snapshot(&self) -> ServeReport {
+        let g = self.inner.lock().unwrap();
+        let wall_s = self.started.elapsed().as_secs_f64().max(1e-9);
+        let per_path = g.per_path.clone();
+        let mut lat = g.latencies_ms.clone();
+        let tokens_scored = g.tokens_scored;
+        let mean_ms = g.latency.mean();
+        let mean_queue_wait_ms = g.queue_wait_ms.mean();
+        let mean_batch_fill = g.batch_fill.mean();
+        drop(g);
+
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // interpolated percentile over the pre-sorted reservoir
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let rank = (p / 100.0) * (lat.len() - 1) as f64;
+            let (lo, hi) = (rank.floor() as usize, rank.ceil() as usize);
+            lat[lo] + (rank - lo as f64) * (lat[hi] - lat[lo])
+        };
+        ServeReport {
+            served: per_path.iter().map(|c| c.served).sum(),
+            rejected: per_path.iter().map(|c| c.rejected).sum(),
+            exec_errors: per_path.iter().map(|c| c.exec_errors).sum(),
+            batches: per_path.iter().map(|c| c.batches).sum(),
+            tokens_scored,
+            wall_s,
+            tok_per_s: tokens_scored as f64 / wall_s,
+            p50_ms: pct(50.0),
+            p95_ms: pct(95.0),
+            p99_ms: pct(99.0),
+            mean_ms,
+            mean_queue_wait_ms,
+            mean_batch_fill,
+            per_path_served: per_path.iter().map(|c| c.served).collect(),
+            per_path_rejected: per_path.iter().map(|c| c.rejected).collect(),
+            per_path_max_depth: per_path.iter().map(|c| c.max_depth).collect(),
+        }
+    }
+}
+
+/// Snapshot of serving telemetry (everything the CLI/bench reports).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub served: u64,
+    pub rejected: u64,
+    pub exec_errors: u64,
+    pub batches: u64,
+    pub tokens_scored: u64,
+    pub wall_s: f64,
+    pub tok_per_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub mean_queue_wait_ms: f64,
+    pub mean_batch_fill: f64,
+    pub per_path_served: Vec<u64>,
+    pub per_path_rejected: Vec<u64>,
+    pub per_path_max_depth: Vec<usize>,
+}
+
+impl ServeReport {
+    /// Rows for `metrics::print_table` (["metric", "value"] header).
+    pub fn rows(&self) -> Vec<Vec<String>> {
+        vec![
+            vec!["requests served".into(), self.served.to_string()],
+            vec!["requests rejected".into(), self.rejected.to_string()],
+            vec!["micro-batches".into(), self.batches.to_string()],
+            vec!["mean batch fill".into(), format!("{:.2}", self.mean_batch_fill)],
+            vec!["latency p50".into(), format!("{:.2} ms", self.p50_ms)],
+            vec!["latency p95".into(), format!("{:.2} ms", self.p95_ms)],
+            vec!["latency p99".into(), format!("{:.2} ms", self.p99_ms)],
+            vec!["latency mean".into(), format!("{:.2} ms", self.mean_ms)],
+            vec![
+                "queue wait mean".into(),
+                format!("{:.2} ms", self.mean_queue_wait_ms),
+            ],
+            vec!["throughput".into(), format!("{:.0} tok/s", self.tok_per_s)],
+            vec!["per-path load".into(), format!("{:?}", self.per_path_served)],
+            vec![
+                "per-path rejects".into(),
+                format!("{:?}", self.per_path_rejected),
+            ],
+            vec![
+                "per-path max depth".into(),
+                format!("{:?}", self.per_path_max_depth),
+            ],
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_snapshot_does_not_panic() {
+        let s = ServeStats::new(4);
+        let r = s.snapshot();
+        assert_eq!(r.served, 0);
+        assert_eq!(r.p50_ms, 0.0);
+        assert_eq!(r.per_path_served, vec![0, 0, 0, 0]);
+        assert!(!r.rows().is_empty());
+    }
+
+    #[test]
+    fn percentiles_ordered_and_counts_add_up() {
+        let s = ServeStats::new(2);
+        for i in 0..100 {
+            let path = i % 2;
+            s.record_enqueue(path, i % 7);
+            s.record_response(path, (i + 1) as f64, 0.5, 10);
+        }
+        s.record_reject(1);
+        s.record_batch(0, 3);
+        let r = s.snapshot();
+        assert_eq!(r.served, 100);
+        assert_eq!(r.per_path_served, vec![50, 50]);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.per_path_rejected, vec![0, 1]);
+        assert_eq!(r.tokens_scored, 1000);
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms);
+        assert!(r.p99_ms <= 100.0);
+        assert!(r.tok_per_s > 0.0);
+        assert_eq!(r.per_path_max_depth[0], 6);
+        assert!((r.mean_batch_fill - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_reservoir_stays_bounded_with_exact_mean() {
+        let s = ServeStats::new(1);
+        let n = LATENCY_RESERVOIR + 10_000;
+        for i in 0..n {
+            s.record_response(0, (i % 1000) as f64, 0.0, 1);
+        }
+        let g = s.inner.lock().unwrap();
+        assert_eq!(g.latencies_ms.len(), LATENCY_RESERVOIR);
+        assert_eq!(g.latency_seen, n as u64);
+        drop(g);
+        let r = s.snapshot();
+        assert_eq!(r.served, n as u64);
+        // mean is exact (streaming; ~497.9 because n is not a multiple of
+        // the 0..999 cycle), percentiles sampled but in-range
+        assert!((r.mean_ms - 497.85).abs() < 0.1, "mean {}", r.mean_ms);
+        assert!(r.p50_ms >= 0.0 && r.p99_ms <= 999.0);
+        assert!(r.p50_ms <= r.p95_ms && r.p95_ms <= r.p99_ms);
+    }
+}

@@ -54,6 +54,92 @@ pub mod gens {
     }
 }
 
+/// Synthetic routing fixtures shared by the serve unit tests, the serve
+/// integration tests, and `bench_serve`: a k-means router whose
+/// centroids are the one-hot basis, so feature `e_p` deterministically
+/// routes to path `p`.
+pub mod routers {
+    use crate::routing::kmeans::KMeans;
+    use crate::routing::router::Router;
+
+    pub fn one_hot_router(paths: usize) -> Router {
+        let centroids = (0..paths)
+            .map(|p| (0..paths).map(|j| if j == p { 1.0 } else { 0.0 }).collect())
+            .collect();
+        Router::KMeans(KMeans { centroids })
+    }
+
+    pub fn one_hot(paths: usize, p: usize) -> Vec<f32> {
+        (0..paths).map(|j| if j == p { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+/// Synthetic path executors for serve tests (one definition, used by the
+/// `serve::server` unit tests AND `rust/tests/integration_serve.rs`).
+pub mod exec {
+    use crate::serve::server::PathExecutor;
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    /// Records the (path, first token) of every REAL row it scores, so a
+    /// test can prove which path a document actually EXECUTED on — the
+    /// regression probe for the old batch-major routing bug. Optionally
+    /// sleeps per batch to simulate compute.
+    pub struct LoggingExec {
+        pub path: usize,
+        pub batch: usize,
+        pub seq: usize,
+        pub delay: Duration,
+        pub log: Arc<Mutex<Vec<(usize, i32)>>>,
+    }
+
+    impl PathExecutor for LoggingExec {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn forward(&mut self, toks: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+            assert_eq!(
+                toks.len(),
+                self.batch * self.seq,
+                "unpadded batch reached executor"
+            );
+            assert!(rows >= 1 && rows <= self.batch);
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            let mut g = self.log.lock().unwrap();
+            for b in 0..rows {
+                g.push((self.path, toks[b * self.seq]));
+            }
+            Ok((0..rows).map(|_| (1.0, self.seq - 1)).collect())
+        }
+    }
+
+    /// One LoggingExec per path, all feeding a shared log.
+    #[allow(clippy::type_complexity)]
+    pub fn logging_fleet(
+        paths: usize,
+        batch: usize,
+        seq: usize,
+        delay: Duration,
+    ) -> (Vec<LoggingExec>, Arc<Mutex<Vec<(usize, i32)>>>) {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let execs = (0..paths)
+            .map(|path| LoggingExec {
+                path,
+                batch,
+                seq,
+                delay,
+                log: Arc::clone(&log),
+            })
+            .collect();
+        (execs, log)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -234,6 +234,29 @@ impl TrainedPaths {
     }
 }
 
+/// Trained paths for the serving drivers (`dipaco serve`,
+/// `examples/serve_paths.rs`): load the cached run under `tag`, or train
+/// a short 2x2 DiPaCo first. Both drivers share one tag so the expensive
+/// run happens once.
+pub fn serve_demo_paths(env: &Env, tag: &str) -> Result<TrainedPaths> {
+    if let Some(t) = TrainedPaths::load(env, tag) {
+        return Ok(t);
+    }
+    let total = 200 + 60;
+    let sched = default_schedule(total);
+    let base = env.base_model(200, &sched, 7)?;
+    let recipe = std_recipe(
+        env,
+        crate::config::TopologySpec::grid(vec![2, 2]),
+        Some((2, 2)),
+        total,
+        1,
+        false,
+        tag,
+    );
+    cached_dipaco(env, tag, &recipe, base, 3, 0)
+}
+
 /// Run a DiPaCo recipe, or load it from the cache when `tag` exists.
 pub fn cached_dipaco(
     env: &Env,
