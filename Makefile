@@ -7,7 +7,7 @@
 PYTHON ?= python3
 PRESETS ?= test path large
 
-.PHONY: artifacts build test bench fmt
+.PHONY: artifacts build test bench bench-ckpt clippy fmt
 
 artifacts:
 	@for p in $(PRESETS); do \
@@ -20,6 +20,14 @@ build:
 
 test:
 	cargo test -q
+
+# Checkpoint-format bench: DPC1 full load vs DPC2 section access, and
+# executor bytes-read-per-phase (CSV under results/bench/).
+bench-ckpt:
+	cargo bench --bench bench_ckpt
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
 
 fmt:
 	cargo fmt --check

@@ -62,7 +62,7 @@ fn main() -> Result<()> {
     let store = ModuleStore::from_base(&topo, &theta_before);
     let assembled = store.assemble(&topo, 3);
     assert_eq!(assembled, theta_before);
-    let deltas = store.split_delta(&topo, 3, &theta_before, &theta);
+    let deltas = topo.split_delta(3, &theta_before, &theta);
     for (mid, d) in &deltas {
         let norm: f32 = d.iter().map(|x| x * x).sum::<f32>().sqrt();
         println!("  outer gradient {mid}: {} floats, |Delta| = {norm:.4}", d.len());

@@ -66,7 +66,7 @@ fn main() {
         let r = Bencher::new(&format!("split outer gradients ({label})"))
             .runs(20, 200)
             .run(|| {
-                std::hint::black_box(store.split_delta(&topo, 7, &theta, &after));
+                std::hint::black_box(topo.split_delta(7, &theta, &after));
             });
         csv.push(format!("split_{label},{},{:.9}", man.total_params, r.mean_s));
 

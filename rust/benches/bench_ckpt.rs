@@ -1,0 +1,189 @@
+//! Checkpoint-format bench (ISSUE 3 / DESIGN.md "Checkpoint format"):
+//!
+//! 1. full-theta DPC1 load vs DPC2 single-section load — section reads
+//!    must scale with MODULE size, not `total_params`, so the single-
+//!    section time stays ~flat while the full load grows with the model;
+//! 2. bytes-read-per-phase for the executor path: owned-sections reads
+//!    through [`SectionReader`] vs loading every path checkpoint in full.
+//!
+//! CSV lands in `results/bench/bench_ckpt.csv`.
+
+use dipaco::benchkit::{compare, header, Bencher};
+use dipaco::config::TopologySpec;
+use dipaco::coordinator::outer::shard_modules;
+use dipaco::params::checkpoint::{load_section, Checkpoint, SectionReader};
+use dipaco::params::manifest::Manifest;
+use dipaco::topology::Topology;
+use dipaco::util::json::Json;
+use dipaco::util::rng::Rng;
+
+/// Synthetic manifest with `blocks` transformer blocks at width `d`
+/// (no artifacts needed).
+fn synthetic_manifest(d: usize, blocks: usize) -> Manifest {
+    let mut leaves = Vec::new();
+    let mut off = 0usize;
+    let mut push = |name: String, shape: Vec<usize>, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        leaves.push(format!(
+            r#"{{"name":"{name}","offset":{off},"size":{size},"shape":[{}]}}"#,
+            shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        ));
+        *off += size;
+    };
+    push("embed.tok".into(), vec![256, d], &mut off);
+    push("embed.pos".into(), vec![256, d], &mut off);
+    for i in 0..blocks {
+        push(format!("block{i}.attn.wq"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wk"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wv"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wo"), vec![d, d], &mut off);
+        push(format!("block{i}.mlp.w1"), vec![d, 4 * d], &mut off);
+        push(format!("block{i}.mlp.w2"), vec![4 * d, d], &mut off);
+    }
+    push("head.w".into(), vec![d, 256], &mut off);
+    let text = format!(
+        r#"{{"preset":"bench","config":{{"vocab":256,"d_model":{d},"n_layers":{blocks},
+          "n_heads":4,"d_ff":{f},"seq_train":128,"seq_eval":256,"batch":8,"prefix":32,"d_head":16}},
+          "total_params":{off},"leaves":[{ls}],"entrypoints":[]}}"#,
+        f = 4 * d,
+        ls = leaves.join(",")
+    );
+    Manifest::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+fn main() {
+    println!("checkpoint-format bench: DPC1 full load vs DPC2 section access\n");
+    header();
+    let dir = std::env::temp_dir().join(format!("dipaco-bench-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut csv =
+        vec!["part,scale,total_params,section_params,variant,mean_s,bytes".to_string()];
+
+    // ---- part 1: one grid level per block, K=4 each, so the per-module
+    // section size stays ~constant while total_params grows with blocks.
+    for (blocks, label) in [(4usize, "4-block"), (16, "16-block")] {
+        let man = synthetic_manifest(64, blocks);
+        let topo = Topology::build(&man, &TopologySpec::grid(vec![4; blocks]));
+        let mut rng = Rng::new(0);
+        let theta: Vec<f32> =
+            (0..man.total_params).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let after: Vec<f32> = theta.iter().map(|&x| x + 0.001).collect();
+
+        // worker-style sectioned file for path 0 (delta per module), in
+        // both formats
+        let (ck, modules) = topo.delta_checkpoint(0, &theta, &after);
+        let f1 = dir.join(format!("{label}.v1.dpc"));
+        let f2 = dir.join(format!("{label}.v2.dpc"));
+        ck.save_dpc1(&f1).unwrap();
+        ck.save(&f2).unwrap();
+
+        // a mid-file grid-module section (level 1 = first grid level)
+        let section = modules[1].delta_section();
+        let section_params = ck.get(&section).unwrap().len();
+
+        let r = Bencher::new(&format!("DPC1 full load ({label})"))
+            .runs(10, 60)
+            .run(|| {
+                std::hint::black_box(Checkpoint::load(&f1).unwrap());
+            });
+        csv.push(format!(
+            "full_vs_section,{label},{},{section_params},dpc1_full,{:.9},{}",
+            man.total_params,
+            r.mean_s,
+            std::fs::metadata(&f1).unwrap().len()
+        ));
+        let full = r;
+
+        let r = Bencher::new(&format!("DPC2 full load ({label})"))
+            .runs(10, 60)
+            .run(|| {
+                std::hint::black_box(Checkpoint::load(&f2).unwrap());
+            });
+        csv.push(format!(
+            "full_vs_section,{label},{},{section_params},dpc2_full,{:.9},{}",
+            man.total_params,
+            r.mean_s,
+            std::fs::metadata(&f2).unwrap().len()
+        ));
+
+        let r = Bencher::new(&format!("DPC2 single section ({label})"))
+            .runs(10, 200)
+            .run(|| {
+                std::hint::black_box(load_section(&f2, &section).unwrap());
+            });
+        csv.push(format!(
+            "full_vs_section,{label},{},{section_params},dpc2_section,{:.9},{}",
+            man.total_params,
+            r.mean_s,
+            4 * section_params
+        ));
+        compare(&full, &r);
+        println!();
+    }
+
+    // ---- part 2: executor bytes-per-phase, 4x4 grid, 2 executor shards.
+    // Per executor: read only owned `delta:` sections of each of the P
+    // path checkpoints, vs the old full-theta load per row.
+    let man = synthetic_manifest(64, 8);
+    let topo = Topology::build(&man, &TopologySpec::grid(vec![4, 4]));
+    let mut rng = Rng::new(1);
+    let theta: Vec<f32> = (0..man.total_params).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let after: Vec<f32> = theta.iter().map(|&x| x + 0.001).collect();
+    let files: Vec<std::path::PathBuf> = (0..topo.paths)
+        .map(|p| {
+            let (ck, _) = topo.delta_checkpoint(p, &theta, &after);
+            let f = dir.join(format!("exec-path{p}.dpc"));
+            ck.save(&f).unwrap();
+            f
+        })
+        .collect();
+    let shards = shard_modules(&topo, 2);
+    let owned = &shards[0];
+    let full_phase_bytes: u64 = files.iter().map(|f| std::fs::metadata(f).unwrap().len()).sum();
+
+    let mut owned_bytes = 0u64;
+    let r = Bencher::new("executor phase: owned sections only (DPC2)")
+        .runs(5, 30)
+        .run(|| {
+            let mut bytes = 0u64;
+            for (p, f) in files.iter().enumerate() {
+                let mut reader = SectionReader::open(f).unwrap();
+                for m in owned {
+                    if topo.expert_of(p, m.level) != m.expert {
+                        continue; // path doesn't traverse this module
+                    }
+                    std::hint::black_box(reader.read(&m.delta_section()).unwrap());
+                }
+                bytes += reader.bytes_read();
+            }
+            owned_bytes = bytes;
+        });
+    csv.push(format!(
+        "executor_phase,4x4,{},0,owned_sections,{:.9},{owned_bytes}",
+        man.total_params, r.mean_s
+    ));
+    let owned_r = r;
+
+    let r = Bencher::new("executor phase: full load per row (baseline)")
+        .runs(5, 30)
+        .run(|| {
+            for f in &files {
+                std::hint::black_box(Checkpoint::load(f).unwrap());
+            }
+        });
+    csv.push(format!(
+        "executor_phase,4x4,{},0,full_loads,{:.9},{full_phase_bytes}",
+        man.total_params, r.mean_s
+    ));
+    compare(&r, &owned_r);
+    println!(
+        "\nexecutor bytes/phase: owned-sections {owned_bytes} vs full {full_phase_bytes} \
+         ({:.1}x less I/O)",
+        full_phase_bytes as f64 / owned_bytes.max(1) as f64
+    );
+
+    let out = dipaco::metrics::results_dir().join("bench_ckpt.csv");
+    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("csv: {}", out.display());
+}

@@ -18,7 +18,6 @@ use dipaco::coordinator::outer::{
     naive_phase_outer, run_phase_outer, shard_modules, OuterConfig,
 };
 use dipaco::optim::Nesterov;
-use dipaco::params::checkpoint::Checkpoint;
 use dipaco::params::manifest::Manifest;
 use dipaco::topology::{ModuleStore, Topology};
 use dipaco::util::json::Json;
@@ -71,13 +70,16 @@ fn synthetic_manifest() -> Manifest {
     Manifest::from_json(&Json::parse(&text).unwrap()).unwrap()
 }
 
-fn make_ckpts(dir: &std::path::Path, theta: &[f32], paths: usize) -> Vec<CkptRow> {
+/// Worker-style sectioned checkpoints: one `delta:L{l}E{e}` section per
+/// traversed module (the DPC2 exchange unit), module list on the row.
+fn make_ckpts(dir: &std::path::Path, topo: &Topology, theta: &[f32], paths: usize) -> Vec<CkptRow> {
     let mut rng = Rng::new(1);
     (0..paths)
         .map(|p| {
             let after: Vec<f32> = theta.iter().map(|&v| v + rng.normal_f32(0.0, 0.01)).collect();
             let file = dir.join(format!("path{p}.dpc"));
-            Checkpoint::new().with("theta", after).save(&file).unwrap();
+            let (ck, modules) = topo.delta_checkpoint(p, theta, &after);
+            ck.save(&file).unwrap();
             CkptRow {
                 rowid: 0,
                 phase: 0,
@@ -86,6 +88,7 @@ fn make_ckpts(dir: &std::path::Path, theta: &[f32], paths: usize) -> Vec<CkptRow
                 file,
                 step: 0,
                 loss: 1.0,
+                modules,
             }
         })
         .collect()
@@ -109,10 +112,11 @@ fn main() {
             let mut rng = Rng::new(0);
             (0..man.total_params).map(|_| rng.normal_f32(0.0, 0.1)).collect()
         };
-        let rows = make_ckpts(&dir, &theta, topo.paths);
+        let rows = make_ckpts(&dir, &topo, &theta, topo.paths);
         let cfg = OuterConfig {
             diloco: DilocoConfig::default(),
             shard_sizes: vec![100; topo.paths],
+            io: Default::default(),
         };
 
         // naive: gather all, then average serially

@@ -19,6 +19,8 @@ fn task(i: u64) -> Task {
         start_step: 0,
         ckpt_in: "in".into(),
         ckpt_out: "out".into(),
+        opt_in: None,
+        opt_out: "opt".into(),
     })
 }
 

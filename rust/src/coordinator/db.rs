@@ -4,16 +4,27 @@
 //! database table. This enables other components to query the checkpoint
 //! file path for a given path."
 //!
+//! Rows carry **module-level metadata** (`modules`: the `ModuleId`s whose
+//! `delta:L{l}E{e}` sections the checkpoint file contains), so an
+//! outer-optimization executor can decide which sections to fetch from a
+//! row without opening the file — the module-sharded parameter plane's
+//! equivalent of a column index.
+//!
 //! Consumers (outer-optimization executors, evaluators) either poll with a
 //! monotonically increasing row id (`rows_since`) or subscribe to a
 //! channel for push notifications — the "load training checkpoints as soon
 //! as they appear in the table" behaviour that online averaging needs.
-//! State persists to JSON for crash recovery.
+//! Insert/lookup go through a `(phase, path_id, kind)` hash index (insert
+//! runs on every task completion; a linear history scan there is O(rows)
+//! per task and was the coordinator's only quadratic path). State persists
+//! to JSON for crash recovery.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::Sender;
 use std::sync::Mutex;
 
+use crate::topology::ModuleId;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 
@@ -22,15 +33,20 @@ pub struct CkptRow {
     pub rowid: u64,
     pub phase: usize,
     pub path_id: usize,
-    pub kind: String, // "path" (worker output) | "module" (outer output)
+    pub kind: String, // "path" (worker output) | "eval" | "module" (outer output)
     pub file: PathBuf,
     pub step: usize,
     pub loss: f32,
+    /// Modules whose `delta:` sections the file carries (empty for rows
+    /// whose checkpoints are not module-sectioned, e.g. eval rows).
+    pub modules: Vec<ModuleId>,
 }
 
 #[derive(Default)]
 struct Inner {
     rows: Vec<CkptRow>,
+    /// (phase, path_id, kind) -> index into `rows`.
+    index: HashMap<(usize, usize, String), usize>,
     subscribers: Vec<Sender<CkptRow>>,
 }
 
@@ -48,14 +64,13 @@ impl CheckpointDb {
     /// rows are dropped (idempotent writes from retried tasks).
     pub fn insert(&self, mut row: CkptRow) -> u64 {
         let mut g = self.inner.lock().unwrap();
-        if let Some(existing) = g
-            .rows
-            .iter()
-            .find(|r| r.phase == row.phase && r.path_id == row.path_id && r.kind == row.kind)
-        {
-            return existing.rowid;
+        let key = (row.phase, row.path_id, row.kind.clone());
+        if let Some(&i) = g.index.get(&key) {
+            return g.rows[i].rowid;
         }
-        row.rowid = g.rows.len() as u64 + 1;
+        let idx = g.rows.len();
+        row.rowid = idx as u64 + 1;
+        g.index.insert(key, idx);
         g.rows.push(row.clone());
         g.subscribers.retain(|s| s.send(row.clone()).is_ok());
         row.rowid
@@ -78,10 +93,9 @@ impl CheckpointDb {
 
     pub fn lookup(&self, phase: usize, path_id: usize, kind: &str) -> Option<CkptRow> {
         let g = self.inner.lock().unwrap();
-        g.rows
-            .iter()
-            .find(|r| r.phase == phase && r.path_id == path_id && r.kind == kind)
-            .cloned()
+        g.index
+            .get(&(phase, path_id, kind.to_string()))
+            .map(|&i| g.rows[i].clone())
     }
 
     pub fn len(&self) -> usize {
@@ -112,6 +126,10 @@ impl CheckpointDb {
                     ("file", Json::str(r.file.to_string_lossy())),
                     ("step", Json::num(r.step as f64)),
                     ("loss", Json::num(r.loss as f64)),
+                    (
+                        "modules",
+                        Json::arr(r.modules.iter().map(|m| Json::str(m.to_string()))),
+                    ),
                 ])
             })),
         )])
@@ -129,7 +147,7 @@ impl CheckpointDb {
         {
             let mut g = db.inner.lock().unwrap();
             for r in j.req("rows")?.as_arr().context("rows")? {
-                g.rows.push(CkptRow {
+                let row = CkptRow {
                     rowid: r.req("rowid")?.as_usize().unwrap_or(0) as u64,
                     phase: r.req("phase")?.as_usize().unwrap_or(0),
                     path_id: r.req("path_id")?.as_usize().unwrap_or(0),
@@ -137,7 +155,21 @@ impl CheckpointDb {
                     file: r.req("file")?.as_str().unwrap_or("").into(),
                     step: r.req("step")?.as_usize().unwrap_or(0),
                     loss: r.req("loss")?.as_f64().unwrap_or(0.0) as f32,
-                });
+                    // pre-DPC2 saved state has no modules field
+                    modules: r
+                        .get("modules")
+                        .and_then(|a| a.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|m| m.as_str().and_then(ModuleId::parse))
+                                .collect()
+                        })
+                        .unwrap_or_default(),
+                };
+                let idx = g.rows.len();
+                g.index
+                    .insert((row.phase, row.path_id, row.kind.clone()), idx);
+                g.rows.push(row);
             }
         }
         Ok(db)
@@ -157,6 +189,13 @@ mod tests {
             file: format!("/gfs/p{phase}/path{path_id}.dpc").into(),
             step: 100,
             loss: 2.5,
+            modules: vec![
+                ModuleId { level: 0, expert: 0 },
+                ModuleId {
+                    level: 1,
+                    expert: path_id,
+                },
+            ],
         }
     }
 
@@ -181,6 +220,23 @@ mod tests {
     }
 
     #[test]
+    fn indexed_lookup_matches_scan_at_scale() {
+        let db = CheckpointDb::new();
+        for phase in 0..20 {
+            for p in 0..50 {
+                db.insert(row(phase, p, "path"));
+                db.insert(row(phase, p, "eval"));
+            }
+        }
+        assert_eq!(db.len(), 2000);
+        let hit = db.lookup(13, 37, "path").unwrap();
+        assert_eq!((hit.phase, hit.path_id), (13, 37));
+        assert_eq!(hit.kind, "path");
+        assert!(db.lookup(20, 0, "path").is_none());
+        assert!(db.lookup(13, 37, "module").is_none());
+    }
+
+    #[test]
     fn rows_since_is_monotonic() {
         let db = CheckpointDb::new();
         for i in 0..5 {
@@ -200,6 +256,7 @@ mod tests {
         let got = rx.recv_timeout(std::time::Duration::from_millis(100)).unwrap();
         assert_eq!(got.path_id, 7);
         assert_eq!(got.phase, 2);
+        assert_eq!(got.modules, row(2, 7, "path").modules);
     }
 
     #[test]
@@ -212,5 +269,9 @@ mod tests {
         let db2 = CheckpointDb::load(&p).unwrap();
         assert_eq!(db2.len(), 2);
         assert_eq!(db2.query(0, "module").len(), 1);
+        // module metadata survives persistence, and the rebuilt index works
+        assert_eq!(db2.lookup(0, 0, "path").unwrap().modules, row(0, 0, "path").modules);
+        let c = db2.insert(row(0, 0, "path"));
+        assert_eq!(c, 1); // deduped against the reloaded index
     }
 }

@@ -2,19 +2,24 @@
 //!
 //! Modules are sharded across executor threads; each executor subscribes
 //! to the checkpoint DB and, **as each path checkpoint arrives** (online
-//! parameter-gradient averaging — no waiting for the full phase), extracts
-//! the module slices it owns, accumulates `theta(l,e)^{t-1} -
-//! theta(l,e)^t_i` weighted by shard size (loss reweighing, §2.7), and
+//! parameter-gradient averaging — no waiting for the full phase), fetches
+//! **only the `delta:L{l}E{e}` sections of the modules it owns** from the
+//! DPC2 file (the worker already shipped `theta^{t-1} - theta^t_i` per
+//! module, so no store read is needed to form the outer gradient),
+//! accumulates them weighted by shard size (loss reweighing, §2.7), and
 //! once a module has heard from all `P_{l,e}` of its paths applies the
 //! Nesterov outer update (Algorithm 1 lines 13-14) with norm rescaling.
 //!
-//! "As a consequence, the overall model is never materialized in a single
-//! location but always split across several servers" — here: each module's
-//! global copy lives in exactly one executor's shard of the
-//! [`ModuleStore`], and completed-module notifications let the next
-//! phase's tasks start before the whole phase finishes averaging.
+//! Per-executor I/O is O(bytes of owned modules × paths through them) —
+//! not O(total_params × paths) — which is what lets "the overall model
+//! [be] never materialized in a single location but always split across
+//! several servers": each module's global copy lives in exactly one
+//! executor's shard of the [`ModuleStore`], and completed-module
+//! notifications let the next phase's tasks start before the whole phase
+//! finishes averaging.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
@@ -23,7 +28,7 @@ use anyhow::{Context, Result};
 use crate::config::DilocoConfig;
 use crate::coordinator::db::{CheckpointDb, CkptRow};
 use crate::optim::{rescale_factor, Nesterov, OuterAccumulator};
-use crate::params::checkpoint::Checkpoint;
+use crate::params::checkpoint::{Checkpoint, SectionReader};
 use crate::topology::{ModuleId, ModuleStore, Topology};
 
 /// Notification that a module finished its outer update for a phase.
@@ -42,17 +47,33 @@ pub fn shard_modules(topo: &Topology, executors: usize) -> Vec<Vec<ModuleId>> {
     shards
 }
 
-/// One executor's phase-scoped state.
-struct ExecState {
-    acc: HashMap<ModuleId, OuterAccumulator>,
-    done: HashMap<ModuleId, bool>,
+/// Shared I/O accounting across a phase's executors: checkpoint sections
+/// fetched and their payload bytes. The owned-sections tests and
+/// `bench_ckpt` assert on these to prove reads scale with module size,
+/// not `total_params`.
+#[derive(Debug, Default)]
+pub struct OuterIoStats {
+    pub sections_read: AtomicU64,
+    pub payload_bytes_read: AtomicU64,
+}
+
+impl OuterIoStats {
+    pub fn snapshot(&self) -> (u64, u64) {
+        (
+            self.sections_read.load(Ordering::Relaxed),
+            self.payload_bytes_read.load(Ordering::Relaxed),
+        )
+    }
 }
 
 /// Configuration shared by all executors of a run.
+#[derive(Default)]
 pub struct OuterConfig {
     pub diloco: DilocoConfig,
     /// Shard sizes for loss reweighing (index = path id).
     pub shard_sizes: Vec<usize>,
+    /// Cross-executor I/O accounting (atomics; shared by reference).
+    pub io: OuterIoStats,
 }
 
 /// The executor loop: consumes path-checkpoint rows for `phase`, returns
@@ -72,10 +93,12 @@ pub fn executor_loop(
     if owned.is_empty() {
         return Ok(());
     }
-    let mut state = ExecState {
-        acc: HashMap::new(),
-        done: owned.iter().map(|&m| (m, false)).collect(),
-    };
+    let mut acc: HashMap<ModuleId, OuterAccumulator> = HashMap::new();
+    let mut done: HashMap<ModuleId, bool> = owned.iter().map(|&m| (m, false)).collect();
+    // Double-delivery guard: `run_phase_outer` subscribes and then replays
+    // existing rows, so a row inserted between the two can arrive twice;
+    // accumulating it twice overshoots `expected` and deadlocks the phase.
+    let mut seen: HashSet<(usize, usize)> = HashSet::new();
     // Modules with zero expected contributions can't occur: every module
     // has P_le >= 1 paths by construction.
     let mut remaining = owned.len();
@@ -84,34 +107,57 @@ pub fn executor_loop(
         if row.kind != "path" || row.phase != phase {
             continue;
         }
-        let ck = Checkpoint::load(&row.file)
-            .with_context(|| format!("executor loading {}", row.file.display()))?;
-        let theta_after = ck.get("theta").context("ckpt missing theta")?;
+        if !seen.insert((row.phase, row.path_id)) {
+            continue; // duplicate delivery of this path's checkpoint
+        }
+        // Sections we must fetch: owned, unfinished modules this path
+        // traverses. The topology decides; the row's `modules` metadata
+        // must agree — a path row missing a required section would hang
+        // the phase if skipped silently, so fail loudly instead.
+        let wanted: Vec<ModuleId> = topo
+            .modules_of_path(row.path_id)
+            .into_iter()
+            .filter(|m| done.get(m) == Some(&false)) // owned and not finished
+            .collect();
+        if wanted.is_empty() {
+            continue; // nothing of ours in this checkpoint — no file I/O
+        }
+        // Empty metadata = unknown (e.g. a DB reloaded from pre-DPC2
+        // state; nothing in the live pipeline produces it) — probe the
+        // file and let the section read below error loudly if the file
+        // predates the delta-section exchange. Resuming a phase across
+        // the format upgrade is not supported; the failure is explicit,
+        // never a silent wrong answer.
+        if !row.modules.is_empty() {
+            if let Some(missing) = wanted.iter().copied().find(|m| !row.modules.contains(m)) {
+                anyhow::bail!(
+                    "checkpoint row (phase {}, path {}) lacks section metadata for owned \
+                     module {missing} — file {}",
+                    row.phase,
+                    row.path_id,
+                    row.file.display()
+                );
+            }
+        }
         let w = if cfg.diloco.loss_reweigh {
             cfg.shard_sizes.get(row.path_id).copied().unwrap_or(1).max(1) as f64
         } else {
             1.0
         };
-        let path_modules = topo.modules_of_path(row.path_id);
-        for m in path_modules {
-            if !state.done.contains_key(&m) || state.done[&m] {
-                continue;
-            }
-            let after = topo.extract(m.level, theta_after);
-            let (delta, expected) = {
-                let store_g = store.lock().unwrap();
-                let before = store_g.get(m);
-                let delta: Vec<f32> =
-                    before.iter().zip(&after).map(|(b, a)| b - a).collect();
-                (delta, topo.paths_through(m))
-            };
-            let acc = state
-                .acc
+        let mut reader = SectionReader::open(&row.file)
+            .with_context(|| format!("executor opening {}", row.file.display()))?;
+        for m in wanted {
+            let delta = reader
+                .read(&m.delta_section())
+                .with_context(|| format!("executor reading {} of {}", m, row.file.display()))?;
+            cfg.io.sections_read.fetch_add(1, Ordering::Relaxed);
+            let expected = topo.paths_through(m);
+            let a = acc
                 .entry(m)
                 .or_insert_with(|| OuterAccumulator::new(delta.len()));
-            acc.add(&delta, w);
-            if acc.contributions() == expected {
-                let mut g = acc.average();
+            a.add(&delta, w);
+            if a.contributions() == expected {
+                let mut g = a.average();
                 let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
                 if scale != 1.0 {
                     g.iter_mut().for_each(|x| *x *= scale);
@@ -120,11 +166,17 @@ pub fn executor_loop(
                     let mut store_g = store.lock().unwrap();
                     opt.step(m, store_g.get_mut(m), &g);
                 }
-                state.done.insert(m, true);
+                done.insert(m, true);
                 remaining -= 1;
                 let _ = done_tx.send(ModuleDone { phase, module: m });
             }
         }
+        // The reader's own counter is authoritative: for a legacy DPC1
+        // fallback it reports the whole-file read, which a per-section
+        // sum would understate.
+        cfg.io
+            .payload_bytes_read
+            .fetch_add(reader.bytes_read(), Ordering::Relaxed);
     }
     Ok(())
 }
@@ -146,14 +198,17 @@ pub fn run_phase_outer(
     db: &Arc<CheckpointDb>,
     done_tx: &Sender<ModuleDone>,
 ) -> Result<usize> {
-    // Subscribe before replaying existing rows so nothing is missed.
+    // Subscribe before replaying existing rows so nothing is missed; rows
+    // landing in between may be delivered twice, which `executor_loop`
+    // dedups by (phase, path). Replaying only this phase's rows keeps the
+    // replay O(paths), not O(all rows ever).
     let subs: Vec<Receiver<CkptRow>> = shards
         .iter()
         .map(|_| {
             let (tx, rx) = channel();
             db.subscribe(tx.clone());
             // replay rows already present (tasks that finished early)
-            for row in db.rows_since(0) {
+            for row in db.query(phase, "path") {
                 let _ = tx.send(row);
             }
             rx
@@ -179,7 +234,8 @@ pub fn run_phase_outer(
 }
 
 /// Naive (non-sharded, non-online) outer update used as the §3.3 baseline
-/// in benches: wait for ALL checkpoints, then average and update serially.
+/// in benches: wait for ALL checkpoints, load each one IN FULL, then
+/// average and update serially.
 pub fn naive_phase_outer(
     topo: &Topology,
     store: &Mutex<ModuleStore>,
@@ -190,29 +246,31 @@ pub fn naive_phase_outer(
 ) -> Result<usize> {
     // gather everything first (the inefficiency under test)
     let rows = db.query(phase, "path");
-    let ckpts: Vec<(usize, Checkpoint)> = rows
-        .iter()
-        .map(|r| Ok((r.path_id, Checkpoint::load(&r.file)?)))
+    let ckpts: Vec<(CkptRow, Checkpoint)> = rows
+        .into_iter()
+        .map(|r| {
+            let ck = Checkpoint::load(&r.file)?;
+            Ok((r, ck))
+        })
         .collect::<Result<_>>()?;
     let mut n = 0;
     for m in topo.all_modules() {
         let mut acc = OuterAccumulator::new(topo.levels[m.level].size);
-        for (path_id, ck) in &ckpts {
-            if topo.expert_of(*path_id, m.level) != m.expert {
+        for (row, ck) in &ckpts {
+            // topology decides which paths feed this module; a traversing
+            // path's checkpoint missing the section errors loudly below
+            if topo.expert_of(row.path_id, m.level) != m.expert {
                 continue;
             }
-            let theta_after = ck.get("theta").context("theta")?;
-            let after = topo.extract(m.level, theta_after);
-            let store_g = store.lock().unwrap();
-            let before = store_g.get(m);
-            let delta: Vec<f32> = before.iter().zip(&after).map(|(b, a)| b - a).collect();
-            drop(store_g);
+            let delta = ck
+                .get(&m.delta_section())
+                .with_context(|| format!("ckpt missing section for module {m}"))?;
             let w = if cfg.diloco.loss_reweigh {
-                cfg.shard_sizes.get(*path_id).copied().unwrap_or(1).max(1) as f64
+                cfg.shard_sizes.get(row.path_id).copied().unwrap_or(1).max(1) as f64
             } else {
                 1.0
             };
-            acc.add(&delta, w);
+            acc.add(delta, w);
         }
         if acc.contributions() == 0 {
             continue;
@@ -243,9 +301,19 @@ mod tests {
         (topo, store, theta)
     }
 
-    fn save_path_ckpt(dir: &std::path::Path, phase: usize, path: usize, theta: Vec<f32>) -> CkptRow {
+    /// Worker-style sectioned checkpoint: one delta section per traversed
+    /// module (before - after), plus module metadata on the row.
+    fn save_path_ckpt(
+        dir: &std::path::Path,
+        topo: &Topology,
+        phase: usize,
+        path: usize,
+        before: &[f32],
+        after: &[f32],
+    ) -> CkptRow {
         let file = dir.join(format!("p{phase}-path{path}.dpc"));
-        Checkpoint::new().with("theta", theta).save(&file).unwrap();
+        let (ck, modules) = topo.delta_checkpoint(path, before, after);
+        ck.with("loss", vec![1.0]).save(&file).unwrap();
         CkptRow {
             rowid: 0,
             phase,
@@ -254,7 +322,16 @@ mod tests {
             file,
             step: 0,
             loss: 1.0,
+            modules,
         }
+    }
+
+    fn perturbed_after(theta: &[f32], p: usize) -> Vec<f32> {
+        theta
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v + 0.001 * (p as f32 + 1.0) * ((i % 7) as f32 - 3.0))
+            .collect()
     }
 
     #[test]
@@ -280,16 +357,13 @@ mod tests {
         let db = Arc::new(CheckpointDb::new());
         let mut rows = Vec::new();
         for p in 0..topo.paths {
-            let after: Vec<f32> = theta
-                .iter()
-                .enumerate()
-                .map(|(i, &v)| v + 0.001 * (p as f32 + 1.0) * ((i % 7) as f32 - 3.0))
-                .collect();
-            rows.push(save_path_ckpt(&dir, 0, p, after));
+            let after = perturbed_after(&theta, p);
+            rows.push(save_path_ckpt(&dir, &topo, 0, p, &theta, &after));
         }
         let cfg = OuterConfig {
             diloco: DilocoConfig::default(),
             shard_sizes: vec![10, 20, 30, 40],
+            io: OuterIoStats::default(),
         };
 
         // naive on store_b
@@ -347,7 +421,7 @@ mod tests {
         for p in 0..topo.paths {
             // all workers move +0.1 everywhere
             let after: Vec<f32> = theta.iter().map(|&v| v + 0.1).collect();
-            db.insert(save_path_ckpt(&dir, 0, p, after));
+            db.insert(save_path_ckpt(&dir, &topo, 0, p, &theta, &after));
         }
         let cfg = OuterConfig {
             diloco: DilocoConfig {
@@ -356,6 +430,7 @@ mod tests {
                 ..Default::default()
             },
             shard_sizes: vec![1; topo.paths],
+            io: OuterIoStats::default(),
         };
         let shards = shard_modules(&topo, 1);
         let mut opts = vec![Nesterov::new(0.7, 0.9)];
@@ -369,5 +444,120 @@ mod tests {
                 assert!(x > b, "module {m} did not move toward workers");
             }
         }
+    }
+
+    #[test]
+    fn duplicate_deliveries_are_deduped() {
+        // Regression test for the subscribe/replay double-delivery bug:
+        // a row delivered twice must be accumulated ONCE — before the
+        // dedup, contributions overshot `expected` and the phase hung.
+        let (topo, store, theta) = setup();
+        let store_ref = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
+        let dir = std::env::temp_dir().join(format!("dipaco-outer3-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![10, 20, 30, 40],
+            io: OuterIoStats::default(),
+        };
+        let dbb = CheckpointDb::new();
+        let mut rows = Vec::new();
+        for p in 0..topo.paths {
+            let after = perturbed_after(&theta, p);
+            rows.push(save_path_ckpt(&dir, &topo, 0, p, &theta, &after));
+        }
+        for r in &rows {
+            dbb.insert(r.clone());
+        }
+        let mut opt_ref = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        naive_phase_outer(&topo, &store_ref, &mut opt_ref, &cfg, 0, &dbb).unwrap();
+
+        // one executor owning everything; every row delivered TWICE
+        let owned = topo.all_modules();
+        let (tx, rx) = channel();
+        for r in &rows {
+            tx.send(r.clone()).unwrap();
+            tx.send(r.clone()).unwrap();
+        }
+        drop(tx); // a deadlock would surface as a channel-closed error
+        let mut opt = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        let (done_tx, _done_rx) = channel();
+        executor_loop(&topo, &store, &mut opt, &owned, &cfg, 0, &rx, &done_tx).unwrap();
+
+        let a = store.lock().unwrap();
+        let b = store_ref.lock().unwrap();
+        for m in topo.all_modules() {
+            for (x, y) in a.get(m).iter().zip(b.get(m)) {
+                assert!(
+                    (x - y).abs() < 1e-6,
+                    "module {m} double-accumulated: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn executor_reads_only_owned_sections() {
+        // Byte/section accounting: an executor must fetch exactly the
+        // sections of modules it owns — O(owned bytes), not O(total).
+        let (topo, store, theta) = setup();
+        let dir = std::env::temp_dir().join(format!("dipaco-outer4-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rows: Vec<CkptRow> = (0..topo.paths)
+            .map(|p| {
+                let after = perturbed_after(&theta, p);
+                save_path_ckpt(&dir, &topo, 0, p, &theta, &after)
+            })
+            .collect();
+        let shards = shard_modules(&topo, 2);
+        let full_bytes: u64 = rows
+            .iter()
+            .map(|r| std::fs::metadata(&r.file).unwrap().len())
+            .sum();
+        let mut total_section_bytes = 0u64;
+        for owned in &shards {
+            let cfg = OuterConfig {
+                diloco: DilocoConfig::default(),
+                shard_sizes: vec![1; topo.paths],
+                io: OuterIoStats::default(),
+            };
+            let (tx, rx) = channel();
+            for r in &rows {
+                tx.send(r.clone()).unwrap();
+            }
+            let mut opt = Nesterov::new(0.7, 0.9);
+            let (done_tx, _done_rx) = channel();
+            executor_loop(&topo, &store, &mut opt, owned, &cfg, 0, &rx, &done_tx).unwrap();
+
+            // expected: per row, exactly the owned modules it carries
+            let owned_set: std::collections::HashSet<ModuleId> = owned.iter().copied().collect();
+            let mut want_sections = 0u64;
+            let mut want_bytes = 0u64;
+            for r in &rows {
+                for m in r.modules.iter().filter(|m| owned_set.contains(*m)) {
+                    want_sections += 1;
+                    want_bytes += 4 * topo.levels[m.level].size as u64;
+                }
+            }
+            let (sections, bytes) = cfg.io.snapshot();
+            assert_eq!(sections, want_sections);
+            assert_eq!(bytes, want_bytes);
+            // each executor reads strictly less than loading every file
+            assert!(
+                bytes < full_bytes,
+                "owned-section reads ({bytes}) must stay below full loads ({full_bytes})"
+            );
+            total_section_bytes += bytes;
+        }
+        // across all shards, every delta payload is read exactly once —
+        // the phase total is size(m) x paths_through(m), independent of
+        // executor count (the old pipeline scaled with it)
+        let want_total: u64 = topo
+            .all_modules()
+            .iter()
+            .map(|&m| 4 * (topo.levels[m.level].size * topo.paths_through(m)) as u64)
+            .sum();
+        assert_eq!(total_section_bytes, want_total);
+        assert!(total_section_bytes < full_bytes);
     }
 }

@@ -1,12 +1,16 @@
 //! Phase orchestration — Algorithm 1 end to end over the §3 infrastructure.
 //!
 //! Per outer step t: assemble each path's parameters from the module
-//! store, enqueue one training task per path (workers may be fewer than
-//! paths — the queue then serves multiple *rounds*, paper §3.4), run the
-//! sharded outer-optimization executors concurrently so module averages
-//! accumulate online as checkpoints land, and finish when every module's
-//! outer update is applied. Evaluation tasks for early stopping ride the
-//! same queue (Figure 6).
+//! store (into a reused buffer — the full model is materialized only
+//! transiently, per path, never held for the whole phase), enqueue one
+//! training task per path (workers may be fewer than paths — the queue
+//! then serves multiple *rounds*, paper §3.4), run the sharded
+//! outer-optimization executors concurrently so module averages
+//! accumulate online as per-module delta sections land, and finish when
+//! every module's outer update is applied. Worker-local AdamW state
+//! chains through `opt_in`/`opt_out` files — the coordinator never
+//! re-reads it. Evaluation tasks for early stopping ride the same queue
+//! (Figure 6).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -18,7 +22,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{DilocoConfig, RunConfig};
 use crate::coordinator::db::CheckpointDb;
-use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig};
+use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig, OuterIoStats};
 use crate::coordinator::queue::TaskQueue;
 use crate::coordinator::task::{Task, TrainTask};
 use crate::coordinator::worker::{WorkerCtx, WorkerPool};
@@ -26,7 +30,7 @@ use crate::data::corpus::Corpus;
 use crate::data::dataset::Sharding;
 use crate::info;
 use crate::optim::Nesterov;
-use crate::params::checkpoint::Checkpoint;
+use crate::params::checkpoint;
 use crate::runtime::engine::Engine;
 use crate::topology::{ModuleStore, Topology};
 
@@ -38,6 +42,11 @@ pub struct PhaseStats {
     pub wallclock_s: f64,
     pub outer_update_s: f64,
     pub requeues: u64,
+    /// Checkpoint sections the outer executors fetched this phase.
+    pub outer_sections_read: u64,
+    /// Payload bytes those fetches served — O(module size × paths-through),
+    /// not O(total_params × paths × executors).
+    pub outer_bytes_read: u64,
 }
 
 pub struct DipacoRun {
@@ -57,9 +66,12 @@ pub struct DipacoRun {
     outer_opts: Vec<Nesterov>,
     executor_shards: Vec<Vec<crate::topology::ModuleId>>,
     next_task_id: u64,
-    /// Per-path optimizer state carried across phases (m, v). Paths keep
-    /// their AdamW moments like DiLoCo workers do.
-    opt_state: HashMap<usize, (Vec<f32>, Vec<f32>)>,
+    /// Per-path pointer to the worker-local AdamW state file written by
+    /// the latest completed phase (paths keep their moments like DiLoCo
+    /// workers do; the state itself never passes through the coordinator).
+    opt_files: HashMap<usize, PathBuf>,
+    /// Reused assembly buffer (`total_params` floats, allocated once).
+    assemble_buf: Vec<f32>,
     pub stats: Vec<PhaseStats>,
 }
 
@@ -93,6 +105,7 @@ impl DipacoRun {
             Arc::clone(&db),
             Arc::clone(&corpus),
             Arc::clone(&sharding),
+            Arc::clone(&topo),
             diloco.clone(),
             run.clone(),
             early_stop,
@@ -118,7 +131,8 @@ impl DipacoRun {
             outer_opts,
             executor_shards,
             next_task_id: 1,
-            opt_state: HashMap::new(),
+            opt_files: HashMap::new(),
+            assemble_buf: Vec::new(),
             stats: Vec::new(),
         })
     }
@@ -139,20 +153,21 @@ impl DipacoRun {
         std::fs::create_dir_all(&phase_dir)?;
 
         // ---- assemble per-path inputs from the current global modules ----
-        let n = self.engine.manifest.total_params;
+        // Theta only: AdamW state chains through worker-local opt files.
+        let opt_dir = self.rundir.join("opt");
+        std::fs::create_dir_all(&opt_dir)?;
         let mut tasks = Vec::with_capacity(self.topo.paths);
         for path in 0..self.topo.paths {
-            let theta = self.store.lock().unwrap().assemble(&self.topo, path);
-            let (m, v) = self
-                .opt_state
-                .remove(&path)
-                .unwrap_or_else(|| (vec![0.0; n], vec![0.0; n]));
+            {
+                let store = self.store.lock().unwrap();
+                self.topo.assemble_into(&store, path, &mut self.assemble_buf);
+            }
             let ckpt_in = phase_dir.join(format!("path{path}.in.dpc"));
-            Checkpoint::new()
-                .with("theta", theta)
-                .with("m", m)
-                .with("v", v)
-                .save(&ckpt_in)?;
+            checkpoint::save_sections(&ckpt_in, &[("theta", self.assemble_buf.as_slice())])?;
+            let opt_out = opt_dir.join(format!("path{path}.t{phase}.opt.dpc"));
+            // None on the path's first phase (worker starts from zero
+            // moments); otherwise the previous phase's state file.
+            let opt_in = self.opt_files.insert(path, opt_out.clone());
             tasks.push(Task::Train(TrainTask {
                 id: self.next_task_id,
                 phase,
@@ -161,16 +176,19 @@ impl DipacoRun {
                 start_step: phase * self.diloco.inner_steps,
                 ckpt_in,
                 ckpt_out: phase_dir.join(format!("path{path}.out.dpc")),
+                opt_in,
+                opt_out,
             }));
             self.next_task_id += 1;
         }
         self.queue.push_all(tasks);
 
-        // ---- outer executors consume checkpoints online ----
+        // ---- outer executors consume per-module delta sections online ----
         let outer_t0 = Instant::now();
         let cfg = OuterConfig {
             diloco: self.diloco.clone(),
             shard_sizes: self.sharding.sizes(),
+            io: OuterIoStats::default(),
         };
         let (done_tx, _done_rx) = channel();
         run_phase_outer(
@@ -184,18 +202,7 @@ impl DipacoRun {
             &done_tx,
         )?;
         let outer_update_s = outer_t0.elapsed().as_secs_f64();
-
-        // carry forward per-path AdamW state from the out checkpoints
-        for path in 0..self.topo.paths {
-            let row = self
-                .db
-                .lookup(phase, path, "path")
-                .context("missing path checkpoint row")?;
-            let mut ck = Checkpoint::load(&row.file)?;
-            if let (Some(m), Some(v)) = (ck.take("m"), ck.take("v")) {
-                self.opt_state.insert(path, (m, v));
-            }
-        }
+        let (io_sections, io_bytes) = cfg.io.snapshot();
 
         // drain outstanding eval tasks before closing the phase books
         self.queue
@@ -210,14 +217,19 @@ impl DipacoRun {
             wallclock_s: t0.elapsed().as_secs_f64(),
             outer_update_s,
             requeues: self.queue.stats().requeues - requeues_before,
+            outer_sections_read: io_sections,
+            outer_bytes_read: io_bytes,
         };
         info!(
             "phases",
-            "phase {phase}: loss={:.4} wall={:.1}s outer={:.2}s requeues={}",
+            "phase {phase}: loss={:.4} wall={:.1}s outer={:.2}s requeues={} \
+             exec_io={}sec/{}KiB",
             stats.mean_train_loss,
             stats.wallclock_s,
             stats.outer_update_s,
-            stats.requeues
+            stats.requeues,
+            stats.outer_sections_read,
+            stats.outer_bytes_read / 1024
         );
         self.stats.push(stats.clone());
         Ok(stats)
@@ -248,8 +260,9 @@ impl DipacoRun {
         let mut out = HashMap::new();
         for p in 0..self.topo.paths {
             if let Some((_, ckpt)) = best.get(&p) {
-                let ck = Checkpoint::load(ckpt)?;
-                out.insert(p, ck.get("theta").context("theta")?.to_vec());
+                let theta = checkpoint::load_section(ckpt, "theta")
+                    .with_context(|| format!("best checkpoint for path {p}"))?;
+                out.insert(p, theta);
             } else {
                 out.insert(p, self.path_theta(p));
             }

@@ -241,6 +241,17 @@ impl TaskQueue {
                     ("start_step", Json::num(t.start_step as f64)),
                     ("ckpt_in", Json::str(t.ckpt_in.to_string_lossy())),
                     ("ckpt_out", Json::str(t.ckpt_out.to_string_lossy())),
+                    // empty string = None (path's first phase)
+                    (
+                        "opt_in",
+                        Json::str(
+                            t.opt_in
+                                .as_ref()
+                                .map(|p| p.to_string_lossy().into_owned())
+                                .unwrap_or_default(),
+                        ),
+                    ),
+                    ("opt_out", Json::str(t.opt_out.to_string_lossy())),
                 ]),
                 Task::Eval(t) => Json::obj(vec![
                     ("kind", Json::str("eval")),
@@ -283,6 +294,16 @@ impl TaskQueue {
                     start_step: j.req("start_step")?.as_usize().unwrap_or(0),
                     ckpt_in: j.req("ckpt_in")?.as_str().unwrap_or("").into(),
                     ckpt_out: j.req("ckpt_out")?.as_str().unwrap_or("").into(),
+                    opt_in: j
+                        .get("opt_in")
+                        .and_then(|v| v.as_str())
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.into()),
+                    opt_out: j
+                        .get("opt_out")
+                        .and_then(|v| v.as_str())
+                        .unwrap_or("")
+                        .into(),
                 }),
                 _ => Task::Eval(EvalTask {
                     id,
@@ -317,6 +338,8 @@ mod tests {
             start_step: 0,
             ckpt_in: "in.dpc".into(),
             ckpt_out: "out.dpc".into(),
+            opt_in: Some("prev.opt.dpc".into()),
+            opt_out: "next.opt.dpc".into(),
         })
     }
 
@@ -412,9 +435,14 @@ mod tests {
         let _ = q.lease("w0", Duration::from_millis(10)).unwrap(); // one in flight
         let state = q.checkpoint_state();
         let q2 = TaskQueue::restore(&state, Duration::from_secs(5)).unwrap();
-        // all 5 tasks are retrievable from the restored queue
+        // all 5 tasks are retrievable from the restored queue, with the
+        // optimizer-state chain intact
         let mut ids = vec![];
         while let Some((l, t)) = q2.lease("w", Duration::from_millis(5)) {
+            if let Task::Train(tt) = &t {
+                assert_eq!(tt.opt_in.as_deref(), Some(std::path::Path::new("prev.opt.dpc")));
+                assert_eq!(tt.opt_out, std::path::PathBuf::from("next.opt.dpc"));
+            }
             ids.push(t.id());
             q2.complete(l);
         }

@@ -16,10 +16,20 @@ pub struct TrainTask {
     /// Global inner-step counter at task start (drives the LR schedule and
     /// AdamW bias correction).
     pub start_step: usize,
-    /// Input checkpoint (assembled path parameters + optimizer state).
+    /// Input checkpoint (assembled path parameters, `theta` section only —
+    /// optimizer state travels through the worker-local `opt_*` files).
     pub ckpt_in: PathBuf,
-    /// Where to write the result checkpoint.
+    /// Where to write the shipped result checkpoint: one
+    /// `delta:L{l}E{e}` section per traversed module plus `loss`.
     pub ckpt_out: PathBuf,
+    /// Worker-local AdamW state (`m`/`v`) from the previous phase; `None`
+    /// on a path's first phase (the worker starts from zero moments —
+    /// explicit, so a *lost* state file errors loudly instead of being
+    /// silently treated as genesis). Never shipped to the executors.
+    pub opt_in: Option<PathBuf>,
+    /// Where the worker writes this phase's AdamW state. Distinct from
+    /// `opt_in` so retried tasks stay idempotent.
+    pub opt_out: PathBuf,
 }
 
 /// Evaluation assignment: score a saved path checkpoint on its shard

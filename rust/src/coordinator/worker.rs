@@ -14,7 +14,15 @@
 //!
 //! Determinism despite retries: a task's batch stream is seeded by
 //! (phase, path), so a re-execution replays the identical inner steps and
-//! the checkpoint write is an atomic rename — retried tasks are idempotent.
+//! every file write is an atomic rename — retried tasks are idempotent
+//! (the optimizer-state chain reads `opt_in`, which no retry mutates).
+//!
+//! Module-sharded exchange (paper §3.3): after the inner phase the worker
+//! splits `theta_before - theta_after` itself and ships ONE
+//! `delta:L{l}E{e}` section per traversed module in a DPC2 checkpoint —
+//! executors then fetch only the sections of modules they own. AdamW
+//! moments (`m`/`v`) and the early-stopping eval copy of theta stay in
+//! worker-local files and are never shipped.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -31,8 +39,9 @@ use crate::coordinator::task::{EvalTask, Task, TrainTask};
 use crate::data::corpus::Corpus;
 use crate::data::dataset::{BatchSampler, Sharding};
 use crate::info;
-use crate::params::checkpoint::Checkpoint;
+use crate::params::checkpoint::{self, Checkpoint};
 use crate::runtime::engine::Engine;
+use crate::topology::Topology;
 use crate::util::rng::Rng;
 
 /// Shared context every worker thread gets.
@@ -42,6 +51,9 @@ pub struct WorkerCtx {
     pub db: Arc<CheckpointDb>,
     pub corpus: Arc<Corpus>,
     pub sharding: Arc<Sharding>,
+    /// Module/level/path algebra — the worker needs it to split its own
+    /// delta into per-module sections (paper Algorithm 1 line 13).
+    pub topo: Arc<Topology>,
     pub diloco: DilocoConfig,
     pub run: RunConfig,
     /// Early-stopping ledger: path -> (best holdout nll/token, ckpt).
@@ -64,6 +76,7 @@ impl WorkerCtx {
         db: Arc<CheckpointDb>,
         corpus: Arc<Corpus>,
         sharding: Arc<Sharding>,
+        topo: Arc<Topology>,
         diloco: DilocoConfig,
         run: RunConfig,
         eval_after_train: bool,
@@ -74,6 +87,7 @@ impl WorkerCtx {
             db,
             corpus,
             sharding,
+            topo,
             diloco,
             run,
             best: Mutex::new(HashMap::new()),
@@ -169,12 +183,36 @@ pub fn worker_loop(ctx: Arc<WorkerCtx>, name: String, backup: bool) {
 }
 
 fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
-    let mut ck = Checkpoint::load(&t.ckpt_in)
+    // Input checkpoint carries only the assembled theta; read just that
+    // section (random access — the file may hold more).
+    let before = checkpoint::load_section(&t.ckpt_in, "theta")
         .with_context(|| format!("loading input ckpt for path {}", t.path))?;
     let n = ctx.engine.manifest.total_params;
-    let mut theta = ck.take("theta").context("ckpt missing theta")?;
-    let mut m = ck.take("m").unwrap_or_else(|| vec![0.0; n]);
-    let mut v = ck.take("v").unwrap_or_else(|| vec![0.0; n]);
+    // Worker-local AdamW state from the previous phase. A missing file
+    // when the coordinator says one exists is an error, not a silent
+    // reset to zero moments.
+    let (mut m, mut v) = match &t.opt_in {
+        None => (vec![0.0; n], vec![0.0; n]),
+        Some(p) => {
+            let mut ock = Checkpoint::load(p)
+                .with_context(|| format!("loading opt state for path {}", t.path))?;
+            let m = ock
+                .take("m")
+                .with_context(|| format!("opt state {} missing m", p.display()))?;
+            let v = ock
+                .take("v")
+                .with_context(|| format!("opt state {} missing v", p.display()))?;
+            anyhow::ensure!(
+                m.len() == n && v.len() == n,
+                "opt state {} sized for a different model ({}/{} vs {n} params)",
+                p.display(),
+                m.len(),
+                v.len()
+            );
+            (m, v)
+        }
+    };
+    let mut theta = before.clone();
     let mc = ctx.engine.model();
     let shard = &ctx.sharding.shards[t.path];
     let mut sampler = BatchSampler::new(
@@ -227,16 +265,27 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
         }
     }
     let mean_loss = (loss_sum / t.steps.max(1) as f64) as f32;
+    // Worker-local optimizer state: stays on this "island of compute",
+    // never shipped through the exchange.
+    checkpoint::save_sections(&t.opt_out, &[("m", m.as_slice()), ("v", v.as_slice())])?;
+    // Worker-local full-theta copy for the early-stopping evaluator.
+    let eval_ckpt = if ctx.eval_after_train {
+        let p = t.ckpt_out.with_extension("eval.dpc");
+        checkpoint::save_sections(&p, &[("theta", theta.as_slice())])?;
+        Some(p)
+    } else {
+        None
+    };
+    // Ship one outer-gradient section per traversed module (paper
+    // Algorithm 1 line 13, split worker-side): executors fetch only the
+    // sections of modules they own.
+    let (ck, modules) = ctx.topo.delta_checkpoint(t.path, &before, &theta);
+    let ck = ck.with("loss", vec![mean_loss]);
     // Simulated cross-DC checkpoint transfer (Effingo, paper §3.3).
     if ctx.run.transfer_delay_ms > 0 {
         std::thread::sleep(Duration::from_millis(ctx.run.transfer_delay_ms));
     }
-    Checkpoint::new()
-        .with("theta", theta)
-        .with("m", m)
-        .with("v", v)
-        .with("loss", vec![mean_loss])
-        .save(&t.ckpt_out)?;
+    ck.save(&t.ckpt_out)?;
     ctx.db.insert(CkptRow {
         rowid: 0,
         phase: t.phase,
@@ -245,30 +294,31 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
         file: t.ckpt_out.clone(),
         step: t.start_step + t.steps,
         loss: mean_loss,
+        modules,
     });
-    if ctx.eval_after_train {
+    if let Some(ckpt) = eval_ckpt {
         let id = ctx.next_eval_id.fetch_add(1, Ordering::Relaxed);
         ctx.queue.push(Task::Eval(EvalTask {
             id,
             phase: t.phase,
             path: t.path,
-            ckpt: t.ckpt_out.clone(),
+            ckpt,
         }));
     }
     Ok(())
 }
 
 fn run_eval(ctx: &WorkerCtx, t: &EvalTask) -> Result<()> {
-    let ck = Checkpoint::load(&t.ckpt)?;
-    let theta = ck.get("theta").context("ckpt missing theta")?;
     let shard = &ctx.sharding.shards[t.path];
     if shard.holdout.is_empty() {
         return Ok(());
     }
+    let theta = checkpoint::load_section(&t.ckpt, "theta")
+        .with_context(|| format!("loading eval theta for path {}", t.path))?;
     let mc = ctx.engine.model();
     let (nll, count) = crate::eval::eval_docs(
         &ctx.engine,
-        theta,
+        &theta,
         &shard.holdout,
         &ctx.corpus,
         mc.seq_train,
@@ -287,6 +337,7 @@ fn run_eval(ctx: &WorkerCtx, t: &EvalTask) -> Result<()> {
         file: t.ckpt.clone(),
         step: 0,
         loss: per_tok as f32,
+        modules: Vec::new(),
     });
     Ok(())
 }

@@ -2,17 +2,56 @@
 //! checkpoints to the distributed file system; outer-optimization
 //! executors and evaluators load them as they appear in the DB).
 //!
-//! Format `DPC1`: per section `[name_len u32][name utf8][len u32][f32 LE
-//! data]`, with a Fletcher-64 checksum trailer so torn/corrupt writes are
-//! detected (workers get preempted mid-write in the failure-injection
-//! tests). Writes go through a temp file + atomic rename, matching the
+//! Format `DPC2` — sectioned with a random-access directory, so an
+//! outer-optimization executor can read *only the module sections it
+//! owns* (paper §3.3: "the overall model is never materialized in a
+//! single location") instead of parsing the whole file:
+//!
+//! ```text
+//! [0..4)    magic "DPC2"
+//! [4..8)    n_sections   u32 LE
+//! [8..12)   header_len   u32 LE   (bytes from offset 0 through dir_sum)
+//! per section (directory entry):
+//!   name_len u32 | name utf8 | offset u64 | len u32 (f32 count) | sum u64
+//! dir_sum   u64  — fletcher64 of bytes [0, header_len - 8)
+//! payloads: f32 LE data at each entry's absolute `offset`
+//! ```
+//!
+//! Per-section fletcher64 checksums plus the directory checksum detect
+//! torn/corrupt writes (workers get preempted mid-write in the
+//! failure-injection tests) without requiring a whole-file read. Writes
+//! go through a temp file + atomic rename, matching the
 //! crash-consistency contract real checkpoint stores provide.
+//!
+//! The previous flat format `DPC1` (sequential sections, whole-file
+//! checksum trailer) still loads; [`SectionReader`] falls back to a full
+//! parse for it. [`Checkpoint::save_dpc1`] is kept for the
+//! backward-compat and migration tests.
 
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-const MAGIC: &[u8; 4] = b"DPC1";
+const MAGIC_V1: &[u8; 4] = b"DPC1";
+const MAGIC_V2: &[u8; 4] = b"DPC2";
+
+/// Per-writer-unique temp name: a lease-expired task can be re-executed
+/// while the original writer is still alive, and two writers sharing one
+/// `.tmp` inode would corrupt the published file after the first rename.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_path(path: &Path) -> PathBuf {
+    path.with_extension(format!(
+        "tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Fixed header bytes before the directory entries: magic + n_sections +
+/// header_len; plus the trailing dir_sum.
+const DIR_FIXED: usize = 4 + 4 + 4 + 8;
 
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Checkpoint {
@@ -41,19 +80,30 @@ impl Checkpoint {
         Some(self.sections.remove(i).1)
     }
 
+    /// Write as DPC2 (atomic temp-file + rename).
     pub fn save(&self, path: &Path) -> Result<()> {
-        let tmp = path.with_extension("tmp");
+        let refs: Vec<(&str, &[f32])> = self
+            .sections
+            .iter()
+            .map(|(n, d)| (n.as_str(), d.as_slice()))
+            .collect();
+        save_sections(path, &refs)
+    }
+
+    /// Write in the legacy DPC1 layout (sequential sections, whole-file
+    /// checksum trailer). Kept so the format-migration tests can produce
+    /// previous-revision files; new code must use [`Checkpoint::save`].
+    pub fn save_dpc1(&self, path: &Path) -> Result<()> {
+        let tmp = tmp_path(path);
         {
             let mut buf: Vec<u8> = Vec::new();
-            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(MAGIC_V1);
             buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
             for (name, data) in &self.sections {
                 buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
                 buf.extend_from_slice(name.as_bytes());
                 buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
-                for &v in data {
-                    buf.extend_from_slice(&v.to_le_bytes());
-                }
+                write_f32s_le(&mut buf, data);
             }
             let sum = fletcher64(&buf);
             buf.extend_from_slice(&sum.to_le_bytes());
@@ -67,54 +117,324 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Load a whole checkpoint; dispatches on the magic (DPC2 or legacy
+    /// DPC1).
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut buf = Vec::new();
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?
-            .read_to_end(&mut buf)?;
-        if buf.len() < 16 || &buf[..4] != MAGIC {
-            bail!("{}: not a DPC1 checkpoint", path.display());
+        let buf = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        if buf.len() >= 4 && &buf[..4] == MAGIC_V1 {
+            return load_dpc1(&buf, path);
         }
-        let body = &buf[..buf.len() - 8];
-        let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
-        if fletcher64(body) != stored {
-            bail!("{}: checksum mismatch (torn write?)", path.display());
+        if buf.len() < DIR_FIXED || &buf[..4] != MAGIC_V2 {
+            bail!("{}: not a DPC checkpoint", path.display());
         }
-        let mut pos = 4;
-        let rd_u32 = |buf: &[u8], pos: &mut usize| -> Result<u32> {
-            if *pos + 4 > buf.len() {
-                bail!("truncated checkpoint");
+        let header_len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        if header_len < DIR_FIXED || header_len > buf.len() {
+            bail!("{}: truncated checkpoint header", path.display());
+        }
+        let dir = parse_directory(&buf[..header_len])
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut sections = Vec::with_capacity(dir.len());
+        for e in dir {
+            let start = e.offset as usize;
+            let end = start
+                .checked_add(e.len.checked_mul(4).context("section length overflow")?)
+                .context("section offset overflow")?;
+            if end > buf.len() {
+                bail!("{}: truncated section {}", path.display(), e.name);
             }
-            let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
-            *pos += 4;
-            Ok(v)
-        };
-        let n_sections = rd_u32(body, &mut pos)?;
-        let mut sections = Vec::with_capacity(n_sections as usize);
-        for _ in 0..n_sections {
-            let name_len = rd_u32(body, &mut pos)? as usize;
-            if pos + name_len > body.len() {
-                bail!("truncated checkpoint");
+            let bytes = &buf[start..end];
+            if fletcher64(bytes) != e.sum {
+                bail!(
+                    "{}: section {} checksum mismatch (torn write?)",
+                    path.display(),
+                    e.name
+                );
             }
-            let name = std::str::from_utf8(&body[pos..pos + name_len])
-                .context("bad section name")?
-                .to_string();
-            pos += name_len;
-            let len = rd_u32(body, &mut pos)? as usize;
-            if pos + 4 * len > body.len() {
-                bail!("truncated checkpoint");
-            }
-            let mut data = Vec::with_capacity(len);
-            for i in 0..len {
-                data.push(f32::from_le_bytes(
-                    body[pos + 4 * i..pos + 4 * i + 4].try_into().unwrap(),
-                ));
-            }
-            pos += 4 * len;
-            sections.push((name, data));
+            sections.push((e.name, read_f32s_le(bytes)));
         }
         Ok(Checkpoint { sections })
     }
+}
+
+/// Write sections directly from borrowed slices (no copies into an owned
+/// [`Checkpoint`]) — the per-phase hot path assembles into reused buffers
+/// and saves them straight from here.
+pub fn save_sections(path: &Path, sections: &[(&str, &[f32])]) -> Result<()> {
+    let mut header_len = DIR_FIXED;
+    for (name, _) in sections {
+        header_len += 4 + name.len() + 8 + 4 + 8;
+    }
+    let total_payload: usize = sections.iter().map(|(_, d)| d.len() * 4).sum();
+    let mut payload: Vec<u8> = Vec::with_capacity(total_payload);
+    let mut entries = Vec::with_capacity(sections.len());
+    for (name, data) in sections {
+        let start = payload.len();
+        write_f32s_le(&mut payload, data);
+        let sum = fletcher64(&payload[start..]);
+        entries.push((*name, (header_len + start) as u64, data.len() as u32, sum));
+    }
+    let mut head: Vec<u8> = Vec::with_capacity(header_len);
+    head.extend_from_slice(MAGIC_V2);
+    head.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    head.extend_from_slice(&(header_len as u32).to_le_bytes());
+    for (name, off, len, sum) in &entries {
+        head.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        head.extend_from_slice(name.as_bytes());
+        head.extend_from_slice(&off.to_le_bytes());
+        head.extend_from_slice(&len.to_le_bytes());
+        head.extend_from_slice(&sum.to_le_bytes());
+    }
+    let dir_sum = fletcher64(&head);
+    head.extend_from_slice(&dir_sum.to_le_bytes());
+    debug_assert_eq!(head.len(), header_len);
+    let tmp = tmp_path(path);
+    {
+        let mut f =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&head)?;
+        f.write_all(&payload)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {}", path.display()))?;
+    Ok(())
+}
+
+/// Random access to one section without reading the rest of the file.
+pub fn load_section(path: &Path, name: &str) -> Result<Vec<f32>> {
+    SectionReader::open(path)?
+        .read(name)
+        .with_context(|| format!("loading section {name} from {}", path.display()))
+}
+
+#[derive(Debug, Clone)]
+struct DirEntry {
+    name: String,
+    /// Absolute byte offset of the payload in the file.
+    offset: u64,
+    /// Section length in f32 elements.
+    len: usize,
+    /// fletcher64 of the payload bytes.
+    sum: u64,
+}
+
+/// Parse a complete DPC2 header slice (magic through dir_sum), verifying
+/// the directory checksum.
+fn parse_directory(head: &[u8]) -> Result<Vec<DirEntry>> {
+    if head.len() < DIR_FIXED || &head[..4] != MAGIC_V2 {
+        bail!("truncated section directory");
+    }
+    let n = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    let header_len = u32::from_le_bytes(head[8..12].try_into().unwrap()) as usize;
+    if header_len != head.len() {
+        bail!("section directory length mismatch");
+    }
+    let body_end = header_len - 8;
+    let stored = u64::from_le_bytes(head[body_end..].try_into().unwrap());
+    if fletcher64(&head[..body_end]) != stored {
+        bail!("section directory checksum mismatch (torn write?)");
+    }
+    let mut pos = 12usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if pos + 4 > body_end {
+            bail!("truncated section directory");
+        }
+        let name_len = u32::from_le_bytes(head[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        if pos + name_len + 8 + 4 + 8 > body_end {
+            bail!("truncated section directory");
+        }
+        let name = std::str::from_utf8(&head[pos..pos + name_len])
+            .context("bad section name")?
+            .to_string();
+        pos += name_len;
+        let offset = u64::from_le_bytes(head[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        let len = u32::from_le_bytes(head[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        let sum = u64::from_le_bytes(head[pos..pos + 8].try_into().unwrap());
+        pos += 8;
+        out.push(DirEntry {
+            name,
+            offset,
+            len,
+            sum,
+        });
+    }
+    if pos != body_end {
+        bail!("section directory size mismatch");
+    }
+    Ok(out)
+}
+
+/// Open-once random access over a checkpoint's sections: parses only the
+/// header directory, then serves `read(name)` calls with seek + exact
+/// payload reads. Tracks payload bytes served so callers (the executor
+/// path) can account I/O. For legacy DPC1 files (no directory) it falls
+/// back to a full-file parse and counts the whole file as read.
+pub struct SectionReader {
+    file: Option<std::fs::File>,
+    dir: Vec<DirEntry>,
+    legacy: Option<Checkpoint>,
+    bytes_read: u64,
+}
+
+impl SectionReader {
+    pub fn open(path: &Path) -> Result<SectionReader> {
+        let mut f =
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let mut fixed = [0u8; 12];
+        f.read_exact(&mut fixed)
+            .with_context(|| format!("{}: truncated checkpoint", path.display()))?;
+        if &fixed[..4] == MAGIC_V1 {
+            // Legacy flat format: no directory to seek by.
+            let ck = Checkpoint::load(path)?;
+            let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+            return Ok(SectionReader {
+                file: None,
+                dir: Vec::new(),
+                legacy: Some(ck),
+                bytes_read: bytes,
+            });
+        }
+        if &fixed[..4] != MAGIC_V2 {
+            bail!("{}: not a DPC checkpoint", path.display());
+        }
+        let header_len = u32::from_le_bytes(fixed[8..12].try_into().unwrap()) as usize;
+        // upper bound guards the pre-checksum allocation against a torn
+        // header_len field (16 MiB of directory ≈ hundreds of thousands
+        // of sections — far beyond any real topology)
+        if header_len < DIR_FIXED || header_len > (1 << 24) {
+            bail!("{}: corrupt checkpoint header", path.display());
+        }
+        let mut head = vec![0u8; header_len];
+        head[..12].copy_from_slice(&fixed);
+        f.read_exact(&mut head[12..])
+            .with_context(|| format!("{}: truncated checkpoint header", path.display()))?;
+        let dir = parse_directory(&head).with_context(|| format!("reading {}", path.display()))?;
+        Ok(SectionReader {
+            file: Some(f),
+            dir,
+            legacy: None,
+            bytes_read: 0,
+        })
+    }
+
+    /// Section names, in file order.
+    pub fn names(&self) -> Vec<&str> {
+        match &self.legacy {
+            Some(ck) => ck.sections.iter().map(|(n, _)| n.as_str()).collect(),
+            None => self.dir.iter().map(|e| e.name.as_str()).collect(),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        match &self.legacy {
+            Some(ck) => ck.get(name).is_some(),
+            None => self.dir.iter().any(|e| e.name == name),
+        }
+    }
+
+    /// Length (f32 count) of a section, from the directory alone.
+    pub fn len_of(&self, name: &str) -> Option<usize> {
+        match &self.legacy {
+            Some(ck) => ck.get(name).map(|d| d.len()),
+            None => self.dir.iter().find(|e| e.name == name).map(|e| e.len),
+        }
+    }
+
+    /// Payload bytes served so far (whole file for a legacy fallback).
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+
+    /// Read one section's data, verifying its checksum.
+    pub fn read(&mut self, name: &str) -> Result<Vec<f32>> {
+        if let Some(ck) = &self.legacy {
+            return ck
+                .get(name)
+                .map(|d| d.to_vec())
+                .with_context(|| format!("section {name} missing"));
+        }
+        let e = self
+            .dir
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("section {name} missing"))?
+            .clone();
+        let f = self.file.as_mut().expect("non-legacy reader has a file");
+        f.seek(SeekFrom::Start(e.offset))?;
+        let mut bytes = vec![0u8; e.len * 4];
+        f.read_exact(&mut bytes)
+            .with_context(|| format!("section {name}: truncated payload"))?;
+        if fletcher64(&bytes) != e.sum {
+            bail!("section {name}: checksum mismatch (torn write?)");
+        }
+        self.bytes_read += bytes.len() as u64;
+        Ok(read_f32s_le(&bytes))
+    }
+}
+
+fn load_dpc1(buf: &[u8], path: &Path) -> Result<Checkpoint> {
+    if buf.len() < 16 || &buf[..4] != MAGIC_V1 {
+        bail!("{}: not a DPC1 checkpoint", path.display());
+    }
+    let body = &buf[..buf.len() - 8];
+    let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if fletcher64(body) != stored {
+        bail!("{}: checksum mismatch (torn write?)", path.display());
+    }
+    let mut pos = 4;
+    let rd_u32 = |buf: &[u8], pos: &mut usize| -> Result<u32> {
+        if *pos + 4 > buf.len() {
+            bail!("truncated checkpoint");
+        }
+        let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+        *pos += 4;
+        Ok(v)
+    };
+    let n_sections = rd_u32(body, &mut pos)?;
+    let mut sections = Vec::with_capacity(n_sections as usize);
+    for _ in 0..n_sections {
+        let name_len = rd_u32(body, &mut pos)? as usize;
+        if pos + name_len > body.len() {
+            bail!("truncated checkpoint");
+        }
+        let name = std::str::from_utf8(&body[pos..pos + name_len])
+            .context("bad section name")?
+            .to_string();
+        pos += name_len;
+        let len = rd_u32(body, &mut pos)? as usize;
+        if pos + 4 * len > body.len() {
+            bail!("truncated checkpoint");
+        }
+        sections.push((name, read_f32s_le(&body[pos..pos + 4 * len])));
+        pos += 4 * len;
+    }
+    Ok(Checkpoint { sections })
+}
+
+/// Bulk f32 -> LE bytes: encodes through a stack block per 1024 floats
+/// instead of a 4-byte extend per element.
+fn write_f32s_le(out: &mut Vec<u8>, data: &[f32]) {
+    let mut block = [0u8; 4096];
+    out.reserve(data.len() * 4);
+    for chunk in data.chunks(1024) {
+        for (i, &v) in chunk.iter().enumerate() {
+            block[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&block[..4 * chunk.len()]);
+    }
+}
+
+/// Bulk LE bytes -> f32 into a preallocated vector (no per-element push).
+fn read_f32s_le(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let mut out = vec![0.0f32; bytes.len() / 4];
+    for (dst, src) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *dst = f32::from_le_bytes(src.try_into().unwrap());
+    }
+    out
 }
 
 fn fletcher64(data: &[u8]) -> u64 {
@@ -153,16 +473,35 @@ mod tests {
     }
 
     #[test]
-    fn detects_corruption() {
+    fn detects_directory_corruption() {
         let p = tmpdir().join("b.dpc");
         Checkpoint::new()
             .with("theta", vec![1.0; 100])
             .save(&p)
             .unwrap();
         let mut bytes = std::fs::read(&p).unwrap();
-        bytes[20] ^= 0xFF;
+        bytes[20] ^= 0xFF; // inside the directory entry
         std::fs::write(&p, &bytes).unwrap();
         assert!(Checkpoint::load(&p).is_err());
+        assert!(SectionReader::open(&p).is_err());
+    }
+
+    #[test]
+    fn detects_payload_corruption() {
+        let p = tmpdir().join("b2.dpc");
+        Checkpoint::new()
+            .with("theta", vec![1.0; 100])
+            .save(&p)
+            .unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 10] ^= 0xFF; // inside the theta payload
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        // directory is intact, so the reader opens — but the section read
+        // must reject the bad payload
+        let mut r = SectionReader::open(&p).unwrap();
+        assert!(r.read("theta").is_err());
     }
 
     #[test]
@@ -175,6 +514,21 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
         assert!(Checkpoint::load(&p).is_err());
+        let mut r = SectionReader::open(&p).unwrap();
+        assert!(r.read("theta").is_err());
+    }
+
+    #[test]
+    fn detects_truncated_directory() {
+        let p = tmpdir().join("c2.dpc");
+        Checkpoint::new()
+            .with("a-section-with-a-long-name", vec![1.0; 50])
+            .save(&p)
+            .unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..20]).unwrap(); // mid-directory
+        assert!(Checkpoint::load(&p).is_err());
+        assert!(SectionReader::open(&p).is_err());
     }
 
     #[test]
@@ -182,6 +536,7 @@ mod tests {
         let p = tmpdir().join("d.dpc");
         std::fs::write(&p, b"not a checkpoint at all").unwrap();
         assert!(Checkpoint::load(&p).is_err());
+        assert!(SectionReader::open(&p).is_err());
     }
 
     #[test]
@@ -189,5 +544,74 @@ mod tests {
         let p = tmpdir().join("e.dpc");
         Checkpoint::new().save(&p).unwrap();
         assert_eq!(Checkpoint::load(&p).unwrap().sections.len(), 0);
+    }
+
+    #[test]
+    fn dpc1_files_still_load() {
+        // Backward compat: files written by the previous revision (DPC1)
+        // load through both entry points.
+        let p = tmpdir().join("legacy.dpc");
+        let ck = Checkpoint::new()
+            .with("theta", (0..500).map(|i| i as f32 * 0.5).collect())
+            .with("m", vec![1.25; 64]);
+        ck.save_dpc1(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), ck);
+        // section access falls back to a full parse
+        let mut r = SectionReader::open(&p).unwrap();
+        assert!(r.has("m"));
+        assert_eq!(r.len_of("theta"), Some(500));
+        assert_eq!(r.read("m").unwrap(), vec![1.25; 64]);
+        assert_eq!(load_section(&p, "theta").unwrap().len(), 500);
+    }
+
+    #[test]
+    fn dpc1_to_dpc2_migration_roundtrip() {
+        let p1 = tmpdir().join("mig1.dpc");
+        let p2 = tmpdir().join("mig2.dpc");
+        let ck = Checkpoint::new()
+            .with("theta", (0..333).map(|i| (i as f32).sin()).collect())
+            .with("loss", vec![2.5]);
+        ck.save_dpc1(&p1).unwrap();
+        let loaded = Checkpoint::load(&p1).unwrap();
+        loaded.save(&p2).unwrap(); // re-save migrates to DPC2
+        assert_eq!(&std::fs::read(&p2).unwrap()[..4], b"DPC2");
+        assert_eq!(Checkpoint::load(&p2).unwrap(), ck);
+    }
+
+    #[test]
+    fn section_random_access_reads_only_that_payload() {
+        let p = tmpdir().join("ra.dpc");
+        Checkpoint::new()
+            .with("big", vec![9.0; 10_000])
+            .with("small", vec![1.0, 2.0, 3.0])
+            .with("other", vec![7.0; 5_000])
+            .save(&p)
+            .unwrap();
+        let mut r = SectionReader::open(&p).unwrap();
+        assert_eq!(r.names(), vec!["big", "small", "other"]);
+        let small = r.read("small").unwrap();
+        assert_eq!(small, vec![1.0, 2.0, 3.0]);
+        // byte accounting: exactly the requested section's payload
+        assert_eq!(r.bytes_read(), 3 * 4);
+        let file_len = std::fs::metadata(&p).unwrap().len();
+        assert!(r.bytes_read() < file_len / 100);
+        // convenience helper agrees
+        assert_eq!(load_section(&p, "small").unwrap(), small);
+        assert!(load_section(&p, "missing").is_err());
+    }
+
+    #[test]
+    fn save_sections_matches_checkpoint_save() {
+        let p1 = tmpdir().join("ss1.dpc");
+        let p2 = tmpdir().join("ss2.dpc");
+        let a: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let b = vec![0.5f32; 7];
+        Checkpoint::new()
+            .with("a", a.clone())
+            .with("b", b.clone())
+            .save(&p1)
+            .unwrap();
+        save_sections(&p2, &[("a", &a), ("b", &b)]).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
     }
 }

@@ -16,6 +16,7 @@
 //! outer gradients, run after).
 
 use crate::config::{StemPlacement, TopologySpec};
+use crate::params::checkpoint::Checkpoint;
 use crate::params::manifest::Manifest;
 use std::collections::HashMap;
 use std::ops::Range;
@@ -29,6 +30,29 @@ pub struct ModuleId {
 impl std::fmt::Display for ModuleId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "L{}E{}", self.level, self.expert)
+    }
+}
+
+impl ModuleId {
+    /// Parse the canonical `L{l}E{e}` form (inverse of `Display`).
+    pub fn parse(s: &str) -> Option<ModuleId> {
+        let rest = s.strip_prefix('L')?;
+        let (l, e) = rest.split_once('E')?;
+        Some(ModuleId {
+            level: l.parse().ok()?,
+            expert: e.parse().ok()?,
+        })
+    }
+
+    /// DPC2 checkpoint section carrying this module's outer gradient
+    /// (`delta:L{l}E{e}` — the worker->executor exchange unit).
+    pub fn delta_section(&self) -> String {
+        format!("delta:{self}")
+    }
+
+    /// Inverse of [`ModuleId::delta_section`].
+    pub fn parse_delta_section(name: &str) -> Option<ModuleId> {
+        ModuleId::parse(name.strip_prefix("delta:")?)
     }
 }
 
@@ -229,12 +253,80 @@ impl Topology {
 
     /// Gather a level's segments from a flat vector.
     pub fn extract(&self, level: usize, theta: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.extract_into(level, theta, &mut out);
+        out
+    }
+
+    /// [`Topology::extract`] into a reused buffer — the per-phase hot
+    /// paths call this once per module per path and must not allocate a
+    /// fresh vector each time.
+    pub fn extract_into(&self, level: usize, theta: &[f32], out: &mut Vec<f32>) {
         let lv = &self.levels[level];
-        let mut out = Vec::with_capacity(lv.size);
+        out.clear();
+        out.reserve(lv.size);
         for r in &lv.segments {
             out.extend_from_slice(&theta[r.clone()]);
         }
-        out
+    }
+
+    /// Assemble a path's theta from the module store into a reused buffer
+    /// (no `total_params` allocation per path).
+    pub fn assemble_into(&self, store: &ModuleStore, path: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.total_params, 0.0);
+        for m in self.modules_of_path(path) {
+            self.scatter(m.level, store.get(m), out);
+        }
+    }
+
+    /// Worker-side outer gradients for one path: per traversed module, the
+    /// slices of `before - after` (paper Algorithm 1 line 13). Subtraction
+    /// happens segment-by-segment — no `total_params`-sized intermediate.
+    pub fn split_delta(
+        &self,
+        path: usize,
+        before: &[f32],
+        after: &[f32],
+    ) -> Vec<(ModuleId, Vec<f32>)> {
+        debug_assert_eq!(before.len(), after.len());
+        self.modules_of_path(path)
+            .into_iter()
+            .map(|m| {
+                let lv = &self.levels[m.level];
+                let mut delta = Vec::with_capacity(lv.size);
+                for r in &lv.segments {
+                    delta.extend(
+                        before[r.clone()]
+                            .iter()
+                            .zip(&after[r.clone()])
+                            .map(|(b, a)| b - a),
+                    );
+                }
+                (m, delta)
+            })
+            .collect()
+    }
+
+    /// The worker->executor exchange unit for one path: a checkpoint with
+    /// one `delta:L{l}E{e}` section per traversed module, plus the module
+    /// list for the DB row's metadata. The single writer of this layout —
+    /// the production worker, the outer tests, and the benches all build
+    /// their files here so the format can't silently diverge.
+    pub fn delta_checkpoint(
+        &self,
+        path: usize,
+        before: &[f32],
+        after: &[f32],
+    ) -> (Checkpoint, Vec<ModuleId>) {
+        let parts = self.split_delta(path, before, after);
+        let mut modules = Vec::with_capacity(parts.len());
+        let mut ck = Checkpoint::new();
+        for (mid, delta) in parts {
+            modules.push(mid);
+            ck = ck.with(&mid.delta_section(), delta);
+        }
+        (ck, modules)
     }
 
     /// Scatter module data back into a flat vector.
@@ -288,28 +380,9 @@ impl ModuleStore {
 
     /// theta for a path: gather its module of each level.
     pub fn assemble(&self, topo: &Topology, path: usize) -> Vec<f32> {
-        let mut theta = vec![0.0f32; topo.total_params];
-        for m in topo.modules_of_path(path) {
-            topo.scatter(m.level, &self.modules[&m], &mut theta);
-        }
+        let mut theta = Vec::new();
+        topo.assemble_into(self, path, &mut theta);
         theta
-    }
-
-    /// Outer gradient per module for one path: slices of
-    /// `theta_before - theta_after` (paper Algorithm 1 line 13).
-    pub fn split_delta(
-        &self,
-        topo: &Topology,
-        path: usize,
-        before: &[f32],
-        after: &[f32],
-    ) -> Vec<(ModuleId, Vec<f32>)> {
-        debug_assert_eq!(before.len(), after.len());
-        let delta: Vec<f32> = before.iter().zip(after).map(|(b, a)| b - a).collect();
-        topo.modules_of_path(path)
-            .into_iter()
-            .map(|m| (m, topo.extract(m.level, &delta)))
-            .collect()
     }
 
     pub fn get(&self, m: ModuleId) -> &[f32] {
@@ -434,8 +507,7 @@ mod tests {
         let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
         let before: Vec<f32> = (0..m.total_params).map(|i| i as f32).collect();
         let after: Vec<f32> = before.iter().map(|v| v * 0.5 + 1.0).collect();
-        let store = ModuleStore::from_base(&t, &before);
-        let parts = store.split_delta(&t, 3, &before, &after);
+        let parts = t.split_delta(3, &before, &after);
         // scatter all parts back: must equal before-after elementwise
         let mut recon = vec![0.0f32; m.total_params];
         for (mid, data) in &parts {
@@ -443,6 +515,33 @@ mod tests {
         }
         for i in 0..recon.len() {
             assert!((recon[i] - (before[i] - after[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn module_id_parse_roundtrip() {
+        let m = ModuleId { level: 3, expert: 11 };
+        assert_eq!(ModuleId::parse(&m.to_string()), Some(m));
+        assert_eq!(ModuleId::parse_delta_section(&m.delta_section()), Some(m));
+        assert_eq!(ModuleId::parse("E1L2"), None);
+        assert_eq!(ModuleId::parse_delta_section("theta"), None);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        let theta: Vec<f32> = (0..m.total_params).map(|i| (i % 13) as f32).collect();
+        let store = ModuleStore::from_base(&t, &theta);
+        let mut buf = vec![99.0f32; 3]; // dirty, wrong-sized buffer
+        for p in 0..t.paths {
+            t.assemble_into(&store, p, &mut buf);
+            assert_eq!(buf, store.assemble(&t, p), "path {p}");
+        }
+        let mut seg = vec![1.0f32; 1];
+        for l in 0..t.levels.len() {
+            t.extract_into(l, &theta, &mut seg);
+            assert_eq!(seg, t.extract(l, &theta), "level {l}");
         }
     }
 

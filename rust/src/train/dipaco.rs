@@ -106,6 +106,14 @@ impl DipacoRecipe {
         let mut phase_stats = run.stats.clone();
         let mut thetas = run.all_path_thetas();
         let mut early = run.early_stopped_thetas()?;
+        // Stage-1 result in module space — stage 2 continues from these
+        // modules directly instead of re-extracting them from re-assembled
+        // full-theta vectors.
+        let stage1_modules = if disc_phases > 0 {
+            Some(run.store.lock().unwrap().clone())
+        } else {
+            None
+        };
         let mut final_router = router;
         let mut final_sharding = sharding;
         run.shutdown();
@@ -133,9 +141,9 @@ impl DipacoRecipe {
             ));
             info!("dipaco", "discriminative shard sizes: {:?}", disc_shard.sizes());
 
-            // Continue from the CURRENT modules: rebuild a run whose store
-            // starts at the stage-1 result. We reconstruct per-path thetas
-            // into a fresh store via the base theta then overwrite modules.
+            // Continue from the CURRENT modules: the new run's store is
+            // seeded with the stage-1 module store as-is (module space to
+            // module space — the full model is never re-materialized).
             let mut run2 = DipacoRun::new(
                 Arc::clone(&self.engine),
                 Arc::clone(&self.corpus),
@@ -147,17 +155,8 @@ impl DipacoRecipe {
                 self.rundir.join("disc"),
                 self.early_stop,
             )?;
-            {
-                // Seed the new store with stage-1 module values.
-                let mut store = run2.store.lock().unwrap();
-                for m in topo.all_modules() {
-                    // module value = slice of any path through it
-                    let path = topo.paths_of_module(m)[0];
-                    let theta = &thetas[&path];
-                    let data = topo.extract(m.level, theta);
-                    *store.get_mut(m) = data;
-                }
-            }
+            *run2.store.lock().unwrap() =
+                stage1_modules.expect("stage-1 store captured when disc_phases > 0");
             // offset the schedule so LR continues decaying
             for t in 0..disc_phases {
                 // phases continue numbering after stage 1

@@ -62,12 +62,11 @@ impl Env {
             self.engine.manifest.preset
         ));
         if cache.exists() {
-            if let Ok(ck) = Checkpoint::load(&cache) {
-                if let Some(theta) = ck.get("theta") {
-                    if theta.len() == self.engine.manifest.total_params {
-                        info!("env", "base model loaded from {}", cache.display());
-                        return Ok(theta.to_vec());
-                    }
+            // random access: the cache also holds m/v, skip them entirely
+            if let Ok(theta) = crate::params::checkpoint::load_section(&cache, "theta") {
+                if theta.len() == self.engine.manifest.total_params {
+                    info!("env", "base model loaded from {}", cache.display());
+                    return Ok(theta);
                 }
             }
             // fall through to retrain on any mismatch

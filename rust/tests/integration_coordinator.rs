@@ -82,6 +82,31 @@ fn dipaco_phases_train_and_average() {
     for phase in 0..4 {
         assert_eq!(run.db.query(phase, "path").len(), topo.paths);
     }
+    // module-sharded exchange: per phase the executors read exactly one
+    // delta section per (module, path-through) pair — O(module size x
+    // paths-through) bytes, never the full theta per row
+    let want_sections: u64 = topo
+        .all_modules()
+        .iter()
+        .map(|&m| topo.paths_through(m) as u64)
+        .sum();
+    let want_bytes: u64 = topo
+        .all_modules()
+        .iter()
+        .map(|&m| 4 * (topo.levels[m.level].size * topo.paths_through(m)) as u64)
+        .sum();
+    // pre-DPC2 pipeline: EVERY executor loaded each row's full
+    // theta+m+v checkpoint (executors x paths x 3 x total_params floats)
+    let old_bytes = 2 * topo.paths as u64 * 3 * 4 * engine.manifest.total_params as u64;
+    for s in &run.stats {
+        assert_eq!(s.outer_sections_read, want_sections, "phase {}", s.phase);
+        assert_eq!(s.outer_bytes_read, want_bytes, "phase {}", s.phase);
+        assert!(
+            s.outer_bytes_read * 4 <= old_bytes,
+            "expected >= 4x I/O reduction: {} vs {old_bytes}",
+            s.outer_bytes_read
+        );
+    }
     // modules actually moved from the base
     let store = run.store.lock().unwrap();
     let mut moved = 0;
@@ -155,6 +180,10 @@ fn monitor_respawns_crashed_workers() {
     use dipaco::params::checkpoint::Checkpoint;
 
     let sharding = Arc::new(Sharding::random(&corpus, 2, 0.0, 3));
+    let topo = Arc::new(Topology::build(
+        &engine.manifest,
+        &TopologySpec::grid(vec![2]),
+    ));
     let queue = Arc::new(TaskQueue::new(Duration::from_secs(30)));
     let db = Arc::new(CheckpointDb::new());
     let mut ctx = WorkerCtx::new(
@@ -163,6 +192,7 @@ fn monitor_respawns_crashed_workers() {
         Arc::clone(&db),
         Arc::clone(&corpus),
         sharding,
+        topo,
         diloco(2, 20),
         RunConfig {
             workers: 2,
@@ -178,13 +208,10 @@ fn monitor_respawns_crashed_workers() {
     let dir = rundir("monitor");
     std::fs::create_dir_all(&dir).unwrap();
     let base = engine.init(0).unwrap();
-    let n = engine.manifest.total_params;
     for i in 0..6u64 {
         let ckpt_in = dir.join(format!("t{i}.in.dpc"));
         Checkpoint::new()
             .with("theta", base.clone())
-            .with("m", vec![0.0; n])
-            .with("v", vec![0.0; n])
             .save(&ckpt_in)
             .unwrap();
         queue.push(Task::Train(TrainTask {
@@ -195,6 +222,8 @@ fn monitor_respawns_crashed_workers() {
             start_step: 0,
             ckpt_in,
             ckpt_out: dir.join(format!("t{i}.out.dpc")),
+            opt_in: None,
+            opt_out: dir.join(format!("t{i}.opt.dpc")),
         }));
     }
     queue.wait_idle(Duration::from_millis(20));
