@@ -7,7 +7,7 @@
 PYTHON ?= python3
 PRESETS ?= test path large
 
-.PHONY: artifacts build test bench bench-ckpt clippy fmt
+.PHONY: artifacts build test bench bench-ckpt chaos chaos-sweep clippy fmt
 
 artifacts:
 	@for p in $(PRESETS); do \
@@ -25,6 +25,19 @@ test:
 # executor bytes-read-per-phase (CSV under results/bench/).
 bench-ckpt:
 	cargo bench --bench bench_ckpt
+
+# Chaos harness (DESIGN.md "Failure model"): named fault-injection
+# scenarios with fixed seeds, judged by convergence-equivalence oracles.
+# Engine-free — no `make artifacts` needed.
+chaos:
+	cargo test -q --test integration_chaos
+
+# Weekly seed sweep: random fault plans, one ChaosReport JSON per seed
+# under results/chaos/. DIPACO_CHAOS_SEEDS / DIPACO_CHAOS_SEED0 override
+# the count and the first seed.
+chaos-sweep:
+	mkdir -p results/chaos
+	cargo test -q --test integration_chaos -- --ignored --nocapture
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

@@ -1,0 +1,120 @@
+//! Torn-write simulator for DPC2 checkpoint files.
+//!
+//! Mutates an on-disk checkpoint the way a crashed writer or bad disk
+//! would, so the fletcher64 verification in [`crate::params::checkpoint`]
+//! is exercised end to end through the coordinator path (executor opens
+//! the file via `SectionReader` and must fail loudly, never average
+//! garbage into the `ModuleStore`). Three damage modes, each tripping a
+//! *different* detector:
+//!
+//! * [`CorruptMode::TruncatePayload`] — cut the file mid-payload; the
+//!   section read past the cut fails with "truncated payload" before any
+//!   checksum is even computed.
+//! * [`CorruptMode::FlipPayloadByte`] — flip one payload byte; the
+//!   per-section fletcher64 reports "checksum mismatch (torn write?)".
+//! * [`CorruptMode::DamageDirectory`] — flip a byte of the directory
+//!   trailer checksum; `SectionReader::open` itself refuses the file
+//!   ("section directory checksum mismatch").
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptMode {
+    TruncatePayload,
+    FlipPayloadByte,
+    DamageDirectory,
+}
+
+impl fmt::Display for CorruptMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            CorruptMode::TruncatePayload => "truncate-payload",
+            CorruptMode::FlipPayloadByte => "flip-payload-byte",
+            CorruptMode::DamageDirectory => "damage-directory",
+        })
+    }
+}
+
+/// Damage `path` in place. The file must be a DPC2 checkpoint; the header
+/// is parsed just enough to aim the damage at the right region (payload
+/// vs directory trailer).
+pub fn corrupt_file(path: &Path, mode: CorruptMode) -> Result<()> {
+    let mut bytes =
+        std::fs::read(path).with_context(|| format!("corruptor reading {}", path.display()))?;
+    anyhow::ensure!(
+        bytes.len() >= 12 && &bytes[..4] == b"DPC2",
+        "{}: corruptor needs a DPC2 file",
+        path.display()
+    );
+    let header_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    anyhow::ensure!(
+        (20..bytes.len()).contains(&header_len),
+        "{}: implausible header length {header_len}",
+        path.display()
+    );
+    let payload = bytes.len() - header_len;
+    match mode {
+        CorruptMode::TruncatePayload => {
+            anyhow::ensure!(payload >= 2, "{}: no payload to truncate", path.display());
+            bytes.truncate(header_len + payload / 2);
+        }
+        CorruptMode::FlipPayloadByte => {
+            anyhow::ensure!(payload >= 1, "{}: no payload to flip", path.display());
+            let i = header_len + (payload - 1).min(100);
+            bytes[i] ^= 0xFF;
+        }
+        CorruptMode::DamageDirectory => {
+            // last byte of the directory trailer checksum
+            bytes[header_len - 1] ^= 0xFF;
+        }
+    }
+    // plain non-atomic write: we are *simulating* a torn write
+    std::fs::write(path, &bytes).with_context(|| format!("corruptor writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::checkpoint::save_sections;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dipaco-corruptor-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn refuses_non_dpc2_files() {
+        let p = tmp("not-dpc");
+        std::fs::write(&p, b"hello world, definitely not a checkpoint").unwrap();
+        let err = corrupt_file(&p, CorruptMode::FlipPayloadByte).unwrap_err();
+        assert!(format!("{err:#}").contains("needs a DPC2 file"));
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn truncation_shrinks_flip_preserves_length() {
+        let data: Vec<f32> = (0..128).map(|i| i as f32).collect();
+        let p = tmp("trunc");
+        save_sections(&p, &[("theta", data.as_slice())]).unwrap();
+        let full = std::fs::metadata(&p).unwrap().len();
+        corrupt_file(&p, CorruptMode::TruncatePayload).unwrap();
+        assert!(std::fs::metadata(&p).unwrap().len() < full);
+
+        let p2 = tmp("flip");
+        save_sections(&p2, &[("theta", data.as_slice())]).unwrap();
+        let before = std::fs::read(&p2).unwrap();
+        corrupt_file(&p2, CorruptMode::FlipPayloadByte).unwrap();
+        let after = std::fs::read(&p2).unwrap();
+        assert_eq!(before.len(), after.len());
+        assert_eq!(
+            before.iter().zip(&after).filter(|(a, b)| a != b).count(),
+            1,
+            "exactly one byte flipped"
+        );
+        for f in [p, p2] {
+            std::fs::remove_file(&f).unwrap();
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Runtime fault delivery: turns a declarative [`FaultPlan`] into hooks
+//! the worker/coordinator plumbing consults at well-defined points.
+//!
+//! Three hook sites, mirroring where real failures strike:
+//!
+//! * [`FaultInjector::on_task_start`] — right after a lease is granted,
+//!   before any compute. Kill (abandon the lease), preempt (fail it),
+//!   stall past expiry, or straggle.
+//! * [`FaultInjector::before_publish`] / [`FaultInjector::mark_published`]
+//!   — around the checkpoint save + DB insert. Delay or reorder
+//!   publication (reorders block on a condvar until the dependency's
+//!   `mark_published` arrives, with a 5s deadline so a buggy plan cannot
+//!   deadlock the suite — a timeout is recorded as its own fired event).
+//! * [`FaultInjector::corrupt_after_write`] — after the DPC2 file hits
+//!   disk, before its row is published.
+//!
+//! Every fault is consumed on its *first* delivery: the retry of a
+//! killed/preempted/expired task runs clean, which is exactly the
+//! real-world shape (the replacement worker is healthy) and what keeps
+//! requeue counts deterministic. Fired events are recorded as canonical
+//! strings and returned sorted, so two runs of the same seed produce
+//! byte-identical `ChaosReport`s regardless of thread interleaving.
+
+use std::collections::HashSet;
+use std::path::Path;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::chaos::corruptor;
+use crate::chaos::plan::{Fault, FaultPlan};
+
+/// What the worker should do with the task it just leased.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskAction {
+    /// Run it, optionally sleeping first (straggler / lease-expiry hold).
+    Run { delay: Option<Duration> },
+    /// Graceful preemption: fail the lease so the task requeues now.
+    Requeue,
+    /// Hard crash: walk away without failing — lease expiry recovers it.
+    Abandon,
+}
+
+struct InjState {
+    pending: Vec<Fault>,
+    fired: Vec<String>,
+    published: HashSet<(usize, usize)>,
+}
+
+pub struct FaultInjector {
+    state: Mutex<InjState>,
+    cv: Condvar,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan) -> FaultInjector {
+        FaultInjector {
+            state: Mutex::new(InjState {
+                pending: plan.faults.clone(),
+                fired: Vec::new(),
+                published: HashSet::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Consult (and consume) any task-start fault for `(phase, path)`.
+    pub fn on_task_start(&self, phase: usize, path: usize) -> TaskAction {
+        let mut g = self.state.lock().unwrap();
+        let Some(idx) = g
+            .pending
+            .iter()
+            .position(|f| f.task_start_target() == Some((phase, path)))
+        else {
+            return TaskAction::Run { delay: None };
+        };
+        let fault = g.pending.remove(idx);
+        g.fired.push(fault.describe());
+        match fault {
+            Fault::KillWorker { .. } => TaskAction::Abandon,
+            Fault::Preempt { .. } => TaskAction::Requeue,
+            Fault::ExpireLease { hold_ms, .. } => TaskAction::Run {
+                delay: Some(Duration::from_millis(hold_ms)),
+            },
+            Fault::Straggle { delay_ms, .. } => TaskAction::Run {
+                delay: Some(Duration::from_millis(delay_ms)),
+            },
+            _ => unreachable!("task_start_target filtered to worker-side faults"),
+        }
+    }
+
+    /// Block/sleep per any publication fault for `(phase, path)`. Called
+    /// by the worker after computing the delta, before the checkpoint
+    /// save + DB insert.
+    pub fn before_publish(&self, phase: usize, path: usize) {
+        let mut g = self.state.lock().unwrap();
+        if let Some(idx) = g.pending.iter().position(|f| {
+            matches!(f, Fault::DelayPublish { phase: fp, path: fq, .. } if *fp == phase && *fq == path)
+        }) {
+            let fault = g.pending.remove(idx);
+            g.fired.push(fault.describe());
+            let Fault::DelayPublish { delay_ms, .. } = fault else {
+                unreachable!()
+            };
+            drop(g);
+            std::thread::sleep(Duration::from_millis(delay_ms));
+            g = self.state.lock().unwrap();
+        }
+        if let Some(idx) = g.pending.iter().position(|f| {
+            matches!(f, Fault::ReorderPublish { phase: fp, then, .. } if *fp == phase && *then == path)
+        }) {
+            let fault = g.pending.remove(idx);
+            g.fired.push(fault.describe());
+            let Fault::ReorderPublish { first, .. } = fault else {
+                unreachable!()
+            };
+            let deadline = Instant::now() + Duration::from_secs(5);
+            while !g.published.contains(&(phase, first)) {
+                let now = Instant::now();
+                if now >= deadline {
+                    g.fired
+                        .push(format!("phase {phase}: reorder wait for path {first} timed out"));
+                    break;
+                }
+                let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                g = g2;
+            }
+        }
+    }
+
+    /// Damage the just-written checkpoint if the plan says so.
+    pub fn corrupt_after_write(&self, phase: usize, path: usize, file: &Path) -> Result<()> {
+        let mode = {
+            let mut g = self.state.lock().unwrap();
+            match g.pending.iter().position(|f| {
+                matches!(f, Fault::Corrupt { phase: fp, path: fq, .. } if *fp == phase && *fq == path)
+            }) {
+                Some(idx) => {
+                    let fault = g.pending.remove(idx);
+                    g.fired.push(fault.describe());
+                    let Fault::Corrupt { mode, .. } = fault else {
+                        unreachable!()
+                    };
+                    Some(mode)
+                }
+                None => None,
+            }
+        };
+        if let Some(mode) = mode {
+            corruptor::corrupt_file(file, mode)?;
+        }
+        Ok(())
+    }
+
+    /// Record that `(phase, path)` has published its row (wakes any
+    /// reorder waiter). Idempotent — duplicate publications from zombie
+    /// workers are fine.
+    pub fn mark_published(&self, phase: usize, path: usize) {
+        let mut g = self.state.lock().unwrap();
+        g.published.insert((phase, path));
+        self.cv.notify_all();
+    }
+
+    /// Faults that actually fired, in canonical (sorted) order.
+    pub fn fired_events(&self) -> Vec<String> {
+        let mut v = self.state.lock().unwrap().fired.clone();
+        v.sort();
+        v
+    }
+
+    /// Planned faults that never got the chance to fire, sorted.
+    pub fn unfired(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .state
+            .lock()
+            .unwrap()
+            .pending
+            .iter()
+            .map(Fault::describe)
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn faults_fire_exactly_once() {
+        let plan = FaultPlan::new(vec![
+            Fault::KillWorker { phase: 0, path: 1 },
+            Fault::Straggle {
+                phase: 1,
+                path: 0,
+                delay_ms: 3,
+            },
+        ]);
+        let inj = FaultInjector::new(&plan);
+        // untargeted task runs clean
+        assert_eq!(inj.on_task_start(0, 0), TaskAction::Run { delay: None });
+        // first delivery eats the fault, the retry runs clean
+        assert_eq!(inj.on_task_start(0, 1), TaskAction::Abandon);
+        assert_eq!(inj.on_task_start(0, 1), TaskAction::Run { delay: None });
+        assert_eq!(
+            inj.on_task_start(1, 0),
+            TaskAction::Run {
+                delay: Some(Duration::from_millis(3))
+            }
+        );
+        assert_eq!(inj.fired_events().len(), 2);
+        assert!(inj.unfired().is_empty());
+    }
+
+    #[test]
+    fn reorder_blocks_until_dependency_publishes() {
+        let plan = FaultPlan::new(vec![Fault::ReorderPublish {
+            phase: 0,
+            first: 1,
+            then: 0,
+        }]);
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let inj2 = Arc::clone(&inj);
+        let waiter = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            inj2.before_publish(0, 0); // must block until (0, 1) publishes
+            inj2.mark_published(0, 0);
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        inj.before_publish(0, 1); // no fault on the dependency itself
+        inj.mark_published(0, 1);
+        let waited = waiter.join().unwrap();
+        assert!(waited >= Duration::from_millis(30), "waiter returned early");
+        let fired = inj.fired_events();
+        assert_eq!(fired.len(), 1);
+        assert!(!fired[0].contains("timed out"));
+    }
+}

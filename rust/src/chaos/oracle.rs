@@ -1,0 +1,296 @@
+//! Convergence-equivalence oracle: run the same recipe twice — once
+//! fault-free, once under a [`FaultPlan`] — and demand either a
+//! *bit-identical* final [`ModuleStore`] or a *loud, structured* abort.
+//!
+//! Bitwise is the right bar because every source of legitimate numeric
+//! variation has been engineered out: the sim worker is a pure function
+//! of `(seed, phase, path, theta)`, the DB dedups re-published rows, and
+//! the outer executors reduce contributions in path-id-sorted order
+//! regardless of arrival order. Any remaining difference is a
+//! coordinator bug — silent double-accumulation, lost momentum on
+//! re-shard, a zombie sneaking past the generation guard — exactly the
+//! class of failure tolerance tests exist to catch.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::chaos::plan::FaultPlan;
+use crate::chaos::sim::{run_sim, sim_topology, SimOutcome, SimSpec};
+use crate::topology::{ModuleStore, Topology};
+use crate::util::json::Json;
+
+/// Order-independent digest of a store (fletcher-style over the bit
+/// patterns, modules visited in canonical `all_modules()` order).
+pub fn store_digest(topo: &Topology, store: &ModuleStore) -> u64 {
+    let mut a: u64 = 0;
+    let mut b: u64 = 0;
+    for m in topo.all_modules() {
+        for &x in store.get(m) {
+            a = (a + x.to_bits() as u64) % 0xFFFF_FFFF;
+            b = (b + a) % 0xFFFF_FFFF;
+        }
+    }
+    (b << 32) | a
+}
+
+/// First bitwise difference between two stores, human-readable.
+pub fn first_divergence(topo: &Topology, a: &ModuleStore, b: &ModuleStore) -> Option<String> {
+    for m in topo.all_modules() {
+        let (xs, ys) = (a.get(m), b.get(m));
+        if xs.len() != ys.len() {
+            return Some(format!("module {m}: length {} vs {}", xs.len(), ys.len()));
+        }
+        for (i, (x, y)) in xs.iter().zip(ys).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Some(format!("module {m}[{i}]: {x} vs {y} (bitwise)"));
+            }
+        }
+    }
+    None
+}
+
+/// What the faulted run did relative to the fault-free reference.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// Faulted run finished and its store is bit-identical to the
+    /// reference — the coordinator absorbed every fault.
+    ConvergedIdentical,
+    /// The plan contained an unrecoverable fault (checkpoint corruption)
+    /// and the run aborted with a structured error, as it must.
+    AbortedLoudly { error: String },
+    /// Finished but with different bytes — a silent-corruption bug.
+    Diverged { detail: String },
+    /// The plan expected an abort but the run sailed through — the
+    /// detection layer (checksums) failed to fire.
+    UnexpectedSuccess,
+}
+
+/// Structured record of one chaos scenario; serializes deterministically
+/// (fixed field order, sorted event lists, hex digests).
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub planned: Vec<String>,
+    pub fired: Vec<String>,
+    pub unfired: Vec<String>,
+    pub phases_run: usize,
+    pub completed: u64,
+    pub requeues: u64,
+    pub dead_tasks: usize,
+    pub reference_digest: u64,
+    pub faulted_digest: Option<u64>,
+    pub verdict: Verdict,
+}
+
+impl ChaosReport {
+    /// A scenario passes when the coordinator either fully absorbed the
+    /// faults or refused loudly; divergence and silent success both fail.
+    pub fn is_pass(&self) -> bool {
+        matches!(
+            self.verdict,
+            Verdict::ConvergedIdentical | Verdict::AbortedLoudly { .. }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        // digests as hex STRINGS: Json numbers are f64 and u64 digests
+        // above 2^53 would silently lose bits.
+        let verdict = match &self.verdict {
+            Verdict::ConvergedIdentical => {
+                Json::obj(vec![("kind", Json::str("converged-identical"))])
+            }
+            Verdict::AbortedLoudly { error } => Json::obj(vec![
+                ("kind", Json::str("aborted-loudly")),
+                ("error", Json::str(error.clone())),
+            ]),
+            Verdict::Diverged { detail } => Json::obj(vec![
+                ("kind", Json::str("diverged")),
+                ("detail", Json::str(detail.clone())),
+            ]),
+            Verdict::UnexpectedSuccess => {
+                Json::obj(vec![("kind", Json::str("unexpected-success"))])
+            }
+        };
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "planned",
+                Json::arr(self.planned.iter().map(|s| Json::str(s.clone()))),
+            ),
+            (
+                "fired",
+                Json::arr(self.fired.iter().map(|s| Json::str(s.clone()))),
+            ),
+            (
+                "unfired",
+                Json::arr(self.unfired.iter().map(|s| Json::str(s.clone()))),
+            ),
+            ("phases_run", Json::num(self.phases_run as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("requeues", Json::num(self.requeues as f64)),
+            ("dead_tasks", Json::num(self.dead_tasks as f64)),
+            (
+                "reference_digest",
+                Json::str(format!("{:016x}", self.reference_digest)),
+            ),
+            (
+                "faulted_digest",
+                match self.faulted_digest {
+                    Some(d) => Json::str(format!("{d:016x}")),
+                    None => Json::Null,
+                },
+            ),
+            ("verdict", verdict),
+        ])
+    }
+}
+
+/// Strip the run directory out of error text so reports are stable
+/// across machines and runs.
+fn sanitize(err: &str, dir: &Path) -> String {
+    err.replace(&dir.display().to_string(), "<rundir>")
+}
+
+/// Run `plan` against `spec` and judge it against a fault-free run of
+/// the identical spec.
+pub fn run_scenario(name: &str, spec: &SimSpec, plan: &FaultPlan) -> Result<ChaosReport> {
+    run_scenario_vs(name, spec, spec, plan)
+}
+
+/// Like [`run_scenario`] but the faulted and reference runs may differ
+/// in coordinator shape (e.g. executor drop/re-join schedules) — they
+/// must still share a seed so the simulated compute is identical.
+pub fn run_scenario_vs(
+    name: &str,
+    faulted: &SimSpec,
+    reference: &SimSpec,
+    plan: &FaultPlan,
+) -> Result<ChaosReport> {
+    ensure!(
+        faulted.seed == reference.seed,
+        "faulted and reference specs must share a seed"
+    );
+    let base = std::env::temp_dir().join(format!(
+        "dipaco-chaos-{}-{}-{}",
+        std::process::id(),
+        name,
+        faulted.seed
+    ));
+    let _ = std::fs::remove_dir_all(&base);
+
+    let topo = sim_topology(reference);
+    let ref_out = run_sim(reference, &FaultPlan::none(), &base.join("reference"))
+        .with_context(|| format!("scenario {name}: reference run"))?;
+    ensure!(
+        ref_out.error.is_none(),
+        "scenario {name}: fault-free reference run failed: {}",
+        ref_out.error.unwrap_or_default()
+    );
+    let fault_out = run_sim(faulted, plan, &base.join("faulted"))
+        .with_context(|| format!("scenario {name}: faulted run"))?;
+
+    let report = judge(name, faulted, plan, &topo, &ref_out, &fault_out, &base);
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(report)
+}
+
+fn judge(
+    name: &str,
+    spec: &SimSpec,
+    plan: &FaultPlan,
+    topo: &Topology,
+    ref_out: &SimOutcome,
+    fault_out: &SimOutcome,
+    base: &Path,
+) -> ChaosReport {
+    let expects_abort = plan.expects_abort();
+    let (verdict, faulted_digest) = match (&fault_out.error, expects_abort) {
+        (Some(e), true) => (
+            Verdict::AbortedLoudly {
+                error: sanitize(e, base),
+            },
+            None,
+        ),
+        (Some(e), false) => (
+            Verdict::Diverged {
+                detail: format!("unexpected abort: {}", sanitize(e, base)),
+            },
+            None,
+        ),
+        (None, true) => (Verdict::UnexpectedSuccess, Some(store_digest(topo, &fault_out.store))),
+        (None, false) => {
+            let d = store_digest(topo, &fault_out.store);
+            match first_divergence(topo, &ref_out.store, &fault_out.store) {
+                None => (Verdict::ConvergedIdentical, Some(d)),
+                Some(detail) => (Verdict::Diverged { detail }, Some(d)),
+            }
+        }
+    };
+    ChaosReport {
+        scenario: name.to_string(),
+        seed: spec.seed,
+        planned: plan.describe(),
+        fired: fault_out.events.clone(),
+        unfired: fault_out.unfired.clone(),
+        phases_run: fault_out.phases_run,
+        completed: fault_out.completed,
+        requeues: fault_out.requeues,
+        dead_tasks: fault_out.dead,
+        reference_digest: store_digest(topo, &ref_out.store),
+        faulted_digest,
+        verdict,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::sim::sim_topology;
+
+    #[test]
+    fn digest_detects_single_bit_flip() {
+        let spec = SimSpec::new(3);
+        let topo = sim_topology(&spec);
+        let n = topo.total_params;
+        let theta: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+        let a = ModuleStore::from_base(&topo, &theta);
+        let mut b = a.clone();
+        let d0 = store_digest(&topo, &a);
+        assert_eq!(d0, store_digest(&topo, &b), "digest must be deterministic");
+        assert!(first_divergence(&topo, &a, &b).is_none());
+
+        let m = topo.all_modules()[1];
+        let v = b.get_mut(m);
+        v[0] = f32::from_bits(v[0].to_bits() ^ 1);
+        assert_ne!(d0, store_digest(&topo, &b));
+        let msg = first_divergence(&topo, &a, &b).expect("must spot the flip");
+        assert!(msg.contains("bitwise"), "unhelpful divergence message: {msg}");
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_hex_digested() {
+        let rep = ChaosReport {
+            scenario: "unit".into(),
+            seed: 9,
+            planned: vec!["phase 0: kill worker on path 1".into()],
+            fired: vec!["phase 0: kill worker on path 1".into()],
+            unfired: vec![],
+            phases_run: 3,
+            completed: 12,
+            requeues: 1,
+            dead_tasks: 0,
+            reference_digest: u64::MAX - 5,
+            faulted_digest: Some(u64::MAX - 5),
+            verdict: Verdict::ConvergedIdentical,
+        };
+        let s1 = rep.to_json().to_string();
+        let s2 = rep.clone().to_json().to_string();
+        assert_eq!(s1, s2);
+        // u64::MAX - 5 is not representable in f64; hex string must be exact
+        assert!(s1.contains(&format!("{:016x}", u64::MAX - 5)), "{s1}");
+        assert!(s1.contains("converged-identical"));
+    }
+}

@@ -1,0 +1,261 @@
+//! Fault taxonomy and seeded fault plans (DESIGN.md "Failure model").
+//!
+//! A [`FaultPlan`] is a declarative list of faults to inject into one
+//! coordinator run, each addressed by `(phase, path)` — the coordinates
+//! of the task it strikes. Plans are either hand-written (the named
+//! scenarios in `rust/tests/integration_chaos.rs`) or drawn from a
+//! seeded [`crate::util::rng::Rng`] stream ([`FaultPlan::random`]), so
+//! the weekly sweep explores the scenario space while every run stays
+//! exactly reproducible from its seed.
+//!
+//! The random generator deliberately keeps plans *oracle-clean*: at most
+//! one fault per `(phase, path)`, at most one publication reorder per
+//! phase, and never a fault on a reorder's dependency — each of those
+//! restrictions removes a timing race that would make requeue counts (and
+//! therefore the `ChaosReport`) depend on scheduler luck instead of the
+//! seed. Lease-expiry holds and file corruption are only used by the
+//! named scenarios, where the test controls the surrounding timing.
+
+use crate::chaos::corruptor::CorruptMode;
+use crate::util::rng::Rng;
+
+/// One injected fault. Timing faults target the worker/queue plane;
+/// `Corrupt` targets the checkpoint plane (the DPC2 file itself).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Hard crash: the worker abandons the leased task without failing
+    /// it — only lease expiry + `reclaim` recovers it.
+    KillWorker { phase: usize, path: usize },
+    /// Graceful preemption: the worker fails its lease, the task
+    /// requeues immediately.
+    Preempt { phase: usize, path: usize },
+    /// The worker stalls `hold_ms` (past its lease) before running the
+    /// task, forcing expiry + redelivery while the zombie lives on.
+    ExpireLease {
+        phase: usize,
+        path: usize,
+        hold_ms: u64,
+    },
+    /// Heterogeneous speed: the worker sleeps `delay_ms` before the
+    /// task (within its lease).
+    Straggle {
+        phase: usize,
+        path: usize,
+        delay_ms: u64,
+    },
+    /// Checkpoint written, publication to the DB delayed `delay_ms`.
+    DelayPublish {
+        phase: usize,
+        path: usize,
+        delay_ms: u64,
+    },
+    /// Path `then` publishes only after path `first` has published —
+    /// an adversarial arrival order for the online averaging.
+    ReorderPublish {
+        phase: usize,
+        first: usize,
+        then: usize,
+    },
+    /// Damage the published DPC2 file before the DB row appears, so the
+    /// executor's checksum verification is exercised end to end.
+    Corrupt {
+        phase: usize,
+        path: usize,
+        mode: CorruptMode,
+    },
+}
+
+impl Fault {
+    /// Canonical one-line description (stable across runs — report keys).
+    pub fn describe(&self) -> String {
+        match self {
+            Fault::KillWorker { phase, path } => {
+                format!("phase {phase}: kill worker on path {path}")
+            }
+            Fault::Preempt { phase, path } => {
+                format!("phase {phase}: graceful preemption on path {path}")
+            }
+            Fault::ExpireLease {
+                phase,
+                path,
+                hold_ms,
+            } => format!("phase {phase}: hold lease {hold_ms}ms past expiry on path {path}"),
+            Fault::Straggle {
+                phase,
+                path,
+                delay_ms,
+            } => format!("phase {phase}: straggle {delay_ms}ms on path {path}"),
+            Fault::DelayPublish {
+                phase,
+                path,
+                delay_ms,
+            } => format!("phase {phase}: delay publication {delay_ms}ms on path {path}"),
+            Fault::ReorderPublish { phase, first, then } => {
+                format!("phase {phase}: publish path {then} only after path {first}")
+            }
+            Fault::Corrupt { phase, path, mode } => {
+                format!("phase {phase}: corrupt checkpoint of path {path} ({mode})")
+            }
+        }
+    }
+
+    /// `(phase, path)` this fault strikes at *task start* (worker-side
+    /// faults); `None` for publication/file-plane faults.
+    pub fn task_start_target(&self) -> Option<(usize, usize)> {
+        match *self {
+            Fault::KillWorker { phase, path }
+            | Fault::Preempt { phase, path }
+            | Fault::ExpireLease { phase, path, .. }
+            | Fault::Straggle { phase, path, .. } => Some((phase, path)),
+            _ => None,
+        }
+    }
+}
+
+/// A set of faults to inject into one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The fault-free plan (reference runs).
+    pub fn none() -> FaultPlan {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    pub fn new(faults: Vec<Fault>) -> FaultPlan {
+        FaultPlan { faults }
+    }
+
+    /// Plans containing file corruption must abort loudly rather than
+    /// converge — the oracle's expected outcome flips on this.
+    pub fn expects_abort(&self) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::Corrupt { .. }))
+    }
+
+    /// Descriptions in plan order.
+    pub fn describe(&self) -> Vec<String> {
+        self.faults.iter().map(Fault::describe).collect()
+    }
+
+    /// Seeded random mix of timing faults over `phases` x `paths`, up to
+    /// `events` of them (fewer when a phase runs out of untouched paths).
+    /// Only convergence-preserving faults are drawn — see module docs.
+    pub fn random(seed: u64, phases: usize, paths: usize, events: usize) -> FaultPlan {
+        assert!(phases >= 1 && paths >= 1);
+        let mut rng = Rng::new(seed).fork(0xC4A05);
+        let mut faults = Vec::new();
+        let mut used: Vec<Vec<usize>> = vec![Vec::new(); phases];
+        let mut reordered = vec![false; phases];
+        for _ in 0..events {
+            let phase = rng.gen_range(phases);
+            let free: Vec<usize> = (0..paths).filter(|p| !used[phase].contains(p)).collect();
+            if free.is_empty() {
+                continue;
+            }
+            let mut kind = rng.gen_range(5);
+            if kind == 4 && (free.len() < 2 || reordered[phase]) {
+                kind = 0; // no room for a reorder here — kill instead
+            }
+            match kind {
+                0 => {
+                    let path = *rng.choose(&free);
+                    used[phase].push(path);
+                    faults.push(Fault::KillWorker { phase, path });
+                }
+                1 => {
+                    let path = *rng.choose(&free);
+                    used[phase].push(path);
+                    faults.push(Fault::Preempt { phase, path });
+                }
+                2 => {
+                    let path = *rng.choose(&free);
+                    used[phase].push(path);
+                    faults.push(Fault::Straggle {
+                        phase,
+                        path,
+                        delay_ms: 50 + rng.gen_range(101) as u64,
+                    });
+                }
+                3 => {
+                    let path = *rng.choose(&free);
+                    used[phase].push(path);
+                    faults.push(Fault::DelayPublish {
+                        phase,
+                        path,
+                        delay_ms: 20 + rng.gen_range(61) as u64,
+                    });
+                }
+                _ => {
+                    let i = rng.gen_range(free.len());
+                    let first = free[i];
+                    let rest: Vec<usize> = free.into_iter().filter(|&p| p != first).collect();
+                    let then = *rng.choose(&rest);
+                    used[phase].push(first);
+                    used[phase].push(then);
+                    reordered[phase] = true;
+                    faults.push(Fault::ReorderPublish { phase, first, then });
+                }
+            }
+        }
+        FaultPlan { faults }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_plans_are_deterministic_per_seed() {
+        let a = FaultPlan::random(99, 3, 4, 6);
+        let b = FaultPlan::random(99, 3, 4, 6);
+        assert_eq!(a, b);
+        assert!(!a.faults.is_empty());
+        let c = FaultPlan::random(100, 3, 4, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_plans_stay_in_bounds_and_collision_free() {
+        for seed in 0..50 {
+            let plan = FaultPlan::random(seed, 3, 4, 8);
+            let mut hit: Vec<(usize, usize)> = Vec::new();
+            let mut reorders = vec![0usize; 3];
+            for f in &plan.faults {
+                let targets: Vec<(usize, usize)> = match *f {
+                    Fault::ReorderPublish { phase, first, then } => {
+                        assert_ne!(first, then);
+                        reorders[phase] += 1;
+                        vec![(phase, first), (phase, then)]
+                    }
+                    Fault::KillWorker { phase, path }
+                    | Fault::Preempt { phase, path }
+                    | Fault::Straggle { phase, path, .. }
+                    | Fault::DelayPublish { phase, path, .. } => vec![(phase, path)],
+                    _ => panic!("random plan drew a non-timing fault: {f:?}"),
+                };
+                for t in targets {
+                    assert!(t.0 < 3 && t.1 < 4, "out of bounds: {t:?}");
+                    assert!(!hit.contains(&t), "two faults on {t:?} (seed {seed})");
+                    hit.push(t);
+                }
+            }
+            assert!(reorders.iter().all(|&r| r <= 1));
+        }
+    }
+
+    #[test]
+    fn expects_abort_only_with_corruption() {
+        assert!(!FaultPlan::random(1, 2, 2, 4).expects_abort());
+        let plan = FaultPlan::new(vec![Fault::Corrupt {
+            phase: 0,
+            path: 0,
+            mode: CorruptMode::FlipPayloadByte,
+        }]);
+        assert!(plan.expects_abort());
+    }
+}

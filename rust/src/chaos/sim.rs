@@ -1,0 +1,388 @@
+//! Engine-free chaos simulation: the REAL coordinator plumbing —
+//! [`TaskQueue`] leases, [`CheckpointDb`] pub/sub, DPC2 checkpoint files,
+//! and the sharded [`run_phase_outer`] executors — driven by simulated
+//! workers whose "inner optimization" is a cheap pure function of
+//! `(seed, phase, path, theta)`.
+//!
+//! Why simulate the inner phase instead of running the PJRT engine? Two
+//! reasons. First, the chaos suite must run everywhere tier-1 runs — no
+//! AOT artifacts required. Second, and more fundamentally, the oracle
+//! demands *bit-identical* convergence: the sim worker is idempotent by
+//! construction (a zombie re-execution of a task recomputes the very same
+//! bytes), which is the same contract the real worker honors via seeded
+//! batch streams — here it is exact rather than merely reproducible, so
+//! any divergence the oracle reports is attributable to the coordinator
+//! plumbing under test, never to compute noise.
+//!
+//! What stays real is everything the faults actually strike: lease
+//! handout/expiry/redelivery, generation-guarded retirement, DB dedup and
+//! subscriber replay, DPC2 section writes + checksummed reads, module
+//! sharding, and the buffered path-ordered outer reduce.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::chaos::injector::{FaultInjector, TaskAction};
+use crate::chaos::plan::FaultPlan;
+use crate::config::{DilocoConfig, TopologySpec};
+use crate::coordinator::db::{CheckpointDb, CkptRow};
+use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig, OuterIoStats};
+use crate::coordinator::queue::TaskQueue;
+use crate::coordinator::task::{Task, TrainTask};
+use crate::optim::Nesterov;
+use crate::params::checkpoint;
+use crate::params::manifest::Manifest;
+use crate::topology::{ModuleId, ModuleStore, Topology};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Everything that defines one simulated run. Faulted and reference runs
+/// share a spec (identical seed) except where a scenario deliberately
+/// varies the executor schedule (drop/re-join).
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub seed: u64,
+    pub phases: usize,
+    pub workers: usize,
+    pub lease_ms: u64,
+    /// Outer-executor count per phase; the last entry repeats. A varying
+    /// vec (e.g. `[2, 1, 2]`) models an executor dropping out and
+    /// re-joining between phases — modules are re-sharded and each
+    /// module's outer momentum must follow it.
+    pub executors_per_phase: Vec<usize>,
+    pub topo: TopologySpec,
+    pub layers: usize,
+    pub d: usize,
+}
+
+impl SimSpec {
+    pub fn new(seed: u64) -> SimSpec {
+        SimSpec {
+            seed,
+            phases: 3,
+            workers: 3,
+            lease_ms: 30_000,
+            executors_per_phase: vec![2],
+            topo: TopologySpec::grid(vec![2, 2]),
+            layers: 4,
+            d: 8,
+        }
+    }
+}
+
+/// Miniature manifest in the python layout (same shape the property
+/// tests use); deterministic in `(n_layers, d)`.
+pub fn sim_manifest_json(n_layers: usize, d: usize) -> String {
+    let mut leaves = Vec::new();
+    let mut off = 0usize;
+    let mut push = |name: String, shape: Vec<usize>, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        leaves.push(format!(
+            r#"{{"name":"{name}","offset":{off},"size":{size},"shape":[{}]}}"#,
+            shape
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+        *off += size;
+    };
+    push("embed.tok".into(), vec![32, d], &mut off);
+    push("embed.pos".into(), vec![16, d], &mut off);
+    for i in 0..n_layers {
+        push(format!("block{i}.attn.wq"), vec![d, d], &mut off);
+        push(format!("block{i}.ln1.scale"), vec![d], &mut off);
+        push(format!("block{i}.mlp.w1"), vec![d, 2 * d], &mut off);
+    }
+    push("head.w".into(), vec![d, 32], &mut off);
+    format!(
+        r#"{{"preset":"chaos","config":{{"vocab":32,"d_model":{d},"n_layers":{n_layers},
+          "n_heads":2,"d_ff":{f},"seq_train":16,"seq_eval":16,"batch":1,"prefix":4,"d_head":{dh}}},
+          "total_params":{off},"leaves":[{ls}],"entrypoints":[]}}"#,
+        f = 2 * d,
+        dh = d / 2,
+        ls = leaves.join(",")
+    )
+}
+
+pub fn sim_topology(spec: &SimSpec) -> Topology {
+    let j = sim_manifest_json(spec.layers, spec.d);
+    let man = Manifest::from_json(&Json::parse(&j).unwrap()).unwrap();
+    Topology::build(&man, &spec.topo)
+}
+
+fn base_theta(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed).fork(0xBA5E);
+    (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect()
+}
+
+/// The simulated inner phase: a pure function of `(seed, phase, path,
+/// theta)`. Retried and zombie re-executions of a task therefore write
+/// bit-identical deltas — exact idempotency, so the oracle's bitwise
+/// comparison isolates coordinator bugs.
+pub fn sim_after(seed: u64, phase: usize, path: usize, before: &[f32]) -> Vec<f32> {
+    let stream = 0x515E ^ ((phase as u64) << 24) ^ path as u64;
+    let mut rng = Rng::new(seed).fork(stream);
+    before
+        .iter()
+        .map(|&b| 0.995 * b - 0.01 * rng.normal_f32(0.0, 1.0))
+        .collect()
+}
+
+/// Result of one simulated run.
+#[derive(Debug)]
+pub struct SimOutcome {
+    pub store: ModuleStore,
+    /// Phases whose outer update completed (< spec.phases on abort).
+    pub phases_run: usize,
+    pub completed: u64,
+    pub requeues: u64,
+    pub dead: usize,
+    /// The loud failure, if the run aborted (`{:#}`-formatted chain).
+    pub error: Option<String>,
+    /// Injected faults that fired, canonical sorted order.
+    pub events: Vec<String>,
+    /// Planned faults that never got the chance to fire, sorted.
+    pub unfired: Vec<String>,
+}
+
+fn sim_run_train(
+    db: &CheckpointDb,
+    topo: &Topology,
+    injector: &FaultInjector,
+    seed: u64,
+    t: &TrainTask,
+) -> Result<()> {
+    let before = checkpoint::load_section(&t.ckpt_in, "theta")
+        .with_context(|| format!("sim worker loading input for path {}", t.path))?;
+    let after = sim_after(seed, t.phase, t.path, &before);
+    // ship one delta section per traversed module, same as the real worker
+    let (ck, modules) = topo.delta_checkpoint(t.path, &before, &after);
+    let ck = ck.with("loss", vec![1.0]);
+    injector.before_publish(t.phase, t.path);
+    ck.save(&t.ckpt_out)?;
+    injector.corrupt_after_write(t.phase, t.path, &t.ckpt_out)?;
+    db.insert(CkptRow {
+        rowid: 0,
+        phase: t.phase,
+        path_id: t.path,
+        kind: "path".into(),
+        file: t.ckpt_out.clone(),
+        step: t.steps,
+        loss: 1.0,
+        modules,
+    });
+    injector.mark_published(t.phase, t.path);
+    Ok(())
+}
+
+fn sim_worker_loop(
+    queue: &TaskQueue,
+    db: &CheckpointDb,
+    topo: &Topology,
+    injector: &FaultInjector,
+    shutdown: &AtomicBool,
+    seed: u64,
+    name: &str,
+) {
+    loop {
+        let Some((lease, task)) = queue.lease(name, Duration::from_millis(100)) else {
+            if shutdown.load(Ordering::Relaxed) {
+                return;
+            }
+            continue;
+        };
+        let Task::Train(t) = task else {
+            queue.complete(lease);
+            continue;
+        };
+        match injector.on_task_start(t.phase, t.path) {
+            // hard crash: walk away; lease expiry + reclaim recovers it
+            TaskAction::Abandon => continue,
+            TaskAction::Requeue => {
+                queue.fail(lease);
+                continue;
+            }
+            TaskAction::Run { delay } => {
+                if let Some(d) = delay {
+                    std::thread::sleep(d);
+                }
+            }
+        }
+        match sim_run_train(db, topo, injector, seed, &t) {
+            Ok(()) => {
+                queue.complete(lease);
+            }
+            Err(_) => {
+                queue.fail(lease);
+            }
+        }
+    }
+}
+
+/// Run `spec.phases` DiPaCo outer phases over the real coordinator stack
+/// with `plan`'s faults injected. Returns the final [`ModuleStore`] (or
+/// the loud error) plus queue/fault accounting.
+pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOutcome> {
+    std::fs::create_dir_all(rundir)
+        .with_context(|| format!("creating rundir {}", rundir.display()))?;
+    let topo = Arc::new(sim_topology(spec));
+    let theta0 = base_theta(spec.seed, topo.total_params);
+    let store = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta0)));
+    let queue = Arc::new(TaskQueue::new(Duration::from_millis(spec.lease_ms)));
+    let db = Arc::new(CheckpointDb::new());
+    let injector = Arc::new(FaultInjector::new(plan));
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // Sim workers live for the whole run (they idle-poll between phases).
+    let mut workers = Vec::new();
+    for w in 0..spec.workers.max(1) {
+        let queue = Arc::clone(&queue);
+        let db = Arc::clone(&db);
+        let topo = Arc::clone(&topo);
+        let injector = Arc::clone(&injector);
+        let shutdown = Arc::clone(&shutdown);
+        let seed = spec.seed;
+        let name = format!("sim-{w}");
+        workers.push(
+            std::thread::Builder::new()
+                .name(name.clone())
+                .spawn(move || {
+                    sim_worker_loop(&queue, &db, &topo, &injector, &shutdown, seed, &name)
+                })
+                .expect("spawn sim worker"),
+        );
+    }
+
+    let diloco = DilocoConfig {
+        loss_reweigh: false,
+        ..Default::default()
+    };
+    let cfg = OuterConfig {
+        diloco: diloco.clone(),
+        shard_sizes: vec![1; topo.paths],
+        io: OuterIoStats::default(),
+    };
+    // Master velocity map: outer momentum belongs to the MODULE, not to
+    // any particular executor — re-sharding between phases (executor
+    // drop/re-join) must not reset it.
+    let mut velocity: HashMap<ModuleId, Vec<f32>> = HashMap::new();
+    let (done_tx, _done_rx) = channel();
+
+    let mut phases_run = 0usize;
+    let mut error: Option<String> = None;
+    let mut theta_buf: Vec<f32> = Vec::new();
+    for t in 0..spec.phases {
+        let executors = *spec
+            .executors_per_phase
+            .get(t)
+            .or(spec.executors_per_phase.last())
+            .unwrap_or(&1);
+        let shards = shard_modules(&topo, executors);
+        // deal each shard's optimizer its modules' velocity
+        let mut opts: Vec<Nesterov> = shards
+            .iter()
+            .map(|owned| {
+                let mut vel = HashMap::new();
+                for m in owned {
+                    if let Some(v) = velocity.remove(m) {
+                        vel.insert(*m, v);
+                    }
+                }
+                Nesterov::from_velocity(diloco.outer_lr, diloco.outer_momentum, vel)
+            })
+            .collect();
+
+        // per-path input checkpoints (assembled theta) + train tasks
+        let phase_dir = rundir.join(format!("phase{t}"));
+        std::fs::create_dir_all(&phase_dir)?;
+        let mut tasks = Vec::new();
+        {
+            let store_g = store.lock().unwrap();
+            for p in 0..topo.paths {
+                topo.assemble_into(&store_g, p, &mut theta_buf);
+                let ckpt_in = phase_dir.join(format!("path{p}.in.dpc"));
+                checkpoint::save_sections(&ckpt_in, &[("theta", theta_buf.as_slice())])?;
+                tasks.push(Task::Train(TrainTask {
+                    id: (t * topo.paths + p) as u64 + 1,
+                    phase: t,
+                    path: p,
+                    steps: 1,
+                    start_step: 0,
+                    ckpt_in,
+                    ckpt_out: phase_dir.join(format!("path{p}.out.dpc")),
+                    opt_in: None,
+                    opt_out: phase_dir.join(format!("path{p}.opt.dpc")),
+                }));
+            }
+        }
+        queue.push_all(tasks);
+        let res = run_phase_outer(&topo, &store, &mut opts, &shards, &cfg, t, &db, &done_tx);
+        // merge velocity back regardless of outcome (abort must not lose it)
+        for opt in opts {
+            velocity.extend(opt.into_velocity());
+        }
+        match res {
+            Ok(_) => {
+                queue.wait_idle(Duration::from_millis(5));
+                phases_run += 1;
+            }
+            Err(e) => {
+                error = Some(format!("{e:#}"));
+                break;
+            }
+        }
+    }
+
+    shutdown.store(true, Ordering::Relaxed);
+    queue.close();
+    for h in workers {
+        let _ = h.join();
+    }
+    let stats = queue.stats();
+    let store = store.lock().unwrap().clone();
+    Ok(SimOutcome {
+        store,
+        phases_run,
+        completed: stats.completed,
+        requeues: stats.requeues,
+        dead: stats.dead,
+        error,
+        events: injector.fired_events(),
+        unfired: injector.unfired(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_manifest_builds_a_topology() {
+        let spec = SimSpec::new(7);
+        let topo = sim_topology(&spec);
+        assert_eq!(topo.paths, 4);
+        assert!(topo.total_params > 0);
+        // every module has at least one path through it
+        for m in topo.all_modules() {
+            assert!(topo.paths_through(m) >= 1);
+        }
+    }
+
+    #[test]
+    fn sim_after_is_idempotent_and_seed_sensitive() {
+        let before: Vec<f32> = (0..64).map(|i| i as f32 * 0.01).collect();
+        let a = sim_after(7, 1, 2, &before);
+        let b = sim_after(7, 1, 2, &before);
+        assert_eq!(a, b, "re-execution must reproduce identical bytes");
+        assert_ne!(a, sim_after(8, 1, 2, &before));
+        assert_ne!(a, sim_after(7, 1, 3, &before));
+        assert_ne!(a, sim_after(7, 2, 2, &before));
+    }
+}

@@ -93,7 +93,14 @@ pub fn executor_loop(
     if owned.is_empty() {
         return Ok(());
     }
-    let mut acc: HashMap<ModuleId, OuterAccumulator> = HashMap::new();
+    // Per-module buffered contributions: (path id, delta, weight). The
+    // f32 accumulation in `OuterAccumulator` is order-sensitive, and under
+    // faults (retries, stragglers, reordered publication) rows arrive in a
+    // run-dependent order — so contributions are buffered and reduced in
+    // path-id order once the quorum is complete, making the outer update
+    // bit-identical regardless of arrival order. Transient memory is the
+    // same O(size x P_le) bytes the accumulator would have read anyway.
+    let mut acc: HashMap<ModuleId, Vec<(usize, Vec<f32>, f64)>> = HashMap::new();
     let mut done: HashMap<ModuleId, bool> = owned.iter().map(|&m| (m, false)).collect();
     // Double-delivery guard: `run_phase_outer` subscribes and then replays
     // existing rows, so a row inserted between the two can arrive twice;
@@ -152,11 +159,16 @@ pub fn executor_loop(
                 .with_context(|| format!("executor reading {} of {}", m, row.file.display()))?;
             cfg.io.sections_read.fetch_add(1, Ordering::Relaxed);
             let expected = topo.paths_through(m);
-            let a = acc
-                .entry(m)
-                .or_insert_with(|| OuterAccumulator::new(delta.len()));
-            a.add(&delta, w);
-            if a.contributions() == expected {
+            let size = delta.len();
+            let buf = acc.entry(m).or_default();
+            buf.push((row.path_id, delta, w));
+            if buf.len() == expected {
+                let mut contribs = acc.remove(&m).unwrap();
+                contribs.sort_by_key(|&(p, _, _)| p);
+                let mut a = OuterAccumulator::new(size);
+                for (_, d, cw) in &contribs {
+                    a.add(d, *cw);
+                }
                 let mut g = a.average();
                 let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
                 if scale != 1.0 {

@@ -16,6 +16,13 @@
 //! a resurrected zombie worker cannot double-retire a task. (Effects of
 //! zombie side-work are idempotent: checkpoint writes are atomic renames
 //! keyed by task, and the DB dedups by (phase, path).)
+//!
+//! Poison-task containment: with [`TaskQueue::with_max_attempts`] a task
+//! that keeps failing is moved to a terminal *dead-letter* list after its
+//! Nth lease instead of requeueing forever — `wait_idle` (which parks on
+//! the queue's condvar, not a sleep poll) then returns instead of
+//! spinning on a task that can never retire. The default (`new`) keeps
+//! the paper's retry-forever behavior.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
@@ -44,6 +51,7 @@ struct Inner {
     pending: VecDeque<Task>,
     in_flight: HashMap<u64, InFlight>,
     generations: HashMap<u64, u64>,
+    dead: Vec<Task>,
     completed: u64,
     requeues: u64,
     closed: bool,
@@ -53,6 +61,8 @@ pub struct TaskQueue {
     inner: Mutex<Inner>,
     cv: Condvar,
     lease_duration: Duration,
+    /// Max leases per task before it is dead-lettered; 0 = retry forever.
+    max_attempts: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -61,14 +71,23 @@ pub struct QueueStats {
     pub in_flight: usize,
     pub completed: u64,
     pub requeues: u64,
+    pub dead: usize,
 }
 
 impl TaskQueue {
     pub fn new(lease_duration: Duration) -> Self {
+        Self::with_max_attempts(lease_duration, 0)
+    }
+
+    /// A queue that dead-letters a task after `max_attempts` leases
+    /// (each handout — initial or after expiry/failure — counts as one
+    /// attempt). `max_attempts == 0` retries forever, like [`Self::new`].
+    pub fn with_max_attempts(lease_duration: Duration, max_attempts: u64) -> Self {
         TaskQueue {
             inner: Mutex::new(Inner::default()),
             cv: Condvar::new(),
             lease_duration,
+            max_attempts,
         }
     }
 
@@ -96,7 +115,7 @@ impl TaskQueue {
         let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
-            Self::reclaim_locked(&mut g);
+            Self::reclaim_locked(&mut g, self.max_attempts);
             if let Some(task) = g.pending.pop_front() {
                 let task_id = task.id();
                 let generation = g.generations.entry(task_id).or_insert(0);
@@ -147,23 +166,37 @@ impl TaskQueue {
         }
     }
 
-    /// Explicitly fail a lease (graceful preemption): requeue immediately.
+    /// Explicitly fail a lease (graceful preemption): requeue immediately
+    /// (or dead-letter once the task's attempts are exhausted).
     pub fn fail(&self, lease: LeaseId) -> bool {
         let mut g = self.inner.lock().unwrap();
         match g.in_flight.get(&lease.task_id) {
             Some(f) if f.generation == lease.generation => {
                 let f = g.in_flight.remove(&lease.task_id).unwrap();
-                g.pending.push_back(f.task);
-                g.requeues += 1;
+                Self::requeue_or_bury(&mut g, self.max_attempts, f);
                 drop(g);
-                self.cv.notify_one();
+                // notify_all: a burial may be exactly what lets a
+                // wait_idle() parked on the condvar return
+                self.cv.notify_all();
                 true
             }
             _ => false,
         }
     }
 
-    fn reclaim_locked(g: &mut Inner) {
+    /// Requeue a failed/expired lease — unless the task has used up
+    /// `max_attempts` leases (generation counts handouts), in which case
+    /// it moves to the terminal dead-letter list.
+    fn requeue_or_bury(g: &mut Inner, max_attempts: u64, f: InFlight) {
+        if max_attempts > 0 && f.generation >= max_attempts {
+            g.dead.push(f.task);
+        } else {
+            g.pending.push_back(f.task);
+            g.requeues += 1;
+        }
+    }
+
+    fn reclaim_locked(g: &mut Inner, max_attempts: u64) {
         let now = Instant::now();
         let expired: Vec<u64> = g
             .in_flight
@@ -173,17 +206,17 @@ impl TaskQueue {
             .collect();
         for id in expired {
             let f = g.in_flight.remove(&id).unwrap();
-            g.pending.push_back(f.task);
-            g.requeues += 1;
+            Self::requeue_or_bury(g, max_attempts, f);
         }
     }
 
     /// Reclaim expired leases now (the monitor calls this periodically).
+    /// Returns the number of tasks moved (requeued or dead-lettered).
     pub fn reclaim_expired(&self) -> usize {
         let mut g = self.inner.lock().unwrap();
-        let before = g.requeues;
-        Self::reclaim_locked(&mut g);
-        let n = (g.requeues - before) as usize;
+        let before = g.requeues as usize + g.dead.len();
+        Self::reclaim_locked(&mut g, self.max_attempts);
+        let n = g.requeues as usize + g.dead.len() - before;
         if n > 0 {
             drop(g);
             self.cv.notify_all();
@@ -202,17 +235,24 @@ impl TaskQueue {
         g.pending.is_empty() && g.in_flight.is_empty()
     }
 
-    /// Block until every pushed task has been retired.
+    /// Block until every pushed task has been retired (completed or
+    /// dead-lettered). Parks on the queue's condvar — completions,
+    /// failures, and burials wake it immediately — with `poll` as the
+    /// re-check ceiling and the next lease expiry as an early wake-up.
     pub fn wait_idle(&self, poll: Duration) {
+        let mut g = self.inner.lock().unwrap();
         loop {
-            {
-                let mut g = self.inner.lock().unwrap();
-                Self::reclaim_locked(&mut g);
-                if g.pending.is_empty() && g.in_flight.is_empty() {
-                    return;
-                }
+            Self::reclaim_locked(&mut g, self.max_attempts);
+            if g.pending.is_empty() && g.in_flight.is_empty() {
+                return;
             }
-            std::thread::sleep(poll);
+            let mut wait = poll;
+            let now = Instant::now();
+            if let Some(next_exp) = g.in_flight.values().map(|f| f.deadline).min() {
+                wait = wait.min(next_exp.saturating_duration_since(now) + Duration::from_millis(1));
+            }
+            let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
+            g = g2;
         }
     }
 
@@ -223,7 +263,13 @@ impl TaskQueue {
             in_flight: g.in_flight.len(),
             completed: g.completed,
             requeues: g.requeues,
+            dead: g.dead.len(),
         }
+    }
+
+    /// Tasks that exhausted their attempts (terminal; never redelivered).
+    pub fn dead_tasks(&self) -> Vec<Task> {
+        self.inner.lock().unwrap().dead.clone()
     }
 
     /// Queue-state checkpoint (paper §3.1). Tasks only, not leases —
@@ -271,7 +317,9 @@ impl TaskQueue {
                 "in_flight",
                 Json::arr(g.in_flight.values().map(|f| encode(&f.task))),
             ),
+            ("dead", Json::arr(g.dead.iter().map(encode))),
             ("completed", Json::num(g.completed as f64)),
+            ("max_attempts", Json::num(self.max_attempts as f64)),
         ])
     }
 
@@ -279,7 +327,11 @@ impl TaskQueue {
     /// in-flight tasks all return to pending (leases don't survive).
     pub fn restore(state: &Json, lease_duration: Duration) -> anyhow::Result<TaskQueue> {
         use crate::coordinator::task::{EvalTask, TrainTask};
-        let q = TaskQueue::new(lease_duration);
+        let max_attempts = state
+            .get("max_attempts")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0) as u64;
+        let q = TaskQueue::with_max_attempts(lease_duration, max_attempts);
         let decode = |j: &Json| -> anyhow::Result<Task> {
             let kind = j.req("kind")?.as_str().unwrap_or("");
             let id = j.req("id")?.as_usize().unwrap_or(0) as u64;
@@ -319,6 +371,14 @@ impl TaskQueue {
                     q.push(decode(j)?);
                 }
             }
+        }
+        // dead-lettered tasks stay terminal across a server restart
+        if let Some(arr) = state.get("dead").and_then(|a| a.as_arr()) {
+            let mut dead = Vec::new();
+            for j in arr {
+                dead.push(decode(j)?);
+            }
+            q.inner.lock().unwrap().dead = dead;
         }
         Ok(q)
     }
@@ -424,6 +484,89 @@ mod tests {
         });
         assert_eq!(done.load(std::sync::atomic::Ordering::SeqCst), 40);
         assert!(q.stats().requeues > 0);
+    }
+
+    #[test]
+    fn dead_letter_after_max_attempts_unblocks_wait_idle() {
+        let q = std::sync::Arc::new(TaskQueue::with_max_attempts(Duration::from_secs(10), 2));
+        q.push(train_task(1));
+        std::thread::scope(|s| {
+            let q2 = std::sync::Arc::clone(&q);
+            // a worker that fails the task every time it is handed out
+            s.spawn(move || {
+                while let Some((lease, _)) = q2.lease("w0", Duration::from_millis(200)) {
+                    q2.fail(lease);
+                }
+            });
+            // before dead-lettering existed this spun forever:
+            // fail -> requeue -> fail -> requeue -> ...
+            q.wait_idle(Duration::from_millis(5));
+            q.close();
+        });
+        let stats = q.stats();
+        assert_eq!(stats.dead, 1);
+        assert_eq!(stats.completed, 0);
+        // attempt 1 requeued, attempt 2 buried (not counted as a requeue)
+        assert_eq!(stats.requeues, 1);
+        assert_eq!(q.dead_tasks()[0].id(), 1);
+        // terminal: never handed out again
+        assert!(q.lease("w1", Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn expiry_buries_after_max_attempts_and_rejects_zombie() {
+        let q = TaskQueue::with_max_attempts(Duration::from_millis(20), 1);
+        q.push(train_task(3));
+        let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.reclaim_expired(), 1);
+        assert!(q.is_idle());
+        assert_eq!(q.stats().dead, 1);
+        assert_eq!(q.stats().requeues, 0);
+        // zombie completion of a buried task is rejected
+        assert!(!q.complete(l));
+        assert_eq!(q.stats().completed, 0);
+    }
+
+    #[test]
+    fn restore_redelivers_open_lease_exactly_once() {
+        let q = TaskQueue::new(Duration::from_secs(30));
+        q.push(train_task(1));
+        q.push(train_task(2));
+        let (lease, leased) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        assert_eq!(leased.id(), 1);
+        // checkpoint taken while the lease is open; server then "dies"
+        let state = q.checkpoint_state();
+        let q2 = TaskQueue::restore(&state, Duration::from_secs(30)).unwrap();
+        let mut ids = vec![];
+        while let Some((l, t)) = q2.lease("w1", Duration::from_millis(5)) {
+            ids.push(t.id());
+            assert!(q2.complete(l));
+        }
+        ids.sort();
+        assert_eq!(ids, vec![1, 2], "open lease must be redelivered exactly once");
+        // the pre-restore lease belongs to the dead server's world:
+        // completing it against the restored queue must not double-retire
+        assert!(!q2.complete(lease));
+        assert_eq!(q2.stats().completed, 2);
+    }
+
+    #[test]
+    fn restore_preserves_dead_letter_state() {
+        let q = TaskQueue::with_max_attempts(Duration::from_secs(5), 1);
+        q.push(train_task(1));
+        q.push(train_task(2));
+        let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        q.fail(l); // attempt 1 of max 1 -> buried
+        let state = q.checkpoint_state();
+        let q2 = TaskQueue::restore(&state, Duration::from_secs(5)).unwrap();
+        // the buried task stays terminal; only task 2 is delivered
+        let (l2, t2) = q2.lease("w1", Duration::from_millis(5)).unwrap();
+        assert_eq!(t2.id(), 2);
+        assert!(q2.complete(l2));
+        assert!(q2.lease("w1", Duration::from_millis(5)).is_none());
+        assert_eq!(q2.stats().dead, 1);
+        assert_eq!(q2.dead_tasks()[0].id(), 1);
     }
 
     #[test]

@@ -64,6 +64,10 @@ pub struct WorkerCtx {
     pub heartbeats: Mutex<HashMap<String, Instant>>,
     /// Probability a worker thread exits entirely per task (monitor test).
     pub crash_prob: f64,
+    /// Deterministic fault injection (chaos harness); `None` in
+    /// production. Consulted at task start, around checkpoint
+    /// publication, and after the DPC2 file is written.
+    pub chaos: Option<Arc<crate::chaos::injector::FaultInjector>>,
     pub shutting_down: AtomicBool,
     next_eval_id: AtomicU64,
 }
@@ -94,6 +98,7 @@ impl WorkerCtx {
             eval_after_train,
             heartbeats: Mutex::new(HashMap::new()),
             crash_prob: 0.0,
+            chaos: None,
             shutting_down: AtomicBool::new(false),
             next_eval_id: AtomicU64::new(1 << 32),
         })
@@ -152,7 +157,23 @@ pub fn worker_loop(ctx: Arc<WorkerCtx>, name: String, backup: bool) {
             }
             continue;
         };
-        // ---- fault injection ----
+        // ---- fault injection (deterministic chaos plan) ----
+        if let Some(inj) = ctx.chaos.as_deref() {
+            if let Task::Train(t) = &task {
+                use crate::chaos::injector::TaskAction;
+                match inj.on_task_start(t.phase, t.path) {
+                    TaskAction::Run { delay: None } => {}
+                    TaskAction::Run { delay: Some(d) } => std::thread::sleep(d),
+                    TaskAction::Requeue => {
+                        ctx.queue.fail(lease);
+                        continue;
+                    }
+                    // hard crash of the task — lease expiry recovers it
+                    TaskAction::Abandon => continue,
+                }
+            }
+        }
+        // ---- fault injection (probabilistic) ----
         if preempt_p > 0.0 && rng.f64() < preempt_p {
             if rng.f64() < 0.5 {
                 ctx.queue.fail(lease); // graceful preemption
@@ -285,7 +306,15 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
     if ctx.run.transfer_delay_ms > 0 {
         std::thread::sleep(Duration::from_millis(ctx.run.transfer_delay_ms));
     }
+    if let Some(inj) = ctx.chaos.as_deref() {
+        inj.before_publish(t.phase, t.path);
+    }
     ck.save(&t.ckpt_out)?;
+    if let Some(inj) = ctx.chaos.as_deref() {
+        // torn-write simulation: the executor's checksum verification —
+        // not this worker — must detect the damage
+        inj.corrupt_after_write(t.phase, t.path, &t.ckpt_out)?;
+    }
     ctx.db.insert(CkptRow {
         rowid: 0,
         phase: t.phase,
@@ -296,6 +325,9 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
         loss: mean_loss,
         modules,
     });
+    if let Some(inj) = ctx.chaos.as_deref() {
+        inj.mark_published(t.phase, t.path);
+    }
     if let Some(ckpt) = eval_ckpt {
         let id = ctx.next_eval_id.fetch_add(1, Ordering::Relaxed);
         ctx.queue.push(Task::Eval(EvalTask {

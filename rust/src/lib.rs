@@ -28,6 +28,10 @@
 //!   queue, worker pool (+ backup pool, preemption injection), checkpoint
 //!   DB, sharded outer-optimization executors with online averaging,
 //!   health monitor, phase orchestration of Algorithm 1.
+//! * [`chaos`] — fault-injection harness: seeded fault plans, an injector
+//!   threaded through worker/publication hooks, a DPC2 corruptor, an
+//!   engine-free coordinator simulation, and convergence-equivalence
+//!   oracles demanding bit-identical recovery or loud abort.
 //! * [`train`] — end-to-end pipelines: dense baseline, DiLoCo, flat MoE,
 //!   DiPaCo, and the fully-synchronous ablation (§4.5).
 //! * [`eval`] — validation perplexity (prefix-masked), frequent re-routing,
@@ -84,6 +88,14 @@ pub mod coordinator {
     pub mod queue;
     pub mod task;
     pub mod worker;
+}
+
+pub mod chaos {
+    pub mod corruptor;
+    pub mod injector;
+    pub mod oracle;
+    pub mod plan;
+    pub mod sim;
 }
 
 pub mod train {

@@ -91,6 +91,24 @@ impl Nesterov {
     pub fn velocity_of(&self, m: ModuleId) -> Option<&[f32]> {
         self.velocity.get(&m).map(|v| v.as_slice())
     }
+
+    /// Rebuild an optimizer around externally-held velocity state. Outer
+    /// momentum belongs to the *module*, not to any particular executor:
+    /// when executors drop or re-join between phases and modules are
+    /// re-sharded, each module's velocity must follow it to whichever
+    /// executor now owns it.
+    pub fn from_velocity(lr: f32, momentum: f32, velocity: HashMap<ModuleId, Vec<f32>>) -> Self {
+        Nesterov {
+            lr,
+            momentum,
+            velocity,
+        }
+    }
+
+    /// Surrender the velocity map (inverse of [`Nesterov::from_velocity`]).
+    pub fn into_velocity(self) -> HashMap<ModuleId, Vec<f32>> {
+        self.velocity
+    }
 }
 
 /// Norm-rescale factor for a module (paper §2.7), relative to the
@@ -186,6 +204,31 @@ mod tests {
         assert!(b[0] > a[0] / 2.0);
         assert!(opt.velocity_of(mid(1, 0)).is_some());
         assert!(opt.velocity_of(mid(2, 2)).is_none());
+    }
+
+    #[test]
+    fn velocity_transplant_is_bitwise_equivalent() {
+        // Moving velocity between optimizer instances mid-stream (executor
+        // drop/re-join re-sharding) must not perturb the trajectory.
+        let g: Vec<f32> = (0..4).map(|i| 0.1 * (i as f32 + 1.0)).collect();
+        let mut cont = Nesterov::new(0.7, 0.9);
+        let mut p1 = vec![0.5f32; 4];
+        cont.step(mid(0, 0), &mut p1, &g);
+        cont.step(mid(0, 0), &mut p1, &g);
+
+        let mut a = Nesterov::new(0.7, 0.9);
+        let mut p2 = vec![0.5f32; 4];
+        a.step(mid(0, 0), &mut p2, &g);
+        let mut b = Nesterov::from_velocity(0.7, 0.9, a.into_velocity());
+        b.step(mid(0, 0), &mut p2, &g);
+        for (x, y) in p1.iter().zip(&p2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(
+            cont.velocity_of(mid(0, 0)),
+            b.velocity_of(mid(0, 0)),
+            "velocity state diverged across the transplant"
+        );
     }
 
     #[test]

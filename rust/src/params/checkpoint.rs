@@ -601,6 +601,50 @@ mod tests {
     }
 
     #[test]
+    fn corruption_errors_are_distinct() {
+        // The chaos corruptor's three damage modes must each surface a
+        // *different*, matchable error — operators (and the chaos oracle)
+        // tell torn tails, flipped bits, and mangled directories apart.
+        use crate::chaos::corruptor::{corrupt_file, CorruptMode};
+        let dir = tmpdir();
+        let theta: Vec<f32> = (0..256).map(|i| i as f32 * 0.25).collect();
+        let tail = vec![1.5f32; 256];
+        let write = |p: &Path| {
+            save_sections(p, &[("theta", theta.as_slice()), ("tail", tail.as_slice())]).unwrap()
+        };
+
+        // payload truncation: the first section survives, the second's
+        // payload is cut — a short read, NOT a checksum complaint
+        let p = dir.join("x-trunc.dpc");
+        write(&p);
+        corrupt_file(&p, CorruptMode::TruncatePayload).unwrap();
+        let mut r = SectionReader::open(&p).unwrap();
+        assert_eq!(r.read("theta").unwrap(), theta);
+        let e = format!("{:#}", r.read("tail").unwrap_err());
+        assert!(e.contains("truncated payload"), "wrong truncation error: {e}");
+        assert!(!e.contains("checksum mismatch"), "misdiagnosed as checksum: {e}");
+
+        // payload bit-flip: directory opens fine, section read fails its
+        // fletcher64 check
+        let p = dir.join("x-flip.dpc");
+        write(&p);
+        corrupt_file(&p, CorruptMode::FlipPayloadByte).unwrap();
+        let mut r = SectionReader::open(&p).unwrap();
+        let e = format!("{:#}", r.read("theta").unwrap_err());
+        assert!(e.contains("checksum mismatch (torn write?)"), "wrong flip error: {e}");
+
+        // directory damage: rejected at open, before any payload is read
+        let p = dir.join("x-dir.dpc");
+        write(&p);
+        corrupt_file(&p, CorruptMode::DamageDirectory).unwrap();
+        let e = format!("{:#}", SectionReader::open(&p).unwrap_err());
+        assert!(
+            e.contains("section directory checksum mismatch"),
+            "wrong directory error: {e}"
+        );
+    }
+
+    #[test]
     fn save_sections_matches_checkpoint_save() {
         let p1 = tmpdir().join("ss1.dpc");
         let p2 = tmpdir().join("ss2.dpc");

@@ -52,6 +52,22 @@ pub mod gens {
     pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
         (0..len).map(|_| rng.normal_f32(0.0, scale)).collect()
     }
+
+    /// A shuffled at-least-once delivery order over `n` items: every item
+    /// appears 1..=max_dups times, in random positions. Models redundant
+    /// checkpoint publication (lease-expiry re-execution, DB replay) for
+    /// the dedup properties.
+    pub fn delivery_schedule(rng: &mut Rng, n: usize, max_dups: usize) -> Vec<usize> {
+        let mut sched = Vec::new();
+        for i in 0..n {
+            let dups = 1 + rng.gen_range(max_dups);
+            for _ in 0..dups {
+                sched.push(i);
+            }
+        }
+        rng.shuffle(&mut sched);
+        sched
+    }
 }
 
 /// Synthetic routing fixtures shared by the serve unit tests, the serve

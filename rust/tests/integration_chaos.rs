@@ -1,0 +1,297 @@
+//! Chaos harness (DESIGN.md "Failure model"): named fault-injection
+//! scenarios over the real coordinator stack — task queue, checkpoint DB,
+//! DPC2 files, sharded outer executors — each judged by a
+//! convergence-equivalence oracle against a fault-free run of the same
+//! seeded recipe.
+//!
+//! Pass criteria per scenario: either the faulted run converges to a
+//! **bit-identical** `ModuleStore` (recoverable faults: kills, preemption,
+//! lease expiry, stragglers, delayed/reordered publication, executor
+//! drop/re-join) or it aborts **loudly** with a structured error
+//! (unrecoverable faults: checkpoint corruption). Silent divergence and
+//! silent success both fail.
+//!
+//! Engine-free: the inner phase is simulated by a pure function of
+//! `(seed, phase, path, theta)`, so no `make artifacts` is needed and no
+//! scenario is skipped.
+
+use dipaco::chaos::corruptor::CorruptMode;
+use dipaco::chaos::oracle::{run_scenario, run_scenario_vs, ChaosReport, Verdict};
+use dipaco::chaos::plan::{Fault, FaultPlan};
+use dipaco::chaos::sim::SimSpec;
+
+fn assert_converged(r: &ChaosReport) {
+    assert!(
+        matches!(r.verdict, Verdict::ConvergedIdentical),
+        "expected bit-identical convergence, got {:?}\nreport: {}",
+        r.verdict,
+        r.to_json().to_string_pretty()
+    );
+    assert!(r.is_pass());
+    assert_eq!(r.faulted_digest, Some(r.reference_digest));
+    assert!(r.unfired.is_empty(), "planned faults never fired: {:?}", r.unfired);
+}
+
+fn assert_aborted(r: &ChaosReport, detector_msg: &str) {
+    match &r.verdict {
+        Verdict::AbortedLoudly { error } => {
+            assert!(
+                error.contains(detector_msg),
+                "abort fired from the wrong detector.\n  want: {detector_msg:?}\n  got:  {error}"
+            );
+        }
+        v => panic!(
+            "corruption must abort loudly, got {v:?}\nreport: {}",
+            r.to_json().to_string_pretty()
+        ),
+    }
+    assert!(r.is_pass());
+    assert_eq!(r.faulted_digest, None, "an aborted run has no final digest");
+}
+
+// ---- worker/queue-plane faults: must converge bit-identically ----
+
+#[test]
+fn chaos_worker_kill_mid_phase() {
+    // Hard worker crashes mid-phase: only lease expiry + reclaim recovers
+    // the abandoned tasks.
+    let mut spec = SimSpec::new(11);
+    spec.lease_ms = 700;
+    let plan = FaultPlan::new(vec![
+        Fault::KillWorker { phase: 0, path: 1 },
+        Fault::KillWorker { phase: 1, path: 2 },
+    ]);
+    let r = run_scenario("worker-kill", &spec, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.fired.len(), 2);
+    assert_eq!(r.requeues, 2, "each kill recovers via exactly one redelivery");
+    assert_eq!(r.phases_run, 3);
+}
+
+#[test]
+fn chaos_preemption_graceful() {
+    // Graceful preemption: the worker fails its lease, the task requeues
+    // immediately (no expiry wait).
+    let spec = SimSpec::new(12);
+    let plan = FaultPlan::new(vec![
+        Fault::Preempt { phase: 0, path: 0 },
+        Fault::Preempt { phase: 2, path: 3 },
+    ]);
+    let r = run_scenario("preemption", &spec, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 2);
+    assert_eq!(r.completed, 12);
+}
+
+#[test]
+fn chaos_lease_expiry_redelivery() {
+    // A worker stalls past its lease; the task is redelivered and the
+    // stalled zombie's late writes/retirement must all be rejected or
+    // absorbed idempotently.
+    let mut spec = SimSpec::new(13);
+    spec.lease_ms = 300;
+    let plan = FaultPlan::new(vec![Fault::ExpireLease {
+        phase: 1,
+        path: 0,
+        hold_ms: 1500,
+    }]);
+    let r = run_scenario("lease-expiry", &spec, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 1, "expiry reclaim redelivers exactly once");
+    // 12 tasks retire exactly once each — the zombie's stale complete()
+    // must NOT count
+    assert_eq!(r.completed, 12);
+}
+
+#[test]
+fn chaos_straggler_heterogeneous_speeds() {
+    // Stragglers within their lease: arrival order changes, results must
+    // not (the executor reduces in path-id order at quorum).
+    let spec = SimSpec::new(14);
+    let plan = FaultPlan::new(vec![
+        Fault::Straggle { phase: 0, path: 0, delay_ms: 120 },
+        Fault::Straggle { phase: 1, path: 2, delay_ms: 60 },
+        Fault::Straggle { phase: 2, path: 1, delay_ms: 180 },
+    ]);
+    let r = run_scenario("straggler", &spec, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 0, "stragglers stayed within their leases");
+}
+
+#[test]
+fn chaos_executor_drop_and_rejoin() {
+    // An outer executor drops out for phase 1 and re-joins for phase 2:
+    // modules are re-sharded both times, and each module's Nesterov
+    // velocity must follow it to its new owner bit-exactly.
+    let mut faulted = SimSpec::new(15);
+    faulted.executors_per_phase = vec![2, 1, 2];
+    let mut reference = SimSpec::new(15);
+    reference.executors_per_phase = vec![2];
+    let r = run_scenario_vs("executor-rejoin", &faulted, &reference, &FaultPlan::none()).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 0);
+    assert_eq!(r.phases_run, 3);
+}
+
+#[test]
+fn chaos_delayed_publication() {
+    // Checkpoints written on time but published late: the online
+    // averaging just waits; nothing is lost or double-counted.
+    let spec = SimSpec::new(19);
+    let plan = FaultPlan::new(vec![
+        Fault::DelayPublish { phase: 0, path: 2, delay_ms: 150 },
+        Fault::DelayPublish { phase: 2, path: 0, delay_ms: 80 },
+    ]);
+    let r = run_scenario("delayed-publish", &spec, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 0);
+}
+
+#[test]
+fn chaos_reordered_publication() {
+    // Adversarial arrival order: path 0's checkpoint is held until path 3
+    // has published. f32 accumulation is order-sensitive, so this is the
+    // direct probe of the sorted-quorum reduce.
+    let spec = SimSpec::new(20);
+    let plan = FaultPlan::new(vec![Fault::ReorderPublish {
+        phase: 1,
+        first: 3,
+        then: 0,
+    }]);
+    let r = run_scenario("reordered-publish", &spec, &plan).unwrap();
+    assert_converged(&r);
+    assert!(
+        r.fired.iter().all(|e| !e.contains("timed out")),
+        "reorder resolved by dependency, not by deadline: {:?}",
+        r.fired
+    );
+}
+
+// ---- checkpoint-plane faults: must abort loudly, never average garbage ----
+
+fn corruption_spec(seed: u64) -> SimSpec {
+    let mut spec = SimSpec::new(seed);
+    // One executor: a corrupt section aborts that executor, and sibling
+    // executors of the same phase would otherwise idle on their
+    // subscription channel waiting for a phase that is already dead.
+    spec.executors_per_phase = vec![1];
+    spec
+}
+
+#[test]
+fn chaos_section_truncation_aborts_loudly() {
+    let plan = FaultPlan::new(vec![Fault::Corrupt {
+        phase: 0,
+        path: 0,
+        mode: CorruptMode::TruncatePayload,
+    }]);
+    let r = run_scenario("truncation", &corruption_spec(16), &plan).unwrap();
+    assert_aborted(&r, "truncated payload");
+    assert_eq!(r.phases_run, 0, "the corrupted phase must not commit");
+}
+
+#[test]
+fn chaos_payload_bitflip_aborts_loudly() {
+    let plan = FaultPlan::new(vec![Fault::Corrupt {
+        phase: 0,
+        path: 0,
+        mode: CorruptMode::FlipPayloadByte,
+    }]);
+    let r = run_scenario("bitflip", &corruption_spec(17), &plan).unwrap();
+    assert_aborted(&r, "checksum mismatch");
+    assert_eq!(r.phases_run, 0);
+}
+
+#[test]
+fn chaos_directory_corruption_aborts_loudly() {
+    let plan = FaultPlan::new(vec![Fault::Corrupt {
+        phase: 0,
+        path: 0,
+        mode: CorruptMode::DamageDirectory,
+    }]);
+    let r = run_scenario("dir-corruption", &corruption_spec(18), &plan).unwrap();
+    assert_aborted(&r, "section directory checksum mismatch");
+    assert_eq!(r.phases_run, 0);
+}
+
+// ---- combined churn + determinism of the harness itself ----
+
+fn churn_report() -> ChaosReport {
+    let mut spec = SimSpec::new(42);
+    spec.lease_ms = 1500;
+    let plan = FaultPlan::random(42, spec.phases, spec.topo.paths(), 6);
+    assert!(!plan.faults.is_empty());
+    run_scenario("combined-churn", &spec, &plan).unwrap()
+}
+
+#[test]
+fn chaos_combined_churn() {
+    // A seeded random mix of kills, preemptions, stragglers, delayed and
+    // reordered publication across all phases.
+    let r = churn_report();
+    assert_converged(&r);
+    assert_eq!(
+        r.fired.len(),
+        r.planned.len(),
+        "every planned fault must fire: planned {:?}, fired {:?}",
+        r.planned,
+        r.fired
+    );
+    assert_eq!(r.completed, 12);
+    assert_eq!(r.dead_tasks, 0);
+}
+
+#[test]
+fn chaos_report_deterministic_under_fixed_seed() {
+    // The whole harness — plan generation, fault delivery, queue
+    // accounting, digests, verdict — must reproduce byte-for-byte from
+    // the seed, or sweep reports could not be compared across runs.
+    let a = churn_report().to_json().to_string();
+    let b = churn_report().to_json().to_string();
+    assert_eq!(a, b, "same seed produced different ChaosReports");
+}
+
+// ---- weekly sweep: many random seeds, reports uploaded as artifacts ----
+
+/// `cargo test -q --test integration_chaos -- --ignored --nocapture`
+/// (or `make chaos-sweep`). Env: `DIPACO_CHAOS_SEEDS` (count, default
+/// 20), `DIPACO_CHAOS_SEED0` (first seed, default 1000). Writes one
+/// ChaosReport JSON per seed under `results/chaos/`.
+#[test]
+#[ignore]
+fn chaos_sweep_random_seeds() {
+    let n: u64 = std::env::var("DIPACO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let seed0: u64 = std::env::var("DIPACO_CHAOS_SEED0")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let out_dir = std::path::Path::new("results/chaos");
+    std::fs::create_dir_all(out_dir).unwrap();
+    let mut failures = Vec::new();
+    for i in 0..n {
+        let seed = seed0.wrapping_add(i);
+        let mut spec = SimSpec::new(seed);
+        spec.lease_ms = 1500;
+        let plan = FaultPlan::random(seed, spec.phases, spec.topo.paths(), 6);
+        let r = run_scenario(&format!("sweep-{seed}"), &spec, &plan).unwrap();
+        std::fs::write(
+            out_dir.join(format!("report_{seed}.json")),
+            r.to_json().to_string_pretty(),
+        )
+        .unwrap();
+        println!(
+            "seed {seed}: {:?} ({} planned, {} fired, {} requeues)",
+            r.verdict,
+            r.planned.len(),
+            r.fired.len(),
+            r.requeues
+        );
+        if !r.is_pass() {
+            failures.push(seed);
+        }
+    }
+    assert!(failures.is_empty(), "chaos sweep failed for seeds {failures:?}");
+}

@@ -3,12 +3,16 @@
 //! failure schedules, outer-averaging equivalences, checkpoint and JSON
 //! round-trips.
 
+use std::sync::mpsc::channel;
+use std::sync::Mutex;
 use std::time::Duration;
 
-use dipaco::config::{StemPlacement, TopologySpec};
+use dipaco::config::{DilocoConfig, StemPlacement, TopologySpec};
+use dipaco::coordinator::db::CkptRow;
+use dipaco::coordinator::outer::{executor_loop, OuterConfig, OuterIoStats};
 use dipaco::coordinator::queue::TaskQueue;
 use dipaco::coordinator::task::{Task, TrainTask};
-use dipaco::optim::OuterAccumulator;
+use dipaco::optim::{Nesterov, OuterAccumulator};
 use dipaco::params::checkpoint::Checkpoint;
 use dipaco::params::manifest::Manifest;
 use dipaco::testkit::forall;
@@ -364,6 +368,95 @@ fn prop_queue_exactly_once_under_random_failures() {
             } else {
                 Err(format!("retired {} of {} tasks (dups or losses)", ids.len(), n_tasks))
             }
+        },
+    );
+}
+
+#[test]
+fn prop_random_fault_delivery_never_double_accumulates() {
+    // Chaos-harness invariant: whatever at-least-once delivery order the
+    // fault plane produces (duplicates from zombie re-publication, any
+    // shuffle from stragglers/reorders), the executor must accumulate each
+    // path's checkpoint EXACTLY once and land on a bit-identical store —
+    // the (phase, path) dedup plus the path-id-sorted quorum reduce.
+    forall(
+        "no double accumulation under random delivery",
+        800,
+        8,
+        |rng| {
+            let man = fake_manifest(rng);
+            let spec = random_spec(rng, man.model.n_layers);
+            (man, spec, rng.next_u64())
+        },
+        |(man, spec, seed)| {
+            let topo = Topology::build(man, spec);
+            let theta: Vec<f32> = {
+                let mut rng = Rng::new(*seed);
+                (0..man.total_params).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+            };
+            let dir = std::env::temp_dir().join(format!(
+                "dipaco-prop-chaos-{}-{seed:x}",
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let rows: Vec<CkptRow> = (0..topo.paths)
+                .map(|p| {
+                    let after: Vec<f32> = theta
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &v)| v * 0.99 - 0.001 * ((i + 7 * p) % 13) as f32)
+                        .collect();
+                    let (ck, modules) = topo.delta_checkpoint(p, &theta, &after);
+                    let file = dir.join(format!("path{p}.dpc"));
+                    ck.save(&file).map_err(|e| e.to_string())?;
+                    Ok(CkptRow {
+                        rowid: 0,
+                        phase: 0,
+                        path_id: p,
+                        kind: "path".into(),
+                        file,
+                        step: 1,
+                        loss: 1.0,
+                        modules,
+                    })
+                })
+                .collect::<Result<_, String>>()?;
+            let owned = topo.all_modules();
+            let run = |deliveries: &[usize]| -> Result<ModuleStore, String> {
+                let store = Mutex::new(ModuleStore::from_base(&topo, &theta));
+                let cfg = OuterConfig {
+                    diloco: DilocoConfig::default(),
+                    shard_sizes: vec![1; topo.paths],
+                    io: OuterIoStats::default(),
+                };
+                let mut opt = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+                let (tx, rx) = channel();
+                for &i in deliveries {
+                    tx.send(rows[i].clone()).unwrap();
+                }
+                drop(tx); // starvation would surface as a channel-closed error
+                let (done_tx, _done_rx) = channel();
+                executor_loop(&topo, &store, &mut opt, &owned, &cfg, 0, &rx, &done_tx)
+                    .map_err(|e| format!("{e:#}"))?;
+                Ok(store.into_inner().unwrap())
+            };
+            // canonical: each row once, in path order
+            let canonical: Vec<usize> = (0..topo.paths).collect();
+            let reference = run(&canonical)?;
+            // faulted: shuffled at-least-once schedule with duplicates
+            let schedule =
+                dipaco::testkit::gens::delivery_schedule(&mut Rng::new(*seed), topo.paths, 3);
+            let faulted = run(&schedule)?;
+            for m in topo.all_modules() {
+                for (i, (x, y)) in reference.get(m).iter().zip(faulted.get(m)).enumerate() {
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!(
+                            "module {m}[{i}] diverged under schedule {schedule:?}: {x} vs {y}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
         },
     );
 }
