@@ -7,7 +7,7 @@
 PYTHON ?= python3
 PRESETS ?= test path large
 
-.PHONY: artifacts build test bench bench-ckpt chaos chaos-sweep clippy fmt
+.PHONY: artifacts build test bench bench-ckpt bench-serve chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
 
 artifacts:
 	@for p in $(PRESETS); do \
@@ -26,11 +26,23 @@ test:
 bench-ckpt:
 	cargo bench --bench bench_ckpt
 
+# Serving-plane bench (§2.6): queueing/batching/routing overhead on a
+# synthetic executor, plus the self-healing (breaker + supervisor)
+# healthy-path overhead check. CSV under results/bench/bench_serve.csv.
+bench-serve:
+	cargo bench --bench bench_serve
+
 # Chaos harness (DESIGN.md "Failure model"): named fault-injection
 # scenarios with fixed seeds, judged by convergence-equivalence oracles.
 # Engine-free — no `make artifacts` needed.
 chaos:
 	cargo test -q --test integration_chaos
+
+# Serving-plane chaos (DESIGN.md "Failure model", serving rows): executor
+# panic/wedge/slow fault plans over the real serving stack, judged by the
+# no-hung-ticket oracle. Engine-free, fixed seeds.
+chaos-serve:
+	cargo test -q --test integration_serve_chaos
 
 # Weekly seed sweep: random fault plans, one ChaosReport JSON per seed
 # under results/chaos/. DIPACO_CHAOS_SEEDS / DIPACO_CHAOS_SEED0 override
@@ -38,6 +50,12 @@ chaos:
 chaos-sweep:
 	mkdir -p results/chaos
 	cargo test -q --test integration_chaos -- --ignored --nocapture
+
+# Serving-plane counterpart: random serve fault plans, one
+# ServeChaosReport JSON per seed under results/chaos/.
+chaos-serve-sweep:
+	mkdir -p results/chaos
+	cargo test -q --test integration_serve_chaos -- --ignored --nocapture
 
 clippy:
 	cargo clippy --all-targets -- -D warnings

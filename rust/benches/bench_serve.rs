@@ -10,7 +10,7 @@
 use std::time::{Duration, Instant};
 
 use dipaco::benchkit::{header, Bencher};
-use dipaco::config::ServeConfig;
+use dipaco::config::{BreakerConfig, ServeConfig};
 use dipaco::serve::server::{PathExecutor, Server};
 use dipaco::serve::stats::ServeReport;
 use dipaco::testkit::routers::{one_hot, one_hot_router};
@@ -143,6 +143,46 @@ fn main() {
         );
     }
 
+    // Self-healing overhead on the healthy path: with no faults, the
+    // supervisor adds one catch_unwind frame per batch and admission adds
+    // one breaker lock per request. That must be noise next to even a
+    // synthetic 300us batch — measured here as guarded vs unguarded
+    // throughput on the identical stream.
+    println!("\nself-healing overhead (healthy path, no faults):");
+    let unguarded = ServeConfig {
+        breaker: BreakerConfig {
+            enabled: false,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let best_tok_s = |cfg: &ServeConfig| -> f64 {
+        (0..3)
+            .map(|_| drive(cfg, &uniform).tok_per_s)
+            .fold(0.0, f64::max)
+    };
+    let guarded_tok_s = best_tok_s(&park);
+    let unguarded_tok_s = best_tok_s(&unguarded);
+    let overhead_pct = 100.0 * (1.0 - guarded_tok_s / unguarded_tok_s);
+    println!(
+        "  guarded {guarded_tok_s:.0} tok/s vs unguarded {unguarded_tok_s:.0} tok/s \
+         ({overhead_pct:+.1}% overhead)"
+    );
+    csv.push(format!(
+        "healthy-path guarded,0,0,0,{guarded_tok_s:.0},{REQUESTS},0"
+    ));
+    csv.push(format!(
+        "healthy-path unguarded,0,0,0,{unguarded_tok_s:.0},{REQUESTS},0"
+    ));
+    // Generous bound (this is a bench, not a tier-1 test, but a gross
+    // regression — e.g. a ranked-scores sort on the fast path — should
+    // fail loudly here rather than ship).
+    assert!(
+        guarded_tok_s >= unguarded_tok_s / 1.5,
+        "breaker/supervision checks cost >33% healthy-path throughput: \
+         guarded {guarded_tok_s:.0} vs unguarded {unguarded_tok_s:.0} tok/s"
+    );
+
     println!("\nwall-clock per full round ({REQUESTS} requests):");
     header();
     for (name, cfg, stream) in [
@@ -166,7 +206,7 @@ fn main() {
         ));
     }
 
-    let out = dipaco::metrics::results_dir().join("bench_serve.csv");
+    let out = dipaco::metrics::results_dir().join("bench").join("bench_serve.csv");
     std::fs::create_dir_all(out.parent().unwrap()).unwrap();
     std::fs::write(&out, csv.join("\n")).unwrap();
     println!("\ncsv: {}", out.display());

@@ -23,13 +23,14 @@
 
 use std::collections::HashSet;
 use std::path::Path;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::chaos::corruptor;
-use crate::chaos::plan::{Fault, FaultPlan};
+use crate::chaos::plan::{Fault, FaultPlan, ServeFault, ServeFaultPlan};
+use crate::serve::server::PathExecutor;
 
 /// What the worker should do with the task it just leased.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -184,10 +185,151 @@ impl FaultInjector {
     }
 }
 
+/// What [`ChaosExec`] should do with the forward call it is about to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForwardFault {
+    /// Run clean.
+    None,
+    /// Panic mid-forward (payload prefixed `chaos-inject` so the quiet
+    /// panic hook can silence it).
+    Panic,
+    /// Sleep, then fail the batch with an error.
+    Wedge(Duration),
+    /// Sleep, then run clean.
+    Slow(Duration),
+}
+
+struct ServeInjState {
+    /// `(fault, remaining budget)`; a fault moves to `fired` when its
+    /// budget reaches zero.
+    pending: Vec<(ServeFault, usize)>,
+    fired: Vec<String>,
+}
+
+/// Serving-plane fault delivery: one shared injector consulted by every
+/// path's [`ChaosExec`] at each forward call. Faults on the same path are
+/// consumed in plan order, one budget unit per forward call, so a serial
+/// scenario driver maps faults 1:1 onto its submissions.
+pub struct ServeInjector {
+    state: Mutex<ServeInjState>,
+}
+
+impl ServeInjector {
+    pub fn new(plan: &ServeFaultPlan) -> ServeInjector {
+        ServeInjector {
+            state: Mutex::new(ServeInjState {
+                pending: plan
+                    .faults
+                    .iter()
+                    .map(|f| (f.clone(), f.batches()))
+                    .collect(),
+                fired: Vec::new(),
+            }),
+        }
+    }
+
+    /// Consume one budget unit of the first live fault on `path` (if
+    /// any) and say how this forward call should misbehave.
+    pub fn on_forward(&self, path: usize) -> ForwardFault {
+        let mut g = self.state.lock().unwrap();
+        let Some(idx) = g
+            .pending
+            .iter()
+            .position(|(f, left)| f.path() == path && *left > 0)
+        else {
+            return ForwardFault::None;
+        };
+        g.pending[idx].1 -= 1;
+        let (fault, left) = g.pending[idx].clone();
+        if left == 0 {
+            g.fired.push(fault.describe());
+        }
+        match fault {
+            ServeFault::PanicExec { .. } => ForwardFault::Panic,
+            ServeFault::WedgeBatch { wedge_ms, .. } => {
+                ForwardFault::Wedge(Duration::from_millis(wedge_ms))
+            }
+            ServeFault::SlowExec { delay_ms, .. } => {
+                ForwardFault::Slow(Duration::from_millis(delay_ms))
+            }
+        }
+    }
+
+    /// Faults whose whole budget was delivered, in canonical (sorted)
+    /// order.
+    pub fn fired_events(&self) -> Vec<String> {
+        let mut v = self.state.lock().unwrap().fired.clone();
+        v.sort();
+        v
+    }
+
+    /// Faults with budget left undelivered (sorted) — a non-empty list
+    /// means the scenario never drove enough traffic at the faulted path.
+    pub fn unfired(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .state
+            .lock()
+            .unwrap()
+            .pending
+            .iter()
+            .filter(|(_, left)| *left > 0)
+            .map(|(f, _)| f.describe())
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+/// Fault-injecting executor wrapper: delegates to the real executor,
+/// except when the [`ServeInjector`] says this forward call misbehaves.
+/// The panic payload is prefixed `chaos-inject` (see
+/// `testkit::install_quiet_panic_hook`).
+pub struct ChaosExec<E: PathExecutor> {
+    path: usize,
+    inner: E,
+    injector: Arc<ServeInjector>,
+}
+
+impl<E: PathExecutor> ChaosExec<E> {
+    pub fn new(path: usize, inner: E, injector: Arc<ServeInjector>) -> Self {
+        ChaosExec {
+            path,
+            inner,
+            injector,
+        }
+    }
+}
+
+impl<E: PathExecutor> PathExecutor for ChaosExec<E> {
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn seq(&self) -> usize {
+        self.inner.seq()
+    }
+
+    fn forward(&mut self, toks: &[i32], rows: usize) -> Result<Vec<(f64, usize)>> {
+        match self.injector.on_forward(self.path) {
+            ForwardFault::None => self.inner.forward(toks, rows),
+            ForwardFault::Panic => {
+                panic!("chaos-inject: executor panic on path {}", self.path)
+            }
+            ForwardFault::Wedge(d) => {
+                std::thread::sleep(d);
+                anyhow::bail!("chaos-inject: wedged batch killed on path {}", self.path)
+            }
+            ForwardFault::Slow(d) => {
+                std::thread::sleep(d);
+                self.inner.forward(toks, rows)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     #[test]
     fn faults_fire_exactly_once() {
@@ -238,5 +380,74 @@ mod tests {
         let fired = inj.fired_events();
         assert_eq!(fired.len(), 1);
         assert!(!fired[0].contains("timed out"));
+    }
+
+    #[test]
+    fn serve_faults_drain_budget_per_forward_call() {
+        let plan = ServeFaultPlan::new(vec![
+            ServeFault::PanicExec { path: 0, batches: 2 },
+            ServeFault::SlowExec {
+                path: 2,
+                batches: 1,
+                delay_ms: 25,
+            },
+        ]);
+        let inj = ServeInjector::new(&plan);
+        // untouched path always runs clean
+        assert_eq!(inj.on_forward(1), ForwardFault::None);
+        // path 0: two panics, then healed
+        assert_eq!(inj.on_forward(0), ForwardFault::Panic);
+        assert_eq!(inj.unfired().len(), 2, "budget not yet drained");
+        assert_eq!(inj.on_forward(0), ForwardFault::Panic);
+        assert_eq!(inj.on_forward(0), ForwardFault::None);
+        assert_eq!(
+            inj.fired_events(),
+            vec!["path 0: panic executor for 2 batches".to_string()]
+        );
+        // path 2: one slow batch, then healed
+        assert_eq!(
+            inj.on_forward(2),
+            ForwardFault::Slow(Duration::from_millis(25))
+        );
+        assert_eq!(inj.on_forward(2), ForwardFault::None);
+        assert!(inj.unfired().is_empty());
+        assert_eq!(inj.fired_events().len(), 2);
+    }
+
+    #[test]
+    fn chaos_exec_panics_wedges_and_heals() {
+        crate::testkit::install_quiet_panic_hook();
+        struct OkExec;
+        impl PathExecutor for OkExec {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn seq(&self) -> usize {
+                4
+            }
+            fn forward(&mut self, _t: &[i32], rows: usize) -> Result<Vec<(f64, usize)>> {
+                Ok((0..rows).map(|_| (1.0, 3)).collect())
+            }
+        }
+        let plan = ServeFaultPlan::new(vec![ServeFault::WedgeBatch {
+            path: 0,
+            batches: 1,
+            wedge_ms: 5,
+        }]);
+        let inj = Arc::new(ServeInjector::new(&plan));
+        let mut exec = ChaosExec::new(0, OkExec, Arc::clone(&inj));
+        let err = exec.forward(&[0; 4], 1).unwrap_err();
+        assert!(err.to_string().contains("wedged batch"), "{err:#}");
+        // budget drained: next call is clean
+        assert_eq!(exec.forward(&[0; 4], 1).unwrap().len(), 1);
+
+        let panic_plan = ServeFaultPlan::new(vec![ServeFault::PanicExec { path: 1, batches: 1 }]);
+        let inj = Arc::new(ServeInjector::new(&panic_plan));
+        let mut exec = ChaosExec::new(1, OkExec, Arc::clone(&inj));
+        let unwound =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| exec.forward(&[0; 4], 1)));
+        assert!(unwound.is_err(), "PanicExec must unwind");
+        assert!(exec.forward(&[0; 4], 1).is_ok());
+        assert!(inj.unfired().is_empty());
     }
 }

@@ -12,13 +12,20 @@
 //! class of failure tolerance tests exist to catch.
 
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::chaos::plan::FaultPlan;
+use crate::chaos::injector::{ChaosExec, ServeInjector};
+use crate::chaos::plan::{FaultPlan, ServeFaultPlan};
 use crate::chaos::sim::{run_sim, sim_topology, SimOutcome, SimSpec};
+use crate::config::{BreakerConfig, ServeConfig, SupervisorConfig};
+use crate::serve::request::ServeError;
+use crate::serve::server::{PathExecutor, Server};
 use crate::topology::{ModuleStore, Topology};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Order-independent digest of a store (fletcher-style over the bit
 /// patterns, modules visited in canonical `all_modules()` order).
@@ -245,9 +252,331 @@ fn judge(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving-plane chaos: drive a real Server with scripted executor faults
+// and demand that NO request ever hangs — every ticket resolves with a
+// score, a redirect, or a loud ServeError — and that faulted paths
+// recover (breaker closed, health healthy) once the fault budget drains.
+// ---------------------------------------------------------------------------
+
+/// Shape of one serve-chaos scenario. Everything timing-sensitive is
+/// pinned so two runs of the same `(spec, plan)` produce byte-identical
+/// reports: micro-batches of 1 flushed instantly, one serial client (the
+/// next submission happens only after the previous ticket resolved, so
+/// breaker transitions are ordered), stable runner-up tie-breaking in the
+/// router, and a breaker cooldown long enough that no half-open probe can
+/// sneak into the fault/traffic phases.
+#[derive(Debug, Clone)]
+pub struct ServeScenarioSpec {
+    pub seed: u64,
+    /// Paths served (>= 2 so degraded routing has a fallback).
+    pub paths: usize,
+    /// Mixed-path submissions in the traffic phase (seeded stream).
+    pub traffic: usize,
+    /// Breaker `min_samples` AND every fault's budget: the last faulted
+    /// batch is exactly the batch that trips the breaker, so all planned
+    /// faults fire before admission stops routing to the path.
+    pub fault_batches: usize,
+    /// Breaker cooldown. The fault + traffic phases must complete within
+    /// this of the first trip (they are sleep-free except for injected
+    /// wedge/slow delays, well under a second).
+    pub cooldown_ms: u64,
+}
+
+impl ServeScenarioSpec {
+    pub fn new(seed: u64) -> ServeScenarioSpec {
+        ServeScenarioSpec {
+            seed,
+            paths: 3,
+            traffic: 48,
+            fault_batches: 3,
+            cooldown_ms: 1200,
+        }
+    }
+}
+
+/// Structured record of one serve-chaos scenario; serializes
+/// deterministically (fixed field order, sorted event lists, no wall
+/// times). Counters are CLIENT-side classifications of every submission,
+/// so "no hung request" is judged from the waiter's perspective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeChaosReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub paths: usize,
+    pub planned: Vec<String>,
+    pub fired: Vec<String>,
+    pub unfired: Vec<String>,
+    /// Total submissions across all phases.
+    pub submitted: u64,
+    /// Resolved Ok on the path the client intended.
+    pub ok: u64,
+    /// Resolved Ok on a fallback path (degraded-mode redirect).
+    pub redirected: u64,
+    /// Resolved with a loud ServeError (ExecFailed etc.).
+    pub errored: u64,
+    /// Refused at admission as Shed (fallback saturated).
+    pub shed: u64,
+    /// Refused at admission with no fallback (CircuitOpen & co).
+    pub refused: u64,
+    /// Tickets that did not resolve within the 10s deadline — the one
+    /// outcome the serving plane must NEVER produce.
+    pub hung: u64,
+    pub per_path_trips: Vec<u64>,
+    /// Breaker state per path after shutdown ("closed"/"open"/"half-open").
+    pub final_breaker: Vec<String>,
+    /// Worker health per path after shutdown ("healthy"/"restarting"/"down").
+    pub final_health: Vec<String>,
+    /// Invariant violations found by the judge; empty = pass.
+    pub violations: Vec<String>,
+}
+
+impl ServeChaosReport {
+    pub fn is_pass(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let strs = |v: &[String]| Json::arr(v.iter().map(|s| Json::str(s.clone())));
+        Json::obj(vec![
+            ("scenario", Json::str(self.scenario.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("paths", Json::num(self.paths as f64)),
+            ("planned", strs(&self.planned)),
+            ("fired", strs(&self.fired)),
+            ("unfired", strs(&self.unfired)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("redirected", Json::num(self.redirected as f64)),
+            ("errored", Json::num(self.errored as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("refused", Json::num(self.refused as f64)),
+            ("hung", Json::num(self.hung as f64)),
+            (
+                "per_path_trips",
+                Json::arr(self.per_path_trips.iter().map(|&t| Json::num(t as f64))),
+            ),
+            ("final_breaker", strs(&self.final_breaker)),
+            ("final_health", strs(&self.final_health)),
+            ("violations", strs(&self.violations)),
+        ])
+    }
+}
+
+/// Synthetic instant executor for serve-chaos scenarios (the faults come
+/// from the [`ChaosExec`] wrapper, never from the backend itself).
+struct SynthServeExec {
+    seq: usize,
+}
+
+impl PathExecutor for SynthServeExec {
+    fn batch(&self) -> usize {
+        1
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn forward(&mut self, _toks: &[i32], rows: usize) -> Result<Vec<(f64, usize)>> {
+        Ok((0..rows).map(|_| (1.0, self.seq - 1)).collect())
+    }
+}
+
+/// Client-side outcome tally for one scenario run.
+#[derive(Default)]
+struct Tally {
+    submitted: u64,
+    ok: u64,
+    redirected: u64,
+    errored: u64,
+    shed: u64,
+    refused: u64,
+    hung: u64,
+}
+
+impl Tally {
+    /// Submit one document intended for `path` and classify how it
+    /// resolves. Blocks until resolution (serial client — this ordering
+    /// is what makes breaker transitions deterministic).
+    fn drive(&mut self, server: &Server, paths: usize, path: usize, seq: usize) {
+        self.submitted += 1;
+        let z: Vec<f32> = (0..paths).map(|j| if j == path { 1.0 } else { 0.0 }).collect();
+        match server.submit(&z, vec![0i32; seq]) {
+            Ok(t) => match t.wait_timeout(Duration::from_secs(10)) {
+                None => self.hung += 1,
+                Some(Ok(resp)) => {
+                    if resp.path == path {
+                        self.ok += 1;
+                    } else {
+                        self.redirected += 1;
+                    }
+                }
+                Some(Err(_)) => self.errored += 1,
+            },
+            Err(ServeError::Shed { .. }) => self.shed += 1,
+            Err(_) => self.refused += 1,
+        }
+    }
+}
+
+/// Run one serving fault plan against a real [`Server`] and judge the
+/// self-healing invariants. Three serial phases:
+///
+/// 1. **fault** — each fault's full budget is driven at its own path, so
+///    the breaker trips on exactly the last faulted batch;
+/// 2. **traffic** — a seeded mixed-path stream; submissions whose primary
+///    is tripped must redirect, everything else serves normally;
+/// 3. **recovery** — sleep out the cooldown, then probe each faulted path
+///    until its breaker closes again (half-open probe batches).
+pub fn run_serve_scenario(
+    name: &str,
+    spec: &ServeScenarioSpec,
+    plan: &ServeFaultPlan,
+) -> ServeChaosReport {
+    assert!(spec.paths >= 2, "serve scenarios need a fallback path");
+    for f in &plan.faults {
+        assert!(f.path() < spec.paths, "fault on unknown path: {f:?}");
+        assert_eq!(
+            f.batches(),
+            spec.fault_batches,
+            "fault budget must equal breaker min_samples (see ServeScenarioSpec)"
+        );
+    }
+    crate::testkit::install_quiet_panic_hook();
+    const SEQ: usize = 8;
+    let injector = Arc::new(ServeInjector::new(plan));
+    let execs: Vec<ChaosExec<SynthServeExec>> = (0..spec.paths)
+        .map(|p| ChaosExec::new(p, SynthServeExec { seq: SEQ }, Arc::clone(&injector)))
+        .collect();
+    let cfg = ServeConfig {
+        queue_cap: 256,
+        max_batch: 1,
+        max_wait_ms: 0,
+        idle_ms: 5,
+        breaker: BreakerConfig {
+            enabled: true,
+            window: 8,
+            min_samples: spec.fault_batches,
+            error_rate: 0.5,
+            latency_ms: 15.0, // injected delays are >= 20ms
+            cooldown_ms: spec.cooldown_ms,
+            probes: 2,
+        },
+        supervisor: SupervisorConfig {
+            backoff_ms: 1,
+            backoff_max_ms: 8,
+            max_consecutive_panics: 0,
+        },
+        ..Default::default()
+    };
+    let server = Server::start(
+        &cfg,
+        crate::testkit::routers::one_hot_router(spec.paths),
+        execs,
+    );
+    let mut tally = Tally::default();
+
+    // Phase 1: drain every fault budget at its own path.
+    for f in &plan.faults {
+        for _ in 0..f.batches() {
+            tally.drive(&server, spec.paths, f.path(), SEQ);
+        }
+    }
+    // Phase 2: seeded mixed traffic over all paths.
+    let mut rng = Rng::new(spec.seed).fork(0x5E2E_C4A0);
+    for _ in 0..spec.traffic {
+        let p = rng.gen_range(spec.paths);
+        tally.drive(&server, spec.paths, p, SEQ);
+    }
+    // Phase 3: recovery — wait out the cooldown, then drive each faulted
+    // path through its half-open probes back to closed.
+    let faulted = plan.faulted_paths();
+    if !faulted.is_empty() {
+        std::thread::sleep(Duration::from_millis(spec.cooldown_ms + 400));
+        for &p in &faulted {
+            for _ in 0..(cfg.breaker.probes + 2) {
+                tally.drive(&server, spec.paths, p, SEQ);
+            }
+        }
+    }
+
+    let fired = injector.fired_events();
+    let unfired = injector.unfired();
+    let rep = server.shutdown();
+    let final_breaker = rep.per_path_breaker.clone();
+    let final_health: Vec<String> = rep
+        .per_path_health
+        .iter()
+        .map(|h| h.as_str().to_string())
+        .collect();
+
+    let mut violations = Vec::new();
+    if tally.hung > 0 {
+        violations.push(format!("{} tickets hung past the 10s deadline", tally.hung));
+    }
+    if tally.refused > 0 {
+        violations.push(format!(
+            "{} submissions refused with no fallback despite a healthy path",
+            tally.refused
+        ));
+    }
+    if tally.shed > 0 {
+        violations.push(format!(
+            "{} redirects shed despite an unsaturated fallback queue",
+            tally.shed
+        ));
+    }
+    if !unfired.is_empty() {
+        violations.push(format!("planned faults never fired: {unfired:?}"));
+    }
+    for &p in &faulted {
+        if rep.per_path_trips[p] == 0 {
+            violations.push(format!("path {p}: breaker never tripped under faults"));
+        }
+        if final_breaker[p] != "closed" {
+            violations.push(format!(
+                "path {p}: breaker did not recover to closed (is {})",
+                final_breaker[p]
+            ));
+        }
+        if final_health[p] != "healthy" {
+            violations.push(format!(
+                "path {p}: worker did not recover to healthy (is {})",
+                final_health[p]
+            ));
+        }
+    }
+    if plan.faults.is_empty() && (tally.redirected > 0 || tally.errored > 0) {
+        violations.push(format!(
+            "fault-free run saw {} redirects / {} errors",
+            tally.redirected, tally.errored
+        ));
+    }
+
+    ServeChaosReport {
+        scenario: name.to_string(),
+        seed: spec.seed,
+        paths: spec.paths,
+        planned: plan.describe(),
+        fired,
+        unfired,
+        submitted: tally.submitted,
+        ok: tally.ok,
+        redirected: tally.redirected,
+        errored: tally.errored,
+        shed: tally.shed,
+        refused: tally.refused,
+        hung: tally.hung,
+        per_path_trips: rep.per_path_trips,
+        final_breaker,
+        final_health,
+        violations,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chaos::plan::ServeFault;
     use crate::chaos::sim::sim_topology;
 
     #[test]
@@ -292,5 +621,50 @@ mod tests {
         // u64::MAX - 5 is not representable in f64; hex string must be exact
         assert!(s1.contains(&format!("{:016x}", u64::MAX - 5)), "{s1}");
         assert!(s1.contains("converged-identical"));
+    }
+
+    #[test]
+    fn serve_scenario_fault_free_baseline_is_clean() {
+        let spec = ServeScenarioSpec {
+            seed: 11,
+            paths: 2,
+            traffic: 10,
+            fault_batches: 3,
+            cooldown_ms: 200,
+        };
+        let rep = run_serve_scenario("unit-baseline", &spec, &ServeFaultPlan::none());
+        assert!(rep.is_pass(), "violations: {:?}", rep.violations);
+        assert_eq!(rep.submitted, 10);
+        assert_eq!(rep.ok, 10, "fault-free traffic all serves on its own path");
+        assert_eq!(rep.hung, 0);
+        assert_eq!(rep.per_path_trips, vec![0, 0]);
+        assert_eq!(rep.final_breaker, vec!["closed", "closed"]);
+        assert_eq!(rep.to_json().to_string(), rep.to_json().to_string());
+    }
+
+    #[test]
+    fn serve_scenario_panic_plan_trips_redirects_and_recovers() {
+        let spec = ServeScenarioSpec {
+            seed: 5,
+            paths: 2,
+            traffic: 16,
+            fault_batches: 3,
+            cooldown_ms: 300,
+        };
+        let plan = ServeFaultPlan::new(vec![ServeFault::PanicExec { path: 0, batches: 3 }]);
+        let rep = run_serve_scenario("unit-panic", &spec, &plan);
+        assert!(rep.is_pass(), "violations: {:?}", rep.violations);
+        assert_eq!(rep.hung, 0);
+        assert_eq!(rep.errored, 3, "each panicked batch resolves loudly");
+        assert!(rep.redirected > 0, "open breaker must redirect traffic");
+        assert_eq!(rep.per_path_trips, vec![1, 0]);
+        assert_eq!(rep.final_breaker, vec!["closed", "closed"]);
+        assert_eq!(rep.final_health, vec!["healthy", "healthy"]);
+        assert!(rep.unfired.is_empty());
+        assert_eq!(
+            rep.submitted,
+            3 + 16 + 4,
+            "fault batches + traffic + recovery probes"
+        );
     }
 }

@@ -205,6 +205,154 @@ impl FaultPlan {
     }
 }
 
+/// One injected serving-plane fault: a scripted misbehaviour of one
+/// path's executor, consumed one forward call at a time by
+/// [`crate::chaos::injector::ChaosExec`].
+///
+/// `batches` is the fault's budget: how many consecutive forward calls on
+/// that path misbehave before the executor heals. Scenario construction
+/// keeps `batches` equal to the breaker's `min_samples`, so the last
+/// faulted batch is exactly the one that trips the breaker — every
+/// planned fault fires before admission stops routing to the path, which
+/// is what keeps [`crate::chaos::oracle::ServeChaosReport`] deterministic.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeFault {
+    /// The executor panics mid-forward (exercises the supervisor:
+    /// catch_unwind, loud batch resolution, backoff restart).
+    PanicExec { path: usize, batches: usize },
+    /// The executor wedges for `wedge_ms` and then fails the batch — a
+    /// stuck forward call that a watchdog eventually kills (exercises the
+    /// breaker's error-rate trip with realistic slow failures).
+    WedgeBatch {
+        path: usize,
+        batches: usize,
+        wedge_ms: u64,
+    },
+    /// The executor still answers, but `delay_ms` late (exercises the
+    /// breaker's latency trip: a slow path is sick even when correct).
+    SlowExec {
+        path: usize,
+        batches: usize,
+        delay_ms: u64,
+    },
+}
+
+impl ServeFault {
+    /// Path whose executor this fault strikes.
+    pub fn path(&self) -> usize {
+        match *self {
+            ServeFault::PanicExec { path, .. }
+            | ServeFault::WedgeBatch { path, .. }
+            | ServeFault::SlowExec { path, .. } => path,
+        }
+    }
+
+    /// Forward calls this fault consumes before the executor heals.
+    pub fn batches(&self) -> usize {
+        match *self {
+            ServeFault::PanicExec { batches, .. }
+            | ServeFault::WedgeBatch { batches, .. }
+            | ServeFault::SlowExec { batches, .. } => batches,
+        }
+    }
+
+    /// Canonical one-line description (stable across runs — report keys).
+    pub fn describe(&self) -> String {
+        match self {
+            ServeFault::PanicExec { path, batches } => {
+                format!("path {path}: panic executor for {batches} batches")
+            }
+            ServeFault::WedgeBatch {
+                path,
+                batches,
+                wedge_ms,
+            } => format!("path {path}: wedge {batches} batches for {wedge_ms}ms"),
+            ServeFault::SlowExec {
+                path,
+                batches,
+                delay_ms,
+            } => format!("path {path}: slow executor for {batches} batches by {delay_ms}ms"),
+        }
+    }
+}
+
+/// A set of serving faults for one serve-chaos scenario. At most one
+/// fault per path: a second fault on the same path could never drain its
+/// budget (the first one trips the breaker and admission stops routing
+/// there), which would make the scenario's `unfired` list non-empty by
+/// construction.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeFaultPlan {
+    pub faults: Vec<ServeFault>,
+}
+
+impl ServeFaultPlan {
+    /// The fault-free plan (reference runs).
+    pub fn none() -> ServeFaultPlan {
+        ServeFaultPlan { faults: Vec::new() }
+    }
+
+    pub fn new(faults: Vec<ServeFault>) -> ServeFaultPlan {
+        let mut seen = Vec::new();
+        for f in &faults {
+            assert!(
+                !seen.contains(&f.path()),
+                "two serve faults on path {} — the second could never fire",
+                f.path()
+            );
+            seen.push(f.path());
+        }
+        ServeFaultPlan { faults }
+    }
+
+    /// Descriptions in plan order.
+    pub fn describe(&self) -> Vec<String> {
+        self.faults.iter().map(ServeFault::describe).collect()
+    }
+
+    /// Faulted path ids, ascending and deduplicated.
+    pub fn faulted_paths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.faults.iter().map(ServeFault::path).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Seeded random mix of serving faults over `paths`, up to `events`
+    /// of them. Always leaves at least one path fault-free so degraded
+    /// routing has a redirect target; every fault gets the same `batches`
+    /// budget (the scenario's breaker `min_samples`). Injected delays stay
+    /// >= 20ms, above the scenario breaker's latency trip threshold.
+    pub fn random(seed: u64, paths: usize, events: usize, batches: usize) -> ServeFaultPlan {
+        assert!(paths >= 2, "need a healthy path to redirect to");
+        let mut rng = Rng::new(seed).fork(0x5E2E);
+        let mut used = vec![false; paths];
+        let mut faults = Vec::new();
+        for _ in 0..events {
+            let free: Vec<usize> = (0..paths).filter(|&p| !used[p]).collect();
+            if free.len() <= 1 {
+                break; // keep one healthy fallback
+            }
+            let path = *rng.choose(&free);
+            used[path] = true;
+            faults.push(match rng.gen_range(3) {
+                0 => ServeFault::PanicExec { path, batches },
+                1 => ServeFault::WedgeBatch {
+                    path,
+                    batches,
+                    wedge_ms: 20 + rng.gen_range(21) as u64,
+                },
+                _ => ServeFault::SlowExec {
+                    path,
+                    batches,
+                    delay_ms: 20 + rng.gen_range(21) as u64,
+                },
+            });
+        }
+        ServeFaultPlan { faults }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,5 +405,45 @@ mod tests {
             mode: CorruptMode::FlipPayloadByte,
         }]);
         assert!(plan.expects_abort());
+    }
+
+    #[test]
+    fn random_serve_plans_deterministic_and_leave_a_fallback() {
+        let a = ServeFaultPlan::random(7, 3, 4, 3);
+        let b = ServeFaultPlan::random(7, 3, 4, 3);
+        assert_eq!(a, b);
+        assert!(!a.faults.is_empty());
+        for seed in 0..50 {
+            let plan = ServeFaultPlan::random(seed, 3, 4, 3);
+            let faulted = plan.faulted_paths();
+            assert!(faulted.len() < 3, "seed {seed} faulted every path");
+            assert_eq!(
+                faulted.len(),
+                plan.faults.len(),
+                "seed {seed} hit one path twice"
+            );
+            for f in &plan.faults {
+                assert!(f.path() < 3);
+                assert_eq!(f.batches(), 3);
+                match *f {
+                    ServeFault::WedgeBatch { wedge_ms, .. } => assert!(wedge_ms >= 20),
+                    ServeFault::SlowExec { delay_ms, .. } => assert!(delay_ms >= 20),
+                    ServeFault::PanicExec { .. } => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "two serve faults on path 1")]
+    fn serve_plan_rejects_double_faulted_path() {
+        ServeFaultPlan::new(vec![
+            ServeFault::PanicExec { path: 1, batches: 3 },
+            ServeFault::SlowExec {
+                path: 1,
+                batches: 3,
+                delay_ms: 25,
+            },
+        ]);
     }
 }

@@ -297,6 +297,129 @@ impl Default for CorpusConfig {
     }
 }
 
+/// Per-path circuit breaker ([`crate::serve::breaker`]): admission stops
+/// routing to a path whose recent batches keep failing (or run too slow)
+/// until half-open probe batches prove it healthy again.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BreakerConfig {
+    /// Master switch; a disabled breaker always admits and never trips.
+    pub enabled: bool,
+    /// Sliding window of recent batch outcomes consulted by trip checks.
+    pub window: usize,
+    /// Minimum outcomes in the window before the breaker may trip (avoids
+    /// tripping a cold path on its very first error).
+    pub min_samples: usize,
+    /// Trip when the window's failure fraction reaches this.
+    pub error_rate: f64,
+    /// Trip when the window's mean batch execution time reaches this, in
+    /// ms (0 = latency tripping disabled).
+    pub latency_ms: f64,
+    /// How long an open breaker blocks admission before probing, ms.
+    pub cooldown_ms: u64,
+    /// Successful probe batches required to close from half-open; any
+    /// failed probe re-opens immediately.
+    pub probes: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            enabled: true,
+            window: 32,
+            min_samples: 8,
+            error_rate: 0.5,
+            latency_ms: 0.0,
+            cooldown_ms: 1000,
+            probes: 2,
+        }
+    }
+}
+
+impl BreakerConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("window", Json::num(self.window as f64)),
+            ("min_samples", Json::num(self.min_samples as f64)),
+            ("error_rate", Json::num(self.error_rate)),
+            ("latency_ms", Json::num(self.latency_ms)),
+            ("cooldown_ms", Json::num(self.cooldown_ms as f64)),
+            ("probes", Json::num(self.probes as f64)),
+        ])
+    }
+
+    pub fn from_json(v: Option<&Json>) -> Self {
+        let d = BreakerConfig::default();
+        let v = match v {
+            Some(v) => v,
+            None => return d,
+        };
+        let get = |k: &str, dv: usize| v.get(k).and_then(|x| x.as_usize()).unwrap_or(dv);
+        let getf = |k: &str, dv: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(dv);
+        BreakerConfig {
+            enabled: v.get("enabled").and_then(|x| x.as_bool()).unwrap_or(d.enabled),
+            window: get("window", d.window).max(1),
+            min_samples: get("min_samples", d.min_samples).max(1),
+            error_rate: getf("error_rate", d.error_rate),
+            latency_ms: getf("latency_ms", d.latency_ms),
+            cooldown_ms: get("cooldown_ms", d.cooldown_ms as usize) as u64,
+            probes: get("probes", d.probes).max(1),
+        }
+    }
+}
+
+/// Path-worker supervision ([`crate::serve::supervisor`]): restart policy
+/// for a worker whose executor panicked.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SupervisorConfig {
+    /// First restart delay after a panic, ms (doubles per consecutive
+    /// panic).
+    pub backoff_ms: u64,
+    /// Exponential backoff cap, ms.
+    pub backoff_max_ms: u64,
+    /// Consecutive panics (no successful batch in between) before the
+    /// path is declared `Down` and its queue is drained with errors;
+    /// 0 = restart forever.
+    pub max_consecutive_panics: usize,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            backoff_ms: 10,
+            backoff_max_ms: 2000,
+            max_consecutive_panics: 0,
+        }
+    }
+}
+
+impl SupervisorConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("backoff_ms", Json::num(self.backoff_ms as f64)),
+            ("backoff_max_ms", Json::num(self.backoff_max_ms as f64)),
+            (
+                "max_consecutive_panics",
+                Json::num(self.max_consecutive_panics as f64),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: Option<&Json>) -> Self {
+        let d = SupervisorConfig::default();
+        let v = match v {
+            Some(v) => v,
+            None => return d,
+        };
+        let get = |k: &str, dv: usize| v.get(k).and_then(|x| x.as_usize()).unwrap_or(dv);
+        SupervisorConfig {
+            backoff_ms: get("backoff_ms", d.backoff_ms as usize) as u64,
+            backoff_max_ms: get("backoff_max_ms", d.backoff_max_ms as usize) as u64,
+            max_consecutive_panics: get("max_consecutive_panics", d.max_consecutive_panics),
+        }
+    }
+}
+
 /// Serving subsystem settings (paper §2.6 deployment: independent path
 /// servers behind a document router — see DESIGN.md, "serve").
 #[derive(Debug, Clone, PartialEq)]
@@ -319,6 +442,14 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Worker housekeeping tick when its queue is idle, ms.
     pub idle_ms: u64,
+    /// Enqueue deadline for a redirected (degraded-mode) request, ms: a
+    /// fallback queue that cannot take it within this window sheds the
+    /// request with a loud `ServeError::Shed` instead of parking.
+    pub shed_deadline_ms: u64,
+    /// Per-path circuit breaker consulted at admission.
+    pub breaker: BreakerConfig,
+    /// Path-worker restart policy.
+    pub supervisor: SupervisorConfig,
 }
 
 impl Default for ServeConfig {
@@ -331,6 +462,9 @@ impl Default for ServeConfig {
             admission_timeout_ms: 1000,
             workers: 4,
             idle_ms: 50,
+            shed_deadline_ms: 5,
+            breaker: BreakerConfig::default(),
+            supervisor: SupervisorConfig::default(),
         }
     }
 }
@@ -348,6 +482,9 @@ impl ServeConfig {
             ),
             ("workers", Json::num(self.workers as f64)),
             ("idle_ms", Json::num(self.idle_ms as f64)),
+            ("shed_deadline_ms", Json::num(self.shed_deadline_ms as f64)),
+            ("breaker", self.breaker.to_json()),
+            ("supervisor", self.supervisor.to_json()),
         ])
     }
 
@@ -366,6 +503,9 @@ impl ServeConfig {
                 as u64,
             workers: get("workers", d.workers).max(1),
             idle_ms: get("idle_ms", d.idle_ms as usize) as u64,
+            shed_deadline_ms: get("shed_deadline_ms", d.shed_deadline_ms as usize) as u64,
+            breaker: BreakerConfig::from_json(v.get("breaker")),
+            supervisor: SupervisorConfig::from_json(v.get("supervisor")),
         })
     }
 }
@@ -458,12 +598,32 @@ mod tests {
             admission_timeout_ms: 250,
             workers: 7,
             idle_ms: 9,
+            shed_deadline_ms: 3,
+            breaker: BreakerConfig {
+                enabled: false,
+                window: 16,
+                min_samples: 4,
+                error_rate: 0.25,
+                latency_ms: 40.0,
+                cooldown_ms: 500,
+                probes: 3,
+            },
+            supervisor: SupervisorConfig {
+                backoff_ms: 20,
+                backoff_max_ms: 640,
+                max_consecutive_panics: 5,
+            },
         };
         let s2 = ServeConfig::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(s, s2);
-        // missing fields fall back to defaults
+        // missing fields fall back to defaults, including the nested
+        // breaker/supervisor objects
         let d = ServeConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(d, ServeConfig::default());
+        let partial =
+            ServeConfig::from_json(&Json::parse(r#"{"breaker":{"window":64}}"#).unwrap()).unwrap();
+        assert_eq!(partial.breaker.window, 64);
+        assert_eq!(partial.breaker.probes, BreakerConfig::default().probes);
     }
 
     #[test]

@@ -42,7 +42,13 @@ impl Monitor {
                     let n = ctx.queue.reclaim_expired();
                     if n > 0 {
                         reclaims2.fetch_add(n as u64, Ordering::Relaxed);
-                        info!("monitor", "reclaimed {n} expired leases");
+                        let qs = ctx.queue.stats();
+                        info!(
+                            "monitor",
+                            "reclaimed {n} expired leases (lifetime: {} reclaimed, {} buried)",
+                            qs.reclaimed,
+                            qs.buried
+                        );
                     }
                     // (b) resurrect crashed workers
                     if ctx.shutting_down.load(Ordering::Relaxed) {

@@ -54,6 +54,8 @@ struct Inner {
     dead: Vec<Task>,
     completed: u64,
     requeues: u64,
+    reclaimed: u64,
+    buried: u64,
     closed: bool,
 }
 
@@ -72,6 +74,12 @@ pub struct QueueStats {
     pub completed: u64,
     pub requeues: u64,
     pub dead: usize,
+    /// Cumulative leases recovered from *expired* workers (preemption /
+    /// crash; explicit `fail()` is not a reclaim). Survives checkpoints.
+    pub reclaimed: u64,
+    /// Cumulative tasks moved to the terminal dead-letter list after
+    /// exhausting `max_attempts`. Survives checkpoints.
+    pub buried: u64,
 }
 
 impl TaskQueue {
@@ -190,6 +198,7 @@ impl TaskQueue {
     fn requeue_or_bury(g: &mut Inner, max_attempts: u64, f: InFlight) {
         if max_attempts > 0 && f.generation >= max_attempts {
             g.dead.push(f.task);
+            g.buried += 1;
         } else {
             g.pending.push_back(f.task);
             g.requeues += 1;
@@ -206,6 +215,7 @@ impl TaskQueue {
             .collect();
         for id in expired {
             let f = g.in_flight.remove(&id).unwrap();
+            g.reclaimed += 1;
             Self::requeue_or_bury(g, max_attempts, f);
         }
     }
@@ -214,9 +224,9 @@ impl TaskQueue {
     /// Returns the number of tasks moved (requeued or dead-lettered).
     pub fn reclaim_expired(&self) -> usize {
         let mut g = self.inner.lock().unwrap();
-        let before = g.requeues as usize + g.dead.len();
+        let before = g.reclaimed;
         Self::reclaim_locked(&mut g, self.max_attempts);
-        let n = g.requeues as usize + g.dead.len() - before;
+        let n = (g.reclaimed - before) as usize;
         if n > 0 {
             drop(g);
             self.cv.notify_all();
@@ -264,6 +274,8 @@ impl TaskQueue {
             completed: g.completed,
             requeues: g.requeues,
             dead: g.dead.len(),
+            reclaimed: g.reclaimed,
+            buried: g.buried,
         }
     }
 
@@ -320,6 +332,8 @@ impl TaskQueue {
             ("dead", Json::arr(g.dead.iter().map(encode))),
             ("completed", Json::num(g.completed as f64)),
             ("max_attempts", Json::num(self.max_attempts as f64)),
+            ("reclaimed", Json::num(g.reclaimed as f64)),
+            ("buried", Json::num(g.buried as f64)),
         ])
     }
 
@@ -380,6 +394,16 @@ impl TaskQueue {
             }
             q.inner.lock().unwrap().dead = dead;
         }
+        // cumulative fault counters survive the restart; checkpoints
+        // written before these counters existed restore them as 0
+        {
+            let mut g = q.inner.lock().unwrap();
+            g.reclaimed = state
+                .get("reclaimed")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0) as u64;
+            g.buried = state.get("buried").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+        }
         Ok(q)
     }
 }
@@ -432,6 +456,8 @@ mod tests {
         assert!(q.complete(l2));
         assert_eq!(q.stats().requeues, 1);
         assert_eq!(q.stats().completed, 1);
+        assert_eq!(q.stats().reclaimed, 1, "expiry recovery counts as a reclaim");
+        assert_eq!(q.stats().buried, 0);
     }
 
     #[test]
@@ -443,6 +469,9 @@ mod tests {
         let (l2, t) = q.lease("w1", Duration::from_millis(10)).unwrap();
         assert_eq!(t.id(), 7);
         assert!(q.complete(l2));
+        // a graceful fail() is NOT a reclaim — the worker spoke up itself
+        assert_eq!(q.stats().reclaimed, 0);
+        assert_eq!(q.stats().requeues, 1);
     }
 
     #[test]
@@ -508,6 +537,8 @@ mod tests {
         assert_eq!(stats.completed, 0);
         // attempt 1 requeued, attempt 2 buried (not counted as a requeue)
         assert_eq!(stats.requeues, 1);
+        assert_eq!(stats.buried, 1);
+        assert_eq!(stats.reclaimed, 0, "explicit fail() is not a reclaim");
         assert_eq!(q.dead_tasks()[0].id(), 1);
         // terminal: never handed out again
         assert!(q.lease("w1", Duration::from_millis(5)).is_none());
@@ -523,6 +554,9 @@ mod tests {
         assert!(q.is_idle());
         assert_eq!(q.stats().dead, 1);
         assert_eq!(q.stats().requeues, 0);
+        // the expiry was both a reclaim and (attempts exhausted) a burial
+        assert_eq!(q.stats().reclaimed, 1);
+        assert_eq!(q.stats().buried, 1);
         // zombie completion of a buried task is rejected
         assert!(!q.complete(l));
         assert_eq!(q.stats().completed, 0);
@@ -567,6 +601,27 @@ mod tests {
         assert!(q2.lease("w1", Duration::from_millis(5)).is_none());
         assert_eq!(q2.stats().dead, 1);
         assert_eq!(q2.dead_tasks()[0].id(), 1);
+    }
+
+    #[test]
+    fn restore_preserves_cumulative_fault_counters() {
+        let q = TaskQueue::with_max_attempts(Duration::from_millis(20), 1);
+        q.push(train_task(1));
+        let _ = q.lease("w0", Duration::from_millis(10)).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.reclaim_expired(), 1); // reclaim #1, and burial #1
+        let q2 = TaskQueue::restore(&q.checkpoint_state(), Duration::from_millis(20)).unwrap();
+        let s = q2.stats();
+        assert_eq!(s.reclaimed, 1, "reclaim history survives the restart");
+        assert_eq!(s.buried, 1, "burial history survives the restart");
+        // a checkpoint written before the counters existed restores to 0
+        let old = Json::parse(
+            r#"{"pending":[],"in_flight":[],"dead":[],"completed":0,"max_attempts":0}"#,
+        )
+        .unwrap();
+        let q3 = TaskQueue::restore(&old, Duration::from_secs(5)).unwrap();
+        assert_eq!(q3.stats().reclaimed, 0);
+        assert_eq!(q3.stats().buried, 0);
     }
 
     #[test]

@@ -31,14 +31,19 @@
 //! * [`chaos`] — fault-injection harness: seeded fault plans, an injector
 //!   threaded through worker/publication hooks, a DPC2 corruptor, an
 //!   engine-free coordinator simulation, and convergence-equivalence
-//!   oracles demanding bit-identical recovery or loud abort.
+//!   oracles demanding bit-identical recovery or loud abort. Also covers
+//!   the serving plane: executor panic/wedge/slow-batch fault plans with
+//!   no-hung-ticket oracles.
 //! * [`train`] — end-to-end pipelines: dense baseline, DiLoCo, flat MoE,
 //!   DiPaCo, and the fully-synchronous ablation (§4.5).
 //! * [`eval`] — validation perplexity (prefix-masked), frequent re-routing,
 //!   early stopping.
 //! * [`serve`] — test-time path serving (paper §2.6): per-document router
 //!   admission, bounded per-path queues, deadline micro-batching, one
-//!   path-server worker per path owning only its own theta.
+//!   path-server worker per path owning only its own theta. Self-healing:
+//!   supervised workers (panic capture + backoff restarts), per-path
+//!   circuit breakers, and degraded-mode routing to the router's
+//!   runner-up path with deadline-based load shedding.
 //! * [`benchkit`] / [`testkit`] — criterion/proptest stand-ins.
 
 pub mod util {
@@ -110,9 +115,11 @@ pub mod metrics;
 
 pub mod serve {
     pub mod batcher;
+    pub mod breaker;
     pub mod request;
     pub mod server;
     pub mod stats;
+    pub mod supervisor;
 }
 
 pub mod benchkit;

@@ -277,7 +277,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
                     let mut nll = 0.0f64;
                     let mut tok = 0usize;
                     for t in tickets {
-                        if let Some(r) = t.wait() {
+                        if let Ok(r) = t.wait() {
                             nll += r.nll;
                             tok += r.tokens_scored;
                         }

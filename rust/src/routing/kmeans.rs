@@ -94,6 +94,14 @@ impl KMeans {
             .map(|x| nearest(&self.centroids, x).1 as f64)
             .sum()
     }
+
+    /// Per-centroid affinity scores, higher = better (negated squared
+    /// distance). `argmax(scores) == assign` including tie-breaking
+    /// (first index wins both ways). Degraded-mode routing uses these to
+    /// find the runner-up path when the best path's breaker is open.
+    pub fn scores(&self, x: &[f32]) -> Vec<f64> {
+        self.centroids.iter().map(|c| -(dist2(c, x) as f64)).collect()
+    }
 }
 
 fn dist2(a: &[f32], b: &[f32]) -> f32 {
@@ -172,6 +180,20 @@ impl ProductKMeans {
         }
         scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
         scored.into_iter().take(n).map(|(i, _)| i).collect()
+    }
+
+    /// Per-pair affinity scores indexed `i * k2 + j`, higher = better
+    /// (negated sum of half squared distances); `argmax == assign`.
+    pub fn scores(&self, x: &[f32]) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.k());
+        for ci in &self.left.centroids {
+            let di = dist2(ci, &x[..self.split]);
+            for cj in &self.right.centroids {
+                let dj = dist2(cj, &x[self.split..]);
+                out.push(-((di + dj) as f64));
+            }
+        }
+        out
     }
 }
 

@@ -46,6 +46,28 @@ impl Router {
             Router::Discriminative(_) => "discriminative",
         }
     }
+
+    /// Raw per-path affinity scores, higher = better: negated squared
+    /// distance for the generative routers, logits for the discriminative
+    /// one. `scores(z)[assign(z)]` is the maximum (first index wins ties,
+    /// matching `assign`).
+    pub fn scores(&self, z: &[f32]) -> Vec<f64> {
+        match self {
+            Router::KMeans(m) => m.scores(z),
+            Router::ProductKMeans(m) => m.scores(z),
+            Router::Discriminative(m) => m.logits(z),
+        }
+    }
+
+    /// Every path ranked best-first with its score. `ranked(z)[0].0 ==
+    /// assign(z)`; the tail is the degraded-mode fallback order (the
+    /// "runner-up" path is `ranked(z)[1].0`). The sort is stable, so ties
+    /// break toward lower path ids — deterministic across runs.
+    pub fn ranked(&self, z: &[f32]) -> Vec<(usize, f64)> {
+        let mut v: Vec<(usize, f64)> = self.scores(z).into_iter().enumerate().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
 }
 
 /// Fit the generative router on train-split features (paper §2.4.1).
@@ -435,6 +457,54 @@ mod tests {
         let docs: Vec<usize> = (0..50).collect();
         let s = shard_by_router(&router, &docs, &zs, 8, 1, 0.1, 7);
         assert!(s.shards.iter().all(|sh| !sh.docs.is_empty()));
+    }
+
+    #[test]
+    fn ranked_agrees_with_assign_and_top_n() {
+        let (zs, doms) = fake_features(80, 4, 11);
+        let mut rng = Rng::new(12);
+        let scores: Vec<Vec<f64>> = doms
+            .iter()
+            .map(|&d| (0..4).map(|p| if p == d { -10.0 } else { -20.0 }).collect())
+            .collect();
+        let routers = vec![
+            fit_generative(&zs, 4, None, &RoutingConfig::default(), &mut rng),
+            fit_generative(
+                &zs,
+                4,
+                Some((2, 2)),
+                &RoutingConfig {
+                    product_kmeans: true,
+                    ..Default::default()
+                },
+                &mut rng,
+            ),
+            fit_discriminative(&zs, &scores, 4, &RoutingConfig::default()),
+        ];
+        for router in &routers {
+            for z in zs.iter().take(25) {
+                let ranked = router.ranked(z);
+                assert_eq!(ranked.len(), 4, "{}", router.kind());
+                // best-first, consistent with assign and assign_top_n
+                assert_eq!(ranked[0].0, router.assign(z), "{}", router.kind());
+                let order: Vec<usize> = ranked.iter().map(|(p, _)| *p).collect();
+                assert_eq!(
+                    &order[..2],
+                    router.assign_top_n(z, 2).as_slice(),
+                    "{}",
+                    router.kind()
+                );
+                assert!(
+                    ranked.windows(2).all(|w| w[0].1 >= w[1].1),
+                    "{} scores not descending: {ranked:?}",
+                    router.kind()
+                );
+                // every path appears exactly once
+                let mut seen = order.clone();
+                seen.sort_unstable();
+                assert_eq!(seen, vec![0, 1, 2, 3]);
+            }
+        }
     }
 
     #[test]

@@ -231,6 +231,66 @@ mod tests {
     }
 
     #[test]
+    fn item_arriving_mid_wait_joins_the_open_batch() {
+        // Deadline edge: the batch is already open (first item taken) when
+        // the second item lands — it must join THIS batch and flush on
+        // size, not wait out the deadline or start a new batch.
+        let q = Arc::new(BoundedQueue::new(8));
+        q.try_push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.try_push(2).unwrap();
+        });
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(2, Duration::from_secs(5), Duration::from_millis(100))
+            .unwrap();
+        assert_eq!(b, vec![1, 2], "late arrival joins the open batch");
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "size flush, not deadline flush"
+        );
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn zero_wait_deadline_flushes_whatever_is_in_hand() {
+        // max_wait == 0 (the chaos/latency-sensitive configuration): the
+        // flush deadline is already past when the batch opens, so the pop
+        // returns what is queued right now and never parks.
+        let q = BoundedQueue::new(8);
+        q.try_push(7).unwrap();
+        q.try_push(8).unwrap();
+        let t0 = Instant::now();
+        let b = q.pop_batch(4, Duration::ZERO, Duration::from_millis(50)).unwrap();
+        assert_eq!(b, vec![7, 8]);
+        assert!(t0.elapsed() < Duration::from_millis(40), "zero wait never parks");
+    }
+
+    #[test]
+    fn idle_wakeup_fires_at_deadline_and_queue_stays_usable() {
+        // Zero-item deadline wakeup: an empty queue returns Some(vec![])
+        // at the idle deadline (the worker's housekeeping tick), and the
+        // queue keeps serving normally afterwards.
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let t0 = Instant::now();
+        let b = q
+            .pop_batch(4, Duration::from_secs(5), Duration::from_millis(30))
+            .unwrap();
+        assert!(b.is_empty(), "idle tick is an empty batch");
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "idle tick honors the idle deadline"
+        );
+        q.try_push(9).unwrap();
+        let b2 = q
+            .pop_batch(4, Duration::ZERO, Duration::from_millis(50))
+            .unwrap();
+        assert_eq!(b2, vec![9], "queue still drains after an idle tick");
+    }
+
+    #[test]
     fn idle_tick_then_closed() {
         let q: BoundedQueue<u32> = BoundedQueue::new(4);
         let b = q

@@ -1,0 +1,376 @@
+//! Per-path circuit breaker, consulted by the admission front-end.
+//!
+//! Classic three-state machine over a sliding window of recent batch
+//! outcomes:
+//!
+//! * **Closed** — traffic flows; every batch outcome (ok/failed, execution
+//!   time) lands in the window. When the window holds at least
+//!   `min_samples` outcomes and either the failure fraction reaches
+//!   `error_rate` or the mean batch execution time reaches `latency_ms`
+//!   (if enabled), the breaker trips to Open.
+//! * **Open** — admission refuses the path outright (degraded-mode routing
+//!   in [`super::server`] then redirects to the router's runner-up). After
+//!   `cooldown_ms` the next admission attempt transitions to HalfOpen.
+//! * **HalfOpen** — up to `probes` requests are admitted as probe batches.
+//!   Any probe failure re-opens immediately (fresh cooldown); `probes`
+//!   successes close the breaker and clear the window.
+//!
+//! The breaker records *batch* outcomes, not per-request outcomes: one
+//! wedged or panicking micro-batch is one failure sample regardless of
+//! fill, which keeps trip behaviour independent of batching luck.
+//!
+//! Everything lives behind one short Mutex; admission does a single lock
+//! per submit on the healthy path.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::BreakerConfig;
+
+/// Breaker position, exposed per path in `ServeReport`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    /// When the breaker last tripped (meaningful while Open).
+    opened_at: Instant,
+    /// Sliding window of (ok, batch execution ms), newest last.
+    outcomes: VecDeque<(bool, f64)>,
+    /// Probe admissions handed out since entering HalfOpen.
+    probes_sent: usize,
+    /// Successful probe outcomes since entering HalfOpen.
+    probe_successes: usize,
+    /// Closed→Open transitions over the breaker's lifetime.
+    trips: u64,
+}
+
+/// One breaker guards one path. Shared (Arc) between the admission
+/// front-end (admit) and that path's worker (record_*).
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    inner: Mutex<Inner>,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        CircuitBreaker {
+            cfg,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                opened_at: Instant::now(),
+                outcomes: VecDeque::new(),
+                probes_sent: 0,
+                probe_successes: 0,
+                trips: 0,
+            }),
+        }
+    }
+
+    /// May a new request be routed to this path right now? Open→HalfOpen
+    /// promotion happens here (first admission attempt after the
+    /// cooldown becomes the first probe).
+    pub fn admit(&self) -> bool {
+        if !self.cfg.enabled {
+            return true;
+        }
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if g.opened_at.elapsed() >= Duration::from_millis(self.cfg.cooldown_ms) {
+                    g.state = BreakerState::HalfOpen;
+                    g.probes_sent = 1;
+                    g.probe_successes = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                if g.probes_sent < self.cfg.probes {
+                    g.probes_sent += 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A batch on this path completed successfully in `exec_ms`.
+    pub fn record_success(&self, exec_ms: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            BreakerState::HalfOpen => {
+                g.probe_successes += 1;
+                if g.probe_successes >= self.cfg.probes {
+                    g.state = BreakerState::Closed;
+                    g.outcomes.clear();
+                }
+            }
+            BreakerState::Closed => {
+                self.push_outcome(&mut g, true, exec_ms);
+                self.evaluate(&mut g);
+            }
+            // Stale completion from a batch admitted before the trip.
+            BreakerState::Open => {}
+        }
+    }
+
+    /// A batch on this path failed (executor error or panic) after
+    /// `exec_ms`.
+    pub fn record_failure(&self, exec_ms: f64) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        match g.state {
+            // Any failed probe re-opens with a fresh cooldown.
+            BreakerState::HalfOpen => self.trip(&mut g),
+            BreakerState::Closed => {
+                self.push_outcome(&mut g, false, exec_ms);
+                self.evaluate(&mut g);
+            }
+            BreakerState::Open => {}
+        }
+    }
+
+    /// An admitted probe never reached the worker (its enqueue was
+    /// refused); treat it as a failed probe so the breaker cannot wedge in
+    /// HalfOpen with all probe slots spent and no outcomes coming.
+    pub fn probe_aborted(&self) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.state == BreakerState::HalfOpen {
+            self.trip(&mut g);
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        if !self.cfg.enabled {
+            return BreakerState::Closed;
+        }
+        self.inner.lock().unwrap().state
+    }
+
+    /// Lifetime count of Closed/HalfOpen→Open transitions.
+    pub fn trips(&self) -> u64 {
+        self.inner.lock().unwrap().trips
+    }
+
+    fn push_outcome(&self, g: &mut Inner, ok: bool, exec_ms: f64) {
+        g.outcomes.push_back((ok, exec_ms));
+        while g.outcomes.len() > self.cfg.window {
+            g.outcomes.pop_front();
+        }
+    }
+
+    fn evaluate(&self, g: &mut Inner) {
+        if g.outcomes.len() < self.cfg.min_samples {
+            return;
+        }
+        let n = g.outcomes.len() as f64;
+        let failures = g.outcomes.iter().filter(|(ok, _)| !ok).count() as f64;
+        if failures / n >= self.cfg.error_rate {
+            self.trip(g);
+            return;
+        }
+        if self.cfg.latency_ms > 0.0 {
+            let mean_ms = g.outcomes.iter().map(|(_, ms)| ms).sum::<f64>() / n;
+            if mean_ms >= self.cfg.latency_ms {
+                self.trip(g);
+            }
+        }
+    }
+
+    fn trip(&self, g: &mut Inner) {
+        g.state = BreakerState::Open;
+        g.opened_at = Instant::now();
+        g.outcomes.clear();
+        g.probes_sent = 0;
+        g.probe_successes = 0;
+        g.trips += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BreakerConfig {
+        BreakerConfig {
+            enabled: true,
+            window: 8,
+            min_samples: 4,
+            error_rate: 0.5,
+            latency_ms: 0.0,
+            cooldown_ms: 20,
+            probes: 2,
+        }
+    }
+
+    #[test]
+    fn stays_closed_under_min_samples() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..3 {
+            b.record_failure(1.0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn trips_on_error_rate_and_blocks_admission() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..4 {
+            b.record_failure(1.0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(), "open breaker must refuse before cooldown");
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn successes_keep_error_rate_below_threshold() {
+        let b = CircuitBreaker::new(fast_cfg());
+        // 8-slot window: 4 ok then 3 failed peaks at 3/7 ≈ 43% — closed;
+        // the next failure makes 4/8 = 50% and trips.
+        for _ in 0..4 {
+            b.record_success(1.0);
+        }
+        for _ in 0..3 {
+            b.record_failure(1.0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure(1.0); // 4/8 = 50%
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn half_open_probe_cycle_closes_on_success() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..4 {
+            b.record_failure(1.0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(25));
+        // cooldown elapsed: exactly `probes` admissions allowed
+        assert!(b.admit());
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.admit());
+        assert!(!b.admit(), "probe budget is exactly cfg.probes");
+        b.record_success(1.0);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_success(1.0);
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit());
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..4 {
+            b.record_failure(1.0);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit());
+        b.record_failure(1.0);
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.admit(), "fresh cooldown after failed probe");
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn latency_trip() {
+        let b = CircuitBreaker::new(BreakerConfig {
+            latency_ms: 50.0,
+            ..fast_cfg()
+        });
+        // all successful, but slow: mean 80ms >= 50ms threshold
+        for _ in 0..4 {
+            b.record_success(80.0);
+        }
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn latency_trip_disabled_at_zero() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..20 {
+            b.record_success(10_000.0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn disabled_breaker_never_trips() {
+        let b = CircuitBreaker::new(BreakerConfig {
+            enabled: false,
+            ..fast_cfg()
+        });
+        for _ in 0..100 {
+            b.record_failure(1.0);
+            assert!(b.admit());
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 0);
+    }
+
+    #[test]
+    fn aborted_probe_reopens_instead_of_wedging() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..4 {
+            b.record_failure(1.0);
+        }
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit()); // half-open probe admitted...
+        b.probe_aborted(); // ...but its enqueue was refused
+        assert_eq!(b.state(), BreakerState::Open);
+        // after another cooldown the probe cycle restarts normally
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit());
+        b.record_success(1.0);
+        b.admit();
+        b.record_success(1.0);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn old_failures_age_out_of_window() {
+        let b = CircuitBreaker::new(fast_cfg());
+        for _ in 0..3 {
+            b.record_failure(1.0);
+        }
+        // 8 successes push all 3 failures out of the 8-slot window
+        for _ in 0..8 {
+            b.record_success(1.0);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 0);
+    }
+}

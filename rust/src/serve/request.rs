@@ -5,6 +5,12 @@
 //! admission router chose for it. Responses travel back to the submitting
 //! client over a per-request mpsc channel wrapped in a [`Ticket`], so the
 //! path-server workers never block on slow clients.
+//!
+//! Every admitted ticket resolves LOUDLY: with a [`ServeResponse`] on
+//! success, or a [`ServeError`] when the executor failed/panicked or the
+//! path went down. A bare channel disconnect (server torn down without
+//! draining) surfaces as `Err(ServeError::Closed)` — a waiter can never
+//! distinguish "lost" from "slow" by hanging.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
@@ -15,16 +21,25 @@ pub struct ServeRequest {
     /// Token window, exactly `seq` tokens (the admission front-end
     /// validates the length; the batcher only pads whole rows).
     pub tokens: Vec<i32>,
-    /// Path chosen for THIS document by `router::assign` at admission —
-    /// never inherited from a batch neighbour.
+    /// Path chosen for THIS document at admission — the router's choice,
+    /// or the runner-up when degraded-mode routing redirected it. Never
+    /// inherited from a batch neighbour.
     pub path: usize,
     /// Admission timestamp; end-to-end latency is measured from here.
     pub accepted_at: Instant,
-    pub(crate) tx: Sender<ServeResponse>,
+    pub(crate) tx: Sender<Result<ServeResponse, ServeError>>,
+}
+
+impl ServeRequest {
+    /// Resolve this ticket with an error (executor failure, path down).
+    /// A gone client is not a server error; the send result is dropped.
+    pub(crate) fn fail(self, err: ServeError) {
+        let _ = self.tx.send(Err(err));
+    }
 }
 
 /// Scoring result for one request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeResponse {
     pub id: u64,
     /// Path that actually executed the document.
@@ -42,20 +57,23 @@ pub struct ServeResponse {
 /// Client-side handle for one submitted request.
 pub struct Ticket {
     pub id: u64,
-    /// Path the request was routed to (known at admission).
+    /// Path the request was routed to (known at admission; equals the
+    /// responding path).
     pub path: usize,
-    rx: Receiver<ServeResponse>,
+    rx: Receiver<Result<ServeResponse, ServeError>>,
 }
 
 impl Ticket {
-    /// Block until the response arrives. Returns `None` if the server was
-    /// shut down (or its worker failed) before this request was scored.
-    pub fn wait(self) -> Option<ServeResponse> {
-        self.rx.recv().ok()
+    /// Block until the request resolves. Every admitted request resolves:
+    /// `Ok` with its score, or `Err` with the loud reason it was not
+    /// scored (`ExecFailed`, `WorkerDown`, or `Closed` if the server was
+    /// torn down without draining).
+    pub fn wait(self) -> Result<ServeResponse, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::Closed))
     }
 
-    /// Bounded wait.
-    pub fn wait_timeout(&self, d: Duration) -> Option<ServeResponse> {
+    /// Bounded wait; `None` means the request has not resolved yet.
+    pub fn wait_timeout(&self, d: Duration) -> Option<Result<ServeResponse, ServeError>> {
         self.rx.recv_timeout(d).ok()
     }
 }
@@ -75,7 +93,8 @@ pub fn admit(id: u64, path: usize, tokens: Vec<i32>) -> (ServeRequest, Ticket) {
     )
 }
 
-/// Why admission refused a request.
+/// Why admission refused a request, or why an admitted request was not
+/// scored.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
     /// The assigned path's queue is full (reject-on-full policy), or did
@@ -88,6 +107,18 @@ pub enum ServeError {
     /// Pre-routed path id with no path server behind it (router and
     /// executor fleet disagree on the path space).
     UnknownPath { path: usize, paths: usize },
+    /// The path's circuit breaker is open and no fallback path could take
+    /// the request (`path` is the router's primary choice).
+    CircuitOpen { path: usize },
+    /// The executor failed or panicked on the batch carrying this
+    /// request; the supervisor resolved every affected ticket with this.
+    ExecFailed { path: usize },
+    /// The path's worker exhausted its restart budget; its queue was
+    /// drained with this error and admission stopped routing to it.
+    WorkerDown { path: usize },
+    /// Degraded-mode redirect could not enqueue on the fallback path
+    /// within the shed deadline (fallback saturated): load was shed.
+    Shed { path: usize },
 }
 
 impl std::fmt::Display for ServeError {
@@ -100,6 +131,18 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::UnknownPath { path, paths } => {
                 write!(f, "path {path} has no server (serving {paths} paths)")
+            }
+            ServeError::CircuitOpen { path } => {
+                write!(f, "path {path} circuit open and no fallback available")
+            }
+            ServeError::ExecFailed { path } => {
+                write!(f, "path {path} executor failed on this batch")
+            }
+            ServeError::WorkerDown { path } => {
+                write!(f, "path {path} worker down (restart budget exhausted)")
+            }
+            ServeError::Shed { path } => {
+                write!(f, "redirected load shed: fallback path {path} saturated")
             }
         }
     }
@@ -117,14 +160,14 @@ mod tests {
         assert_eq!(ticket.id, 7);
         assert_eq!(ticket.path, 2);
         req.tx
-            .send(ServeResponse {
+            .send(Ok(ServeResponse {
                 id: req.id,
                 path: req.path,
                 nll: 1.5,
                 tokens_scored: 3,
                 latency_ms: 0.1,
                 batch_fill: 1,
-            })
+            }))
             .unwrap();
         let resp = ticket.wait().unwrap();
         assert_eq!(resp.id, 7);
@@ -133,10 +176,28 @@ mod tests {
     }
 
     #[test]
-    fn dropped_request_yields_none() {
+    fn dropped_request_resolves_closed_not_hung() {
         let (req, ticket) = admit(1, 0, vec![]);
-        drop(req); // worker died / server shut down before scoring
-        assert!(ticket.wait().is_none());
+        drop(req); // server torn down before scoring
+        assert_eq!(ticket.wait(), Err(ServeError::Closed));
+    }
+
+    #[test]
+    fn failed_request_carries_its_error() {
+        let (req, ticket) = admit(2, 3, vec![]);
+        req.fail(ServeError::ExecFailed { path: 3 });
+        assert_eq!(ticket.wait(), Err(ServeError::ExecFailed { path: 3 }));
+    }
+
+    #[test]
+    fn wait_timeout_none_means_pending() {
+        let (req, ticket) = admit(4, 0, vec![]);
+        assert!(ticket.wait_timeout(Duration::from_millis(5)).is_none());
+        req.fail(ServeError::WorkerDown { path: 0 });
+        assert_eq!(
+            ticket.wait_timeout(Duration::from_millis(100)),
+            Some(Err(ServeError::WorkerDown { path: 0 }))
+        );
     }
 
     #[test]
@@ -148,6 +209,22 @@ mod tests {
         assert_eq!(
             ServeError::BadRequest { expect: 8, got: 4 }.to_string(),
             "token window length 4 != compiled seq 8"
+        );
+        assert_eq!(
+            ServeError::CircuitOpen { path: 1 }.to_string(),
+            "path 1 circuit open and no fallback available"
+        );
+        assert_eq!(
+            ServeError::ExecFailed { path: 2 }.to_string(),
+            "path 2 executor failed on this batch"
+        );
+        assert_eq!(
+            ServeError::WorkerDown { path: 5 }.to_string(),
+            "path 5 worker down (restart budget exhausted)"
+        );
+        assert_eq!(
+            ServeError::Shed { path: 4 }.to_string(),
+            "redirected load shed: fallback path 4 saturated"
         );
     }
 }

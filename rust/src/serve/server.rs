@@ -12,6 +12,20 @@
 //! over its [`super::request::Ticket`]. Telemetry flows into a shared
 //! [`super::stats::ServeStats`].
 //!
+//! Self-healing plane (the serving counterpart of the coordinator's
+//! chaos-hardened monitor):
+//!
+//! * every worker runs under [`super::supervisor`] — executor panics are
+//!   caught, their batches resolve loudly, and the worker restarts with
+//!   capped exponential backoff (or goes `Down` past its budget);
+//! * admission consults a per-path [`super::breaker::CircuitBreaker`] —
+//!   error bursts and latency spikes stop traffic to a sick path;
+//! * degraded-mode routing: when the assigned path is refused (breaker
+//!   open or worker down), [`Server::submit`] walks the router's ranked
+//!   fallbacks ([`Router::ranked`]) and redirects to the best admittable
+//!   runner-up, shedding loudly when no fallback can take the request
+//!   within the shed deadline.
+//!
 //! The executor is a trait so tests and benches can serve synthetic
 //! backends; production uses [`EnginePathExecutor`] over the PJRT
 //! [`Engine`] with thetas from a trained run (`TrainedPaths`).
@@ -20,16 +34,17 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::config::ServeConfig;
 use crate::routing::router::Router;
 use crate::runtime::engine::Engine;
-use crate::serve::batcher::{pad_batch, BoundedQueue, PushError};
-use crate::serve::request::{admit, ServeError, ServeRequest, ServeResponse, Ticket};
-use crate::serve::stats::{ServeReport, ServeStats};
+use crate::serve::batcher::{BoundedQueue, PushError};
+use crate::serve::breaker::CircuitBreaker;
+use crate::serve::request::{admit, ServeError, ServeRequest, Ticket};
+use crate::serve::stats::{PathHealth, ServeReport, ServeStats};
+use crate::serve::supervisor::run_supervised;
 use crate::util::threadpool::ThreadPool;
-use crate::warn_;
 
 /// One path's compute backend. Implementations own their path's
 /// parameters; the server never materializes the mixture.
@@ -98,20 +113,23 @@ pub fn engine_executors(
         .collect()
 }
 
-/// The serving subsystem: admission front-end + per-path workers.
+/// The serving subsystem: admission front-end + supervised per-path
+/// workers behind per-path circuit breakers.
 pub struct Server {
     router: Router,
     queues: Vec<Arc<BoundedQueue<ServeRequest>>>,
+    breakers: Vec<Arc<CircuitBreaker>>,
     stats: Arc<ServeStats>,
     seq: usize,
     reject_on_full: bool,
     admission_timeout: Duration,
+    shed_deadline: Duration,
     next_id: AtomicU64,
     pool: Option<ThreadPool>,
 }
 
 impl Server {
-    /// Spawn one dedicated worker per executor (executor index == path
+    /// Spawn one supervised worker per executor (executor index == path
     /// id) and start accepting traffic.
     pub fn start<E: PathExecutor>(cfg: &ServeConfig, router: Router, executors: Vec<E>) -> Server {
         assert!(!executors.is_empty(), "need at least one path executor");
@@ -120,12 +138,17 @@ impl Server {
         let queues: Vec<Arc<BoundedQueue<ServeRequest>>> = (0..paths)
             .map(|_| Arc::new(BoundedQueue::new(cfg.queue_cap.max(1))))
             .collect();
+        let breakers: Vec<Arc<CircuitBreaker>> = (0..paths)
+            .map(|_| Arc::new(CircuitBreaker::new(cfg.breaker.clone())))
+            .collect();
         let pool = ThreadPool::new(paths);
         let seq = executors[0].seq();
-        for (path, mut exec) in executors.into_iter().enumerate() {
+        for (path, exec) in executors.into_iter().enumerate() {
             assert_eq!(exec.seq(), seq, "executors disagree on seq length");
             let queue = Arc::clone(&queues[path]);
             let stats = Arc::clone(&stats);
+            let breaker = Arc::clone(&breakers[path]);
+            let sup = cfg.supervisor.clone();
             // Flush size is capped by the compiled batch shape: a larger
             // micro-batch cannot fit one forward call.
             let max_batch = if cfg.max_batch == 0 {
@@ -136,16 +159,20 @@ impl Server {
             let max_wait = Duration::from_millis(cfg.max_wait_ms);
             let idle = Duration::from_millis(cfg.idle_ms.max(1));
             pool.execute(move || {
-                path_worker(path, &mut exec, &queue, &stats, max_batch, max_wait, idle)
+                run_supervised(
+                    path, exec, queue, stats, breaker, sup, max_batch, max_wait, idle,
+                )
             });
         }
         Server {
             router,
             queues,
+            breakers,
             stats,
             seq,
             reject_on_full: cfg.reject_on_full,
             admission_timeout: Duration::from_millis(cfg.admission_timeout_ms),
+            shed_deadline: Duration::from_millis(cfg.shed_deadline_ms),
             next_id: AtomicU64::new(0),
             pool: Some(pool),
         }
@@ -158,12 +185,47 @@ impl Server {
     /// Admission: route ONE document by its own features, then enqueue it
     /// on its path's queue. This is the per-document replacement for the
     /// old demo's batch-major `routed[batch_start * batch]` assignment.
+    ///
+    /// Degraded mode: when the assigned path is refused (breaker open /
+    /// worker down), the request redirects to the router's best
+    /// admittable runner-up — DiPaCo paths are trained on overlapping
+    /// shards, so the runner-up is the next-best model for the document,
+    /// not an arbitrary peer. A redirect that cannot enqueue within the
+    /// shed deadline is shed loudly; if every path refuses, admission
+    /// fails with `CircuitOpen` against the primary.
     pub fn submit(&self, z: &[f32], tokens: Vec<i32>) -> Result<Ticket, ServeError> {
-        let path = self.router.assign(z);
-        self.submit_to(path, tokens)
+        if tokens.len() != self.seq {
+            return Err(ServeError::BadRequest {
+                expect: self.seq,
+                got: tokens.len(),
+            });
+        }
+        let primary = self.router.assign(z);
+        // Healthy fast path: one health load + one breaker check on top of
+        // the pre-breaker admission cost (no ranked-scores sort).
+        if self.admittable(primary) {
+            return self.enqueue(primary, tokens);
+        }
+        for (path, _) in self.router.ranked(z) {
+            if path == primary || !self.admittable(path) {
+                continue;
+            }
+            self.stats.record_redirect(primary, path);
+            return match self.enqueue_by_deadline(path, tokens) {
+                Err(ServeError::Overloaded { .. }) => {
+                    self.stats.record_shed(primary);
+                    Err(ServeError::Shed { path })
+                }
+                other => other,
+            };
+        }
+        Err(ServeError::CircuitOpen { path: primary })
     }
 
     /// Enqueue on an explicit path (pre-routed clients, tests, benches).
+    /// Consults the path's health and breaker but never redirects: the
+    /// caller chose the path, so refusal is loud instead of silent
+    /// re-routing.
     pub fn submit_to(&self, path: usize, tokens: Vec<i32>) -> Result<Ticket, ServeError> {
         if tokens.len() != self.seq {
             return Err(ServeError::BadRequest {
@@ -177,6 +239,23 @@ impl Server {
                 paths: self.queues.len(),
             });
         }
+        if self.stats.health(path) == PathHealth::Down {
+            return Err(ServeError::WorkerDown { path });
+        }
+        if !self.breakers[path].admit() {
+            return Err(ServeError::CircuitOpen { path });
+        }
+        self.enqueue(path, tokens)
+    }
+
+    /// Is `path` currently taking traffic? (Not down, breaker admits.)
+    fn admittable(&self, path: usize) -> bool {
+        self.stats.health(path) != PathHealth::Down && self.breakers[path].admit()
+    }
+
+    /// Enqueue under the configured backpressure policy (`path` already
+    /// validated and admitted by the breaker).
+    fn enqueue(&self, path: usize, tokens: Vec<i32>) -> Result<Ticket, ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (req, ticket) = admit(id, path, tokens);
         let pushed = if self.reject_on_full {
@@ -184,22 +263,47 @@ impl Server {
         } else {
             self.queues[path].push(req, self.admission_timeout)
         };
+        self.finish_enqueue(path, ticket, pushed)
+    }
+
+    /// Enqueue a redirected request under the (short) shed deadline
+    /// instead of the admission park timeout: a saturated fallback sheds
+    /// fast rather than stacking parked admissions onto a degraded fleet.
+    fn enqueue_by_deadline(&self, path: usize, tokens: Vec<i32>) -> Result<Ticket, ServeError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (req, ticket) = admit(id, path, tokens);
+        let pushed = self.queues[path].push(req, self.shed_deadline);
+        self.finish_enqueue(path, ticket, pushed)
+    }
+
+    fn finish_enqueue(
+        &self,
+        path: usize,
+        ticket: Ticket,
+        pushed: std::result::Result<usize, PushError<ServeRequest>>,
+    ) -> Result<Ticket, ServeError> {
         match pushed {
             Ok(depth) => {
                 self.stats.record_enqueue(path, depth);
                 Ok(ticket)
             }
             Err(PushError::Full(_)) => {
+                // An admitted half-open probe that never reached the
+                // worker must not wedge the breaker in HalfOpen.
+                self.breakers[path].probe_aborted();
                 self.stats.record_reject(path);
                 Err(ServeError::Overloaded { path })
             }
-            Err(PushError::Closed(_)) => Err(ServeError::Closed),
+            Err(PushError::Closed(_)) => {
+                self.breakers[path].probe_aborted();
+                Err(ServeError::Closed)
+            }
         }
     }
 
-    /// Live telemetry snapshot.
+    /// Live telemetry snapshot, including per-path breaker states.
     pub fn report(&self) -> ServeReport {
-        self.stats.snapshot()
+        self.fill_breakers(self.stats.snapshot())
     }
 
     /// Stop admission, drain every queue, join the workers, and return
@@ -211,7 +315,17 @@ impl Server {
         if let Some(pool) = self.pool.take() {
             pool.join();
         }
-        self.stats.snapshot()
+        self.fill_breakers(self.stats.snapshot())
+    }
+
+    fn fill_breakers(&self, mut r: ServeReport) -> ServeReport {
+        r.per_path_breaker = self
+            .breakers
+            .iter()
+            .map(|b| b.state().as_str().to_string())
+            .collect();
+        r.per_path_trips = self.breakers.iter().map(|b| b.trips()).collect();
+        r
     }
 }
 
@@ -224,70 +338,12 @@ impl Drop for Server {
     }
 }
 
-/// Drain loop of one path server (runs on a dedicated pool thread until
-/// its queue is closed and empty).
-fn path_worker<E: PathExecutor>(
-    path: usize,
-    exec: &mut E,
-    queue: &BoundedQueue<ServeRequest>,
-    stats: &ServeStats,
-    max_batch: usize,
-    max_wait: Duration,
-    idle: Duration,
-) {
-    loop {
-        let batch = match queue.pop_batch(max_batch, max_wait, idle) {
-            None => break,       // closed + drained
-            Some(b) if b.is_empty() => continue, // idle tick
-            Some(b) => b,
-        };
-        let taken = Instant::now();
-        let fill = batch.len();
-        let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
-        let toks = pad_batch(&rows, exec.batch());
-        stats.record_batch(path, fill);
-        match exec.forward(&toks, fill) {
-            Ok(scored) if scored.len() != fill => {
-                // A short/long result would silently drop tail requests in
-                // the zip below — surface it as a batch-level failure.
-                stats.record_exec_error(path);
-                warn_!(
-                    "serve",
-                    "path {path} executor returned {} results for {fill}-doc batch",
-                    scored.len()
-                );
-            }
-            Ok(scored) => {
-                for (req, (nll, ntok)) in batch.into_iter().zip(scored) {
-                    let wait_ms =
-                        taken.saturating_duration_since(req.accepted_at).as_secs_f64() * 1e3;
-                    let latency_ms = req.accepted_at.elapsed().as_secs_f64() * 1e3;
-                    stats.record_response(path, latency_ms, wait_ms, ntok);
-                    // A gone client is not a server error; drop silently.
-                    let _ = req.tx.send(ServeResponse {
-                        id: req.id,
-                        path,
-                        nll,
-                        tokens_scored: ntok,
-                        latency_ms,
-                        batch_fill: fill,
-                    });
-                }
-            }
-            Err(e) => {
-                // Dropping the batch drops its senders; every waiting
-                // ticket resolves to None rather than hanging.
-                stats.record_exec_error(path);
-                warn_!("serve", "path {path} forward failed on {fill}-doc batch: {e:#}");
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{BreakerConfig, SupervisorConfig};
     use crate::testkit::exec::logging_fleet;
+    use crate::testkit::install_quiet_panic_hook;
     use crate::testkit::routers::{one_hot, one_hot_router};
 
     /// Regression for the old demo's batch-major bug: every document must
@@ -315,7 +371,9 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.served, 24);
         assert_eq!(report.rejected, 0);
+        assert_eq!(report.redirected, 0);
         assert_eq!(report.per_path_served, vec![8, 8, 8]);
+        assert_eq!(report.per_path_breaker, vec!["closed"; 3]);
         // The executors themselves saw each doc on its assigned path.
         for &(path, marker) in log.lock().unwrap().iter() {
             assert_eq!(
@@ -347,7 +405,7 @@ mod tests {
         }
         assert!(rejected > 0, "50 instant submits must overflow a 2-slot queue");
         for t in accepted {
-            assert!(t.wait().is_some(), "accepted requests are always answered");
+            assert!(t.wait().is_ok(), "accepted requests are always answered");
         }
         let report = server.shutdown();
         assert_eq!(report.served + report.rejected, 50);
@@ -374,7 +432,7 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.served, 9);
         for t in tickets {
-            assert!(t.wait().is_some());
+            assert!(t.wait().is_ok());
         }
     }
 
@@ -396,5 +454,244 @@ mod tests {
         let report = server.shutdown();
         assert_eq!(report.served, 3);
         assert!(report.mean_batch_fill <= 3.0);
+    }
+
+    /// Satellite: a ticket whose receiver was dropped must not wedge the
+    /// worker or skew the telemetry — its batch neighbours still serve.
+    #[test]
+    fn dropped_ticket_receiver_is_harmless() {
+        let (execs, _log) = logging_fleet(1, 4, 4, Duration::ZERO);
+        let server = Server::start(&ServeConfig::default(), one_hot_router(1), execs);
+        let t0 = server.submit_to(0, vec![0; 4]).unwrap();
+        let t1 = server.submit_to(0, vec![0; 4]).unwrap();
+        let t2 = server.submit_to(0, vec![0; 4]).unwrap();
+        drop(t1); // client went away before its response
+        assert!(t0.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        let report = server.shutdown();
+        // the worker scored all 3; the dead send is dropped silently
+        assert_eq!(report.served, 3);
+        assert_eq!(report.failed, 0);
+    }
+
+    /// Always-failing executor for breaker tests (errors, not panics).
+    struct FailingExec {
+        fail: bool,
+        batch: usize,
+        seq: usize,
+    }
+
+    impl PathExecutor for FailingExec {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn forward(&mut self, _t: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+            if self.fail {
+                anyhow::bail!("FailingExec scripted error");
+            }
+            Ok((0..rows).map(|_| (1.0, self.seq - 1)).collect())
+        }
+    }
+
+    fn strict_breaker_cfg() -> ServeConfig {
+        ServeConfig {
+            max_batch: 1,
+            max_wait_ms: 0,
+            breaker: BreakerConfig {
+                enabled: true,
+                window: 8,
+                min_samples: 2,
+                error_rate: 0.5,
+                latency_ms: 0.0,
+                cooldown_ms: 60_000, // stays open for the whole test
+                probes: 2,
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Tentpole: error burst trips the breaker; `submit` then redirects to
+    /// the router's runner-up and the redirect is recorded.
+    #[test]
+    fn open_breaker_redirects_submit_to_runner_up() {
+        let execs = vec![
+            FailingExec { fail: true, batch: 1, seq: 4 },
+            FailingExec { fail: false, batch: 1, seq: 4 },
+        ];
+        let server = Server::start(&strict_breaker_cfg(), one_hot_router(2), execs);
+        // two failing batches trip path 0's breaker (min_samples = 2)
+        for _ in 0..2 {
+            let t = server.submit(&one_hot(2, 0), vec![0; 4]).unwrap();
+            assert_eq!(t.wait(), Err(ServeError::ExecFailed { path: 0 }));
+        }
+        // now path 0 refuses; the same features redirect to path 1
+        let t = server.submit(&one_hot(2, 0), vec![0; 4]).unwrap();
+        let resp = t.wait().expect("redirected request must serve");
+        assert_eq!(resp.path, 1, "served by the runner-up path");
+        // path 1 traffic is unaffected
+        let t = server.submit(&one_hot(2, 1), vec![0; 4]).unwrap();
+        assert_eq!(t.wait().unwrap().path, 1);
+        let report = server.shutdown();
+        assert_eq!(report.redirected, 1);
+        assert_eq!(report.per_path_redirected, vec![1, 0]);
+        assert_eq!(report.per_path_breaker[0], "open");
+        assert_eq!(report.per_path_breaker[1], "closed");
+        assert_eq!(report.per_path_trips, vec![1, 0]);
+        assert_eq!(report.failed, 2);
+        assert_eq!(report.shed, 0);
+    }
+
+    /// With a single path there is no runner-up: an open breaker surfaces
+    /// as a loud CircuitOpen at admission, and submit_to agrees.
+    #[test]
+    fn open_breaker_without_fallback_is_circuit_open() {
+        let execs = vec![FailingExec { fail: true, batch: 1, seq: 4 }];
+        let server = Server::start(&strict_breaker_cfg(), one_hot_router(1), execs);
+        for _ in 0..2 {
+            let t = server.submit(&one_hot(1, 0), vec![0; 4]).unwrap();
+            assert_eq!(t.wait(), Err(ServeError::ExecFailed { path: 0 }));
+        }
+        assert_eq!(
+            server.submit(&one_hot(1, 0), vec![0; 4]).err(),
+            Some(ServeError::CircuitOpen { path: 0 })
+        );
+        assert_eq!(
+            server.submit_to(0, vec![0; 4]).err(),
+            Some(ServeError::CircuitOpen { path: 0 })
+        );
+        let report = server.shutdown();
+        assert_eq!(report.per_path_breaker[0], "open");
+        assert_eq!(report.served, 0);
+    }
+
+    /// A redirect whose fallback queue is saturated sheds within the shed
+    /// deadline instead of parking on a degraded fleet.
+    #[test]
+    fn saturated_fallback_sheds_loudly() {
+        // path 1 is the only fallback and its worker is slow with a
+        // 1-slot queue, so redirected traffic overflows quickly.
+        struct SlowExec {
+            batch: usize,
+            seq: usize,
+            delay: Duration,
+        }
+        impl PathExecutor for SlowExec {
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn seq(&self) -> usize {
+                self.seq
+            }
+            fn forward(&mut self, _t: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+                std::thread::sleep(self.delay);
+                Ok((0..rows).map(|_| (1.0, self.seq - 1)).collect())
+            }
+        }
+        // Heterogeneous fleet needs a common type: box the executors.
+        impl PathExecutor for Box<dyn PathExecutor> {
+            fn batch(&self) -> usize {
+                (**self).batch()
+            }
+            fn seq(&self) -> usize {
+                (**self).seq()
+            }
+            fn forward(&mut self, t: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+                (**self).forward(t, rows)
+            }
+        }
+        let execs: Vec<Box<dyn PathExecutor>> = vec![
+            Box::new(FailingExec { fail: true, batch: 1, seq: 4 }),
+            Box::new(SlowExec { batch: 1, seq: 4, delay: Duration::from_millis(50) }),
+        ];
+        let cfg = ServeConfig {
+            queue_cap: 1,
+            shed_deadline_ms: 1,
+            ..strict_breaker_cfg()
+        };
+        let server = Server::start(&cfg, one_hot_router(2), execs);
+        for _ in 0..2 {
+            let t = server.submit(&one_hot(2, 0), vec![0; 4]).unwrap();
+            assert_eq!(t.wait(), Err(ServeError::ExecFailed { path: 0 }));
+        }
+        // Flood redirects at the 1-slot fallback: the worker holds one
+        // batch for 50ms, so most enqueues cannot make the 1ms deadline.
+        let mut shed = 0usize;
+        let mut accepted = Vec::new();
+        for _ in 0..8 {
+            match server.submit(&one_hot(2, 0), vec![0; 4]) {
+                Ok(t) => accepted.push(t),
+                Err(ServeError::Shed { path: 1 }) => shed += 1,
+                Err(e) => panic!("unexpected admission outcome: {e}"),
+            }
+        }
+        assert!(shed > 0, "a 1-slot fallback must shed under an 8-doc burst");
+        for t in accepted {
+            assert!(t.wait().is_ok(), "admitted redirects still serve");
+        }
+        let report = server.shutdown();
+        assert_eq!(report.shed as usize, shed);
+        assert!(report.redirected >= shed as u64);
+    }
+
+    /// Panicking executor end to end through Server: supervisor keeps the
+    /// path alive, tickets resolve loudly, and the path serves again once
+    /// the fault clears.
+    #[test]
+    fn supervised_path_survives_panics_under_server() {
+        install_quiet_panic_hook();
+        struct PanicNExec {
+            left: usize,
+            batch: usize,
+            seq: usize,
+        }
+        impl PathExecutor for PanicNExec {
+            fn batch(&self) -> usize {
+                self.batch
+            }
+            fn seq(&self) -> usize {
+                self.seq
+            }
+            fn forward(&mut self, _t: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+                if self.left > 0 {
+                    self.left -= 1;
+                    panic!("chaos-inject: PanicNExec scripted panic");
+                }
+                Ok((0..rows).map(|_| (1.0, self.seq - 1)).collect())
+            }
+        }
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_wait_ms: 0,
+            breaker: BreakerConfig {
+                enabled: false, // isolate supervision from breaker behaviour
+                ..Default::default()
+            },
+            supervisor: SupervisorConfig {
+                backoff_ms: 1,
+                backoff_max_ms: 4,
+                max_consecutive_panics: 0,
+            },
+            ..Default::default()
+        };
+        let execs = vec![PanicNExec { left: 2, batch: 1, seq: 4 }];
+        let server = Server::start(&cfg, one_hot_router(1), execs);
+        for i in 0..5 {
+            let t = server.submit_to(0, vec![0; 4]).unwrap();
+            let r = t.wait();
+            if i < 2 {
+                assert_eq!(r, Err(ServeError::ExecFailed { path: 0 }), "req {i}");
+            } else {
+                assert!(r.is_ok(), "req {i} after restart: {r:?}");
+            }
+        }
+        let report = server.shutdown();
+        assert_eq!(report.panics, 2);
+        assert_eq!(report.restarts, 2);
+        assert_eq!(report.failed, 2);
+        assert_eq!(report.served, 3);
+        assert_eq!(report.per_path_health, vec![PathHealth::Healthy]);
     }
 }

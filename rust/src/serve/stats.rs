@@ -1,5 +1,6 @@
 //! Shared serving telemetry: per-request latency, per-path load and queue
-//! depth, micro-batch occupancy, throughput.
+//! depth, micro-batch occupancy, throughput, and the self-healing plane's
+//! health/redirect/shed/restart counters.
 //!
 //! One [`ServeStats`] is shared (Arc) between the admission front-end and
 //! every path-server worker; recording is a short Mutex critical section.
@@ -18,18 +19,54 @@ use crate::util::stats::OnlineStats;
 /// unbiased estimates over the whole run.
 const LATENCY_RESERVOIR: usize = 65_536;
 
+/// Supervisor-maintained health of one path worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PathHealth {
+    /// Worker is draining its queue normally.
+    Healthy,
+    /// Worker panicked and is in its restart backoff.
+    Restarting,
+    /// Restart budget exhausted; the queue was drained with errors and
+    /// admission no longer routes here.
+    Down,
+}
+
+impl PathHealth {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PathHealth::Healthy => "healthy",
+            PathHealth::Restarting => "restarting",
+            PathHealth::Down => "down",
+        }
+    }
+}
+
 #[derive(Debug, Default, Clone)]
 struct PathCounters {
     served: u64,
     rejected: u64,
     batches: u64,
     exec_errors: u64,
+    /// Requests resolved with a ServeError by the worker/supervisor
+    /// (executor failure, panic, path down) — loud, never hung.
+    failed: u64,
+    /// Requests routed here as primary but redirected AWAY because this
+    /// path's breaker refused them.
+    redirected: u64,
+    /// Redirected requests dropped because this primary path's fallbacks
+    /// could not take them within the shed deadline.
+    shed: u64,
+    /// Worker panics caught by the supervisor.
+    panics: u64,
+    /// Supervisor restarts completed (panics that came back).
+    restarts: u64,
     max_depth: usize,
 }
 
 #[derive(Debug, Default)]
 struct StatsInner {
     per_path: Vec<PathCounters>,
+    health: Vec<PathHealth>,
     latencies_ms: Vec<f64>,
     /// Total latency samples seen (>= latencies_ms.len() once the
     /// reservoir is full).
@@ -75,6 +112,7 @@ impl ServeStats {
             started: Instant::now(),
             inner: Mutex::new(StatsInner {
                 per_path: vec![PathCounters::default(); paths],
+                health: vec![PathHealth::Healthy; paths],
                 latencies_ms: Vec::new(),
                 latency_seen: 0,
                 rng_state: 0x9E3779B97F4A7C15,
@@ -106,9 +144,48 @@ impl ServeStats {
         g.batch_fill.push(fill as f64);
     }
 
-    /// A worker's forward call failed; its documents got no response.
+    /// A worker's forward call failed (error or panic); its documents were
+    /// resolved with `ServeError::ExecFailed`.
     pub fn record_exec_error(&self, path: usize) {
         self.inner.lock().unwrap().per_path[path].exec_errors += 1;
+    }
+
+    /// `n` admitted requests on `path` were resolved with a ServeError
+    /// instead of a score.
+    pub fn record_failed(&self, path: usize, n: usize) {
+        self.inner.lock().unwrap().per_path[path].failed += n as u64;
+    }
+
+    /// Degraded-mode routing moved a request whose primary was `from`
+    /// onto fallback path `to`.
+    pub fn record_redirect(&self, from: usize, _to: usize) {
+        self.inner.lock().unwrap().per_path[from].redirected += 1;
+    }
+
+    /// A redirect for primary path `path` found no fallback capacity
+    /// within the shed deadline and the request was dropped loudly.
+    pub fn record_shed(&self, path: usize) {
+        self.inner.lock().unwrap().per_path[path].shed += 1;
+    }
+
+    /// The supervisor caught a panic out of `path`'s worker.
+    pub fn record_panic(&self, path: usize) {
+        self.inner.lock().unwrap().per_path[path].panics += 1;
+    }
+
+    /// The supervisor restarted `path`'s worker after backoff.
+    pub fn record_restart(&self, path: usize) {
+        self.inner.lock().unwrap().per_path[path].restarts += 1;
+    }
+
+    /// Supervisor: publish `path`'s health transition.
+    pub fn set_health(&self, path: usize, h: PathHealth) {
+        self.inner.lock().unwrap().health[path] = h;
+    }
+
+    /// Admission: current health of `path` (Down paths are not routable).
+    pub fn health(&self, path: usize) -> PathHealth {
+        self.inner.lock().unwrap().health[path]
     }
 
     /// One request completed. `queue_wait_ms` is time spent queued before
@@ -132,10 +209,13 @@ impl ServeStats {
     /// held only to copy out the raw state; the O(n log n) percentile
     /// sort (bounded by `LATENCY_RESERVOIR`) happens after the guard is
     /// dropped, so polling telemetry never stalls the serving threads.
+    /// `per_path_breaker` is filled with the breakers' live states by
+    /// `Server::report` (the stats object does not own the breakers).
     pub fn snapshot(&self) -> ServeReport {
         let g = self.inner.lock().unwrap();
         let wall_s = self.started.elapsed().as_secs_f64().max(1e-9);
         let per_path = g.per_path.clone();
+        let health = g.health.clone();
         let mut lat = g.latencies_ms.clone();
         let tokens_scored = g.tokens_scored;
         let mean_ms = g.latency.mean();
@@ -157,6 +237,11 @@ impl ServeStats {
             served: per_path.iter().map(|c| c.served).sum(),
             rejected: per_path.iter().map(|c| c.rejected).sum(),
             exec_errors: per_path.iter().map(|c| c.exec_errors).sum(),
+            failed: per_path.iter().map(|c| c.failed).sum(),
+            redirected: per_path.iter().map(|c| c.redirected).sum(),
+            shed: per_path.iter().map(|c| c.shed).sum(),
+            panics: per_path.iter().map(|c| c.panics).sum(),
+            restarts: per_path.iter().map(|c| c.restarts).sum(),
             batches: per_path.iter().map(|c| c.batches).sum(),
             tokens_scored,
             wall_s,
@@ -169,7 +254,12 @@ impl ServeStats {
             mean_batch_fill,
             per_path_served: per_path.iter().map(|c| c.served).collect(),
             per_path_rejected: per_path.iter().map(|c| c.rejected).collect(),
+            per_path_exec_errors: per_path.iter().map(|c| c.exec_errors).collect(),
+            per_path_redirected: per_path.iter().map(|c| c.redirected).collect(),
             per_path_max_depth: per_path.iter().map(|c| c.max_depth).collect(),
+            per_path_health: health,
+            per_path_breaker: vec!["closed".into(); per_path.len()],
+            per_path_trips: vec![0; per_path.len()],
         }
     }
 }
@@ -180,6 +270,16 @@ pub struct ServeReport {
     pub served: u64,
     pub rejected: u64,
     pub exec_errors: u64,
+    /// Admitted requests resolved with an error (never hung).
+    pub failed: u64,
+    /// Requests redirected to a fallback path by degraded-mode routing.
+    pub redirected: u64,
+    /// Requests shed because no fallback had capacity in time.
+    pub shed: u64,
+    /// Worker panics caught by supervisors.
+    pub panics: u64,
+    /// Worker restarts completed by supervisors.
+    pub restarts: u64,
     pub batches: u64,
     pub tokens_scored: u64,
     pub wall_s: f64,
@@ -192,7 +292,15 @@ pub struct ServeReport {
     pub mean_batch_fill: f64,
     pub per_path_served: Vec<u64>,
     pub per_path_rejected: Vec<u64>,
+    pub per_path_exec_errors: Vec<u64>,
+    pub per_path_redirected: Vec<u64>,
     pub per_path_max_depth: Vec<usize>,
+    pub per_path_health: Vec<PathHealth>,
+    /// Live breaker state per path ("closed" / "open" / "half-open");
+    /// filled by `Server::report`.
+    pub per_path_breaker: Vec<String>,
+    /// Lifetime breaker trips per path; filled by `Server::report`.
+    pub per_path_trips: Vec<u64>,
 }
 
 impl ServeReport {
@@ -201,6 +309,13 @@ impl ServeReport {
         vec![
             vec!["requests served".into(), self.served.to_string()],
             vec!["requests rejected".into(), self.rejected.to_string()],
+            vec!["requests failed loudly".into(), self.failed.to_string()],
+            vec!["requests redirected".into(), self.redirected.to_string()],
+            vec!["requests shed".into(), self.shed.to_string()],
+            vec![
+                "worker panics/restarts".into(),
+                format!("{}/{}", self.panics, self.restarts),
+            ],
             vec!["micro-batches".into(), self.batches.to_string()],
             vec!["mean batch fill".into(), format!("{:.2}", self.mean_batch_fill)],
             vec!["latency p50".into(), format!("{:.2} ms", self.p50_ms)],
@@ -221,6 +336,17 @@ impl ServeReport {
                 "per-path max depth".into(),
                 format!("{:?}", self.per_path_max_depth),
             ],
+            vec![
+                "per-path health".into(),
+                format!(
+                    "{:?}",
+                    self.per_path_health.iter().map(|h| h.as_str()).collect::<Vec<_>>()
+                ),
+            ],
+            vec![
+                "per-path breaker".into(),
+                format!("{:?}", self.per_path_breaker),
+            ],
         ]
     }
 }
@@ -236,6 +362,7 @@ mod tests {
         assert_eq!(r.served, 0);
         assert_eq!(r.p50_ms, 0.0);
         assert_eq!(r.per_path_served, vec![0, 0, 0, 0]);
+        assert_eq!(r.per_path_health, vec![PathHealth::Healthy; 4]);
         assert!(!r.rows().is_empty());
     }
 
@@ -260,6 +387,35 @@ mod tests {
         assert!(r.tok_per_s > 0.0);
         assert_eq!(r.per_path_max_depth[0], 6);
         assert!((r.mean_batch_fill - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn self_healing_counters_roll_up() {
+        let s = ServeStats::new(3);
+        s.record_redirect(0, 1);
+        s.record_redirect(0, 2);
+        s.record_shed(0);
+        s.record_panic(1);
+        s.record_panic(1);
+        s.record_restart(1);
+        s.record_failed(1, 4);
+        s.record_exec_error(1);
+        s.set_health(1, PathHealth::Restarting);
+        s.set_health(2, PathHealth::Down);
+        assert_eq!(s.health(1), PathHealth::Restarting);
+        let r = s.snapshot();
+        assert_eq!(r.redirected, 2);
+        assert_eq!(r.per_path_redirected, vec![2, 0, 0]);
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.panics, 2);
+        assert_eq!(r.restarts, 1);
+        assert_eq!(r.failed, 4);
+        assert_eq!(r.per_path_exec_errors, vec![0, 1, 0]);
+        assert_eq!(
+            r.per_path_health,
+            vec![PathHealth::Healthy, PathHealth::Restarting, PathHealth::Down]
+        );
+        assert!(!r.rows().is_empty());
     }
 
     #[test]

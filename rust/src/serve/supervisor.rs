@@ -1,0 +1,404 @@
+//! Path-worker supervision: every path server runs its drain loop under
+//! `catch_unwind` and is restarted with capped exponential backoff when
+//! its executor panics.
+//!
+//! The supervision contract (the serving counterpart of the coordinator's
+//! monitor/respawn loop) is: **an admitted ticket always resolves.**
+//!
+//! * A batch whose forward call returns an error or panics resolves every
+//!   ticket in it with `Err(ServeError::ExecFailed)` — the panic is caught
+//!   at the forward-call boundary while the worker still owns the batch,
+//!   so no waiter can be stranded by an unwinding executor.
+//! * After a panic the supervisor marks the path `Restarting`, sleeps the
+//!   backoff (doubling per consecutive panic, capped), records the restart
+//!   and re-enters the drain loop with the same executor. Any successful
+//!   batch resets the backoff ladder.
+//! * With `max_consecutive_panics > 0`, a worker that keeps panicking
+//!   with no successful batch in between is declared `Down`: its queue is
+//!   closed and drained, resolving every queued ticket with
+//!   `Err(ServeError::WorkerDown)`, and admission stops routing to it.
+//!
+//! Health transitions are published through [`ServeStats`] so admission
+//! (degraded-mode routing) and telemetry see them; batch outcomes are
+//! reported to the path's [`CircuitBreaker`] so error bursts and latency
+//! spikes trip it even when nothing panics.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::SupervisorConfig;
+use crate::serve::batcher::{pad_batch, BoundedQueue};
+use crate::serve::breaker::CircuitBreaker;
+use crate::serve::request::{ServeError, ServeRequest, ServeResponse};
+use crate::serve::server::PathExecutor;
+use crate::serve::stats::{PathHealth, ServeStats};
+use crate::warn_;
+
+/// Why one incarnation of the drain loop ended.
+enum DrainExit {
+    /// Queue closed and drained — normal shutdown.
+    Drained,
+    /// The executor panicked on a batch (already resolved with errors).
+    /// `after_success` is true when this incarnation completed at least
+    /// one batch first, which resets the supervisor's panic budget.
+    Panicked { after_success: bool },
+}
+
+/// Run one path worker under supervision until its queue is closed and
+/// drained, or the restart budget is exhausted. This is the closure body
+/// `Server::start` schedules on the thread pool; it must never unwind
+/// (the pool's `join` treats a panicked worker as fatal).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_supervised<E: PathExecutor>(
+    path: usize,
+    mut exec: E,
+    queue: Arc<BoundedQueue<ServeRequest>>,
+    stats: Arc<ServeStats>,
+    breaker: Arc<CircuitBreaker>,
+    sup: SupervisorConfig,
+    max_batch: usize,
+    max_wait: Duration,
+    idle: Duration,
+) {
+    let initial = Duration::from_millis(sup.backoff_ms.max(1));
+    let cap = Duration::from_millis(sup.backoff_max_ms.max(sup.backoff_ms).max(1));
+    let mut backoff = initial;
+    let mut consecutive = 0usize;
+    loop {
+        // Outer guard: defense in depth for panics outside the forward
+        // boundary (batcher/stats bugs) — the worker thread itself must
+        // survive anything.
+        let exit = catch_unwind(AssertUnwindSafe(|| {
+            drain_loop(
+                path, &mut exec, &queue, &stats, &breaker, max_batch, max_wait, idle,
+            )
+        }));
+        match exit {
+            Ok(DrainExit::Drained) => return,
+            Ok(DrainExit::Panicked { after_success }) => {
+                if after_success {
+                    consecutive = 0;
+                    backoff = initial;
+                }
+            }
+            // Panic outside the forward guard: nothing is known about
+            // progress, so the panic budget keeps counting up.
+            Err(_) => {}
+        }
+        consecutive += 1;
+        stats.record_panic(path);
+        if sup.max_consecutive_panics > 0 && consecutive >= sup.max_consecutive_panics {
+            warn_!(
+                "serve",
+                "path {path} worker DOWN after {consecutive} consecutive panics; draining queue with errors"
+            );
+            stats.set_health(path, PathHealth::Down);
+            fail_remaining(path, &queue, &stats);
+            return;
+        }
+        stats.set_health(path, PathHealth::Restarting);
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(cap);
+        stats.record_restart(path);
+        stats.set_health(path, PathHealth::Healthy);
+    }
+}
+
+/// One incarnation of the drain loop. Panics from `exec.forward` are
+/// caught HERE, while this frame still owns the batch, so every ticket in
+/// a panicked batch resolves with `ExecFailed` before the worker unwinds
+/// to the supervisor.
+#[allow(clippy::too_many_arguments)]
+fn drain_loop<E: PathExecutor>(
+    path: usize,
+    exec: &mut E,
+    queue: &BoundedQueue<ServeRequest>,
+    stats: &ServeStats,
+    breaker: &CircuitBreaker,
+    max_batch: usize,
+    max_wait: Duration,
+    idle: Duration,
+) -> DrainExit {
+    let mut after_success = false;
+    loop {
+        let batch = match queue.pop_batch(max_batch, max_wait, idle) {
+            None => return DrainExit::Drained,
+            Some(b) if b.is_empty() => continue, // idle tick
+            Some(b) => b,
+        };
+        let taken = Instant::now();
+        let fill = batch.len();
+        let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+        let toks = pad_batch(&rows, exec.batch());
+        stats.record_batch(path, fill);
+        let forwarded = catch_unwind(AssertUnwindSafe(|| exec.forward(&toks, fill)));
+        // Batch execution time feeds the breaker's latency trip: a wedged
+        // executor that "succeeds" slowly is as sick as a failing one.
+        let exec_ms = taken.elapsed().as_secs_f64() * 1e3;
+        match forwarded {
+            Ok(Ok(scored)) if scored.len() == fill => {
+                breaker.record_success(exec_ms);
+                after_success = true;
+                for (req, (nll, ntok)) in batch.into_iter().zip(scored) {
+                    let wait_ms =
+                        taken.saturating_duration_since(req.accepted_at).as_secs_f64() * 1e3;
+                    let latency_ms = req.accepted_at.elapsed().as_secs_f64() * 1e3;
+                    stats.record_response(path, latency_ms, wait_ms, ntok);
+                    // A gone client is not a server error; drop silently.
+                    let _ = req.tx.send(Ok(ServeResponse {
+                        id: req.id,
+                        path,
+                        nll,
+                        tokens_scored: ntok,
+                        latency_ms,
+                        batch_fill: fill,
+                    }));
+                }
+            }
+            Ok(Ok(scored)) => {
+                // A short/long result would silently drop tail requests in
+                // the zip above — treat it as a batch-level failure.
+                warn_!(
+                    "serve",
+                    "path {path} executor returned {} results for {fill}-doc batch",
+                    scored.len()
+                );
+                fail_batch(path, batch, stats, breaker, exec_ms);
+            }
+            Ok(Err(e)) => {
+                warn_!("serve", "path {path} forward failed on {fill}-doc batch: {e:#}");
+                fail_batch(path, batch, stats, breaker, exec_ms);
+            }
+            Err(_) => {
+                warn_!("serve", "path {path} executor PANICKED on {fill}-doc batch");
+                fail_batch(path, batch, stats, breaker, exec_ms);
+                return DrainExit::Panicked { after_success };
+            }
+        }
+    }
+}
+
+/// Resolve every ticket of a failed batch loudly and feed the breaker.
+fn fail_batch(
+    path: usize,
+    batch: Vec<ServeRequest>,
+    stats: &ServeStats,
+    breaker: &CircuitBreaker,
+    exec_ms: f64,
+) {
+    stats.record_exec_error(path);
+    stats.record_failed(path, batch.len());
+    breaker.record_failure(exec_ms);
+    for req in batch {
+        req.fail(ServeError::ExecFailed { path });
+    }
+}
+
+/// Down-path teardown: close the queue (admission now fails fast) and
+/// resolve everything still queued with `WorkerDown`.
+fn fail_remaining(path: usize, queue: &BoundedQueue<ServeRequest>, stats: &ServeStats) {
+    queue.close();
+    while let Some(batch) = queue.pop_batch(64, Duration::ZERO, Duration::ZERO) {
+        if batch.is_empty() {
+            break;
+        }
+        stats.record_failed(path, batch.len());
+        for req in batch {
+            req.fail(ServeError::WorkerDown { path });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BreakerConfig;
+    use crate::serve::request::{admit, Ticket};
+    use crate::testkit::install_quiet_panic_hook;
+
+    /// Deterministic sick executor: panics its first `panics` forwards,
+    /// then errors its next `errors` forwards, then succeeds.
+    struct FlakyExec {
+        batch: usize,
+        seq: usize,
+        panics: usize,
+        errors: usize,
+    }
+
+    impl PathExecutor for FlakyExec {
+        fn batch(&self) -> usize {
+            self.batch
+        }
+        fn seq(&self) -> usize {
+            self.seq
+        }
+        fn forward(&mut self, _toks: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+            if self.panics > 0 {
+                self.panics -= 1;
+                panic!("chaos-inject: FlakyExec scripted panic");
+            }
+            if self.errors > 0 {
+                self.errors -= 1;
+                anyhow::bail!("FlakyExec scripted error");
+            }
+            Ok((0..rows).map(|_| (1.0, self.seq - 1)).collect())
+        }
+    }
+
+    /// Queue `n` single-doc requests, close the queue, and run the
+    /// supervisor inline (no threads — fully deterministic order).
+    fn run_inline(
+        exec: FlakyExec,
+        n: usize,
+        sup: SupervisorConfig,
+    ) -> (Vec<Result<ServeResponse, ServeError>>, Arc<ServeStats>) {
+        install_quiet_panic_hook();
+        let queue = Arc::new(BoundedQueue::new(n.max(1)));
+        let stats = Arc::new(ServeStats::new(1));
+        let breaker = Arc::new(CircuitBreaker::new(BreakerConfig {
+            enabled: false,
+            ..Default::default()
+        }));
+        let seq = exec.seq;
+        let tickets: Vec<Ticket> = (0..n)
+            .map(|i| {
+                let (req, t) = admit(i as u64, 0, vec![0i32; seq]);
+                queue.try_push(req).unwrap();
+                t
+            })
+            .collect();
+        queue.close();
+        run_supervised(
+            0,
+            exec,
+            Arc::clone(&queue),
+            Arc::clone(&stats),
+            breaker,
+            sup,
+            1, // one doc per batch: scripted fault sequence maps 1:1 to requests
+            Duration::ZERO,
+            Duration::ZERO,
+        );
+        (tickets.into_iter().map(|t| t.wait()).collect(), stats)
+    }
+
+    fn fast_sup(max_consecutive_panics: usize) -> SupervisorConfig {
+        SupervisorConfig {
+            backoff_ms: 1,
+            backoff_max_ms: 4,
+            max_consecutive_panics,
+        }
+    }
+
+    #[test]
+    fn panicked_batch_resolves_loudly_and_worker_restarts() {
+        let exec = FlakyExec { batch: 1, seq: 4, panics: 1, errors: 0 };
+        let (results, stats) = run_inline(exec, 3, fast_sup(0));
+        assert_eq!(results[0], Err(ServeError::ExecFailed { path: 0 }));
+        assert!(results[1].is_ok(), "served after restart: {:?}", results[1]);
+        assert!(results[2].is_ok());
+        let r = stats.snapshot();
+        assert_eq!(r.panics, 1);
+        assert_eq!(r.restarts, 1);
+        assert_eq!(r.failed, 1);
+        assert_eq!(r.served, 2);
+        assert_eq!(stats.health(0), PathHealth::Healthy);
+    }
+
+    #[test]
+    fn exec_error_resolves_every_ticket_without_restart() {
+        // Satellite audit: an executor ERROR (not panic) must also resolve
+        // its batch with ServeError, and must not burn the restart budget.
+        let exec = FlakyExec { batch: 1, seq: 4, panics: 0, errors: 2 };
+        let (results, stats) = run_inline(exec, 4, fast_sup(0));
+        assert_eq!(results[0], Err(ServeError::ExecFailed { path: 0 }));
+        assert_eq!(results[1], Err(ServeError::ExecFailed { path: 0 }));
+        assert!(results[2].is_ok() && results[3].is_ok());
+        let r = stats.snapshot();
+        assert_eq!(r.panics, 0);
+        assert_eq!(r.restarts, 0);
+        assert_eq!(r.exec_errors, 2);
+        assert_eq!(r.failed, 2);
+        assert_eq!(r.served, 2);
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_marks_down_and_drains_queue() {
+        let exec = FlakyExec { batch: 1, seq: 4, panics: 99, errors: 0 };
+        let (results, stats) = run_inline(exec, 4, fast_sup(2));
+        // two panicked batches burn the budget; the rest drain as WorkerDown
+        assert_eq!(results[0], Err(ServeError::ExecFailed { path: 0 }));
+        assert_eq!(results[1], Err(ServeError::ExecFailed { path: 0 }));
+        assert_eq!(results[2], Err(ServeError::WorkerDown { path: 0 }));
+        assert_eq!(results[3], Err(ServeError::WorkerDown { path: 0 }));
+        let r = stats.snapshot();
+        assert_eq!(r.panics, 2);
+        assert_eq!(r.restarts, 1, "only the first panic restarts; the second downs");
+        assert_eq!(r.failed, 4);
+        assert_eq!(stats.health(0), PathHealth::Down);
+    }
+
+    #[test]
+    fn successful_batch_resets_the_panic_budget() {
+        // panic, success, panic, success... with a budget of 2: never Down,
+        // because a success intervenes between panics.
+        install_quiet_panic_hook();
+        struct AlternatingExec {
+            calls: usize,
+        }
+        impl PathExecutor for AlternatingExec {
+            fn batch(&self) -> usize {
+                1
+            }
+            fn seq(&self) -> usize {
+                4
+            }
+            fn forward(&mut self, _t: &[i32], rows: usize) -> anyhow::Result<Vec<(f64, usize)>> {
+                self.calls += 1;
+                if self.calls % 2 == 1 {
+                    panic!("chaos-inject: alternating panic");
+                }
+                Ok((0..rows).map(|_| (1.0, 3)).collect())
+            }
+        }
+        let queue = Arc::new(BoundedQueue::new(8));
+        let stats = Arc::new(ServeStats::new(1));
+        let breaker = Arc::new(CircuitBreaker::new(BreakerConfig {
+            enabled: false,
+            ..Default::default()
+        }));
+        let tickets: Vec<Ticket> = (0..6)
+            .map(|i| {
+                let (req, t) = admit(i, 0, vec![0i32; 4]);
+                queue.try_push(req).unwrap();
+                t
+            })
+            .collect();
+        queue.close();
+        run_supervised(
+            0,
+            AlternatingExec { calls: 0 },
+            Arc::clone(&queue),
+            Arc::clone(&stats),
+            breaker,
+            fast_sup(2),
+            1,
+            Duration::ZERO,
+            Duration::ZERO,
+        );
+        let results: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+        // odd calls panic → requests 0,2,4 fail; 1,3,5 serve
+        for (i, r) in results.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(*r, Err(ServeError::ExecFailed { path: 0 }), "req {i}");
+            } else {
+                assert!(r.is_ok(), "req {i}: {r:?}");
+            }
+        }
+        let r = stats.snapshot();
+        assert_eq!(r.panics, 3);
+        assert_eq!(r.restarts, 3, "every panic restarted; budget never hit");
+        assert_eq!(stats.health(0), PathHealth::Healthy);
+    }
+}

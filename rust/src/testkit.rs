@@ -7,6 +7,30 @@
 
 use crate::util::rng::Rng;
 
+/// Silence the default panic printout for INTENTIONAL panics (payload
+/// prefixed `"chaos-inject"`) so chaos scenarios and supervisor tests —
+/// which panic executors dozens of times on purpose — don't bury real
+/// failures in backtrace noise. Every other panic still reaches the
+/// previous hook. Idempotent; safe under parallel test threads.
+pub fn install_quiet_panic_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let msg = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| info.payload().downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if msg.starts_with("chaos-inject") {
+                return;
+            }
+            prev(info);
+        }));
+    });
+}
+
 /// Run `prop` over `cases` inputs drawn by `gen`. Panics with the failing
 /// seed on the first violation.
 pub fn forall<T: std::fmt::Debug>(
