@@ -7,7 +7,7 @@
 PYTHON ?= python3
 PRESETS ?= test path large
 
-.PHONY: artifacts build test bench bench-ckpt bench-serve chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
+.PHONY: artifacts build test bench bench-ckpt bench-serve bench-train bench-assembly bench-outer bench-all chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
 
 artifacts:
 	@for p in $(PRESETS); do \
@@ -31,6 +31,26 @@ bench-ckpt:
 # healthy-path overhead check. CSV under results/bench/bench_serve.csv.
 bench-serve:
 	cargo bench --bench bench_serve
+
+# Hot-path bench: fused kernel A/B (always runs) plus PJRT entrypoint
+# timings when artifacts/<preset> exist. CSV under results/bench/.
+bench-train:
+	cargo bench --bench bench_train_step
+
+# Per-phase parameter plumbing: allocating vs pooled assembly, the
+# data-parallel multi-path fan-out, delta split, checkpoint save/load.
+bench-assembly:
+	cargo bench --bench bench_assembly
+
+# Outer-optimization executors: naive gather-then-average vs online
+# sharded averaging (§3.3).
+bench-outer:
+	cargo bench --bench bench_outer_opt
+
+# Every bench, then merge the per-bench BENCH_*.json baselines into
+# results/bench/BENCH_summary.json.
+bench-all: bench-train bench-ckpt bench-assembly bench-serve bench-outer
+	cargo run --release -- bench-summary
 
 # Chaos harness (DESIGN.md "Failure model"): named fault-injection
 # scenarios with fixed seeds, judged by convergence-equivalence oracles.

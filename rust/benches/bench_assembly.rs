@@ -4,13 +4,15 @@
 //! run once per path per phase; they must be negligible next to tau
 //! train steps (~2s of PJRT compute at tau=20).
 
-use dipaco::benchkit::{header, Bencher};
+use dipaco::benchkit::{compare, header, Bencher};
 use dipaco::config::TopologySpec;
 use dipaco::params::checkpoint::Checkpoint;
 use dipaco::params::manifest::Manifest;
 use dipaco::topology::{ModuleStore, Topology};
 use dipaco::util::json::Json;
+use dipaco::util::pool::Pool;
 use dipaco::util::rng::Rng;
+use dipaco::util::threadpool::parallel_map;
 
 fn synthetic_manifest(d: usize, blocks: usize) -> Manifest {
     let mut leaves = Vec::new();
@@ -48,6 +50,7 @@ fn main() {
     println!("parameter-plumbing bench (per-phase L3 hot path)\n");
     header();
     let mut csv = vec!["bench,params,mean_s".to_string()];
+    let mut summary: Vec<(&str, Json)> = Vec::new();
     for (d, blocks, label) in [(64usize, 4usize, "path-scale"), (128, 8, "large-scale")] {
         let man = synthetic_manifest(d, blocks);
         let topo = Topology::build(&man, &TopologySpec::grid(vec![4, 4]));
@@ -62,6 +65,59 @@ fn main() {
                 std::hint::black_box(store.assemble(&topo, 7));
             });
         csv.push(format!("assemble_{label},{},{:.9}", man.total_params, r.mean_s));
+        let alloc = r;
+
+        // pooled assemble_into — the phase loop's configuration since the
+        // zero-copy pass (buffer recycled run over run, no allocation)
+        let pool: std::sync::Arc<Pool<f32>> = Pool::new(8);
+        let r = Bencher::new(&format!("assemble_into pooled ({label})"))
+            .runs(20, 200)
+            .run(|| {
+                let mut buf = Pool::take(&pool, 0);
+                topo.assemble_into(&store, 7, &mut buf);
+                std::hint::black_box(buf.len());
+            });
+        csv.push(format!("assemble_into_{label},{},{:.9}", man.total_params, r.mean_s));
+        compare(&alloc, &r);
+        if label == "large-scale" {
+            summary.push(("assemble_alloc_s", Json::num(alloc.mean_s)));
+            summary.push(("assemble_pooled_s", Json::num(r.mean_s)));
+            summary.push(("assemble_pooled_speedup", Json::num(alloc.mean_s / r.mean_s)));
+        }
+
+        // multi-path fan-out: all paths of the phase, serial vs threaded
+        // (mirrors run_phase's data-parallel assembly)
+        let paths: Vec<usize> = (0..topo.paths).collect();
+        let mut fanout = Vec::new();
+        for threads in [1usize, 4] {
+            let r = Bencher::new(&format!(
+                "assemble all {} paths, {threads} thread(s) ({label})",
+                topo.paths
+            ))
+            .runs(5, 50)
+            .run(|| {
+                let lens = parallel_map(&paths, threads, |&p| {
+                    let mut buf = Pool::take(&pool, 0);
+                    topo.assemble_into(&store, p, &mut buf);
+                    buf.len()
+                });
+                std::hint::black_box(lens.len());
+            });
+            csv.push(format!(
+                "assemble_fanout_x{threads}_{label},{},{:.9}",
+                man.total_params, r.mean_s
+            ));
+            fanout.push(r);
+        }
+        compare(&fanout[0], &fanout[1]);
+        if label == "large-scale" {
+            summary.push(("fanout_serial_s", Json::num(fanout[0].mean_s)));
+            summary.push(("fanout_x4_s", Json::num(fanout[1].mean_s)));
+            summary.push((
+                "fanout_x4_speedup",
+                Json::num(fanout[0].mean_s / fanout[1].mean_s),
+            ));
+        }
 
         let r = Bencher::new(&format!("split outer gradients ({label})"))
             .runs(20, 200)
@@ -86,8 +142,12 @@ fn main() {
         csv.push(format!("ckpt_load_{label},{},{:.9}", man.total_params, r.mean_s));
         println!();
     }
-    let out = dipaco::metrics::results_dir().join("bench_assembly.csv");
-    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    let out = bench_dir.join("bench_assembly.csv");
+    std::fs::create_dir_all(&bench_dir).unwrap();
     std::fs::write(&out, csv.join("\n")).unwrap();
     println!("csv: {}", out.display());
+    let json_out = bench_dir.join("BENCH_assembly.json");
+    dipaco::metrics::write_summary(&json_out, summary).unwrap();
+    println!("summary: {}", json_out.display());
 }

@@ -58,6 +58,7 @@ fn main() {
     std::fs::create_dir_all(&dir).unwrap();
     let mut csv =
         vec!["part,scale,total_params,section_params,variant,mean_s,bytes".to_string()];
+    let mut summary: Vec<(&str, Json)> = Vec::new();
 
     // ---- part 1: one grid level per block, K=4 each, so the per-module
     // section size stays ~constant while total_params grows with blocks.
@@ -118,6 +119,42 @@ fn main() {
             4 * section_params
         ));
         compare(&full, &r);
+        let buffered = r;
+
+        // zero-copy pass: mmap-backed reader, and read_into with a buffer
+        // reused across reads (the executor's steady-state shape)
+        let r = Bencher::new(&format!("DPC2 section, mmap reader ({label})"))
+            .runs(10, 200)
+            .run(|| {
+                let mut rd = SectionReader::open_mapped(&f2).unwrap();
+                std::hint::black_box(rd.read(&section).unwrap());
+            });
+        csv.push(format!(
+            "full_vs_section,{label},{},{section_params},dpc2_section_mmap,{:.9},{}",
+            man.total_params,
+            r.mean_s,
+            4 * section_params
+        ));
+        let mut buf: Vec<f32> = Vec::new();
+        let r = Bencher::new(&format!("DPC2 section, mmap + reused buf ({label})"))
+            .runs(10, 200)
+            .run(|| {
+                let mut rd = SectionReader::open_mapped(&f2).unwrap();
+                rd.read_into(&section, &mut buf).unwrap();
+                std::hint::black_box(buf.len());
+            });
+        csv.push(format!(
+            "full_vs_section,{label},{},{section_params},dpc2_section_into,{:.9},{}",
+            man.total_params,
+            r.mean_s,
+            4 * section_params
+        ));
+        compare(&buffered, &r);
+        if label == "16-block" {
+            summary.push(("section_buffered_s", Json::num(buffered.mean_s)));
+            summary.push(("section_mmap_into_s", Json::num(r.mean_s)));
+            summary.push(("section_mmap_speedup", Json::num(buffered.mean_s / r.mean_s)));
+        }
         println!();
     }
 
@@ -176,14 +213,46 @@ fn main() {
         man.total_params, r.mean_s
     ));
     compare(&r, &owned_r);
+
+    // the actual executor_loop configuration since the zero-copy pass:
+    // mmap-backed reader, deltas decoded into one reused buffer
+    let mut delta: Vec<f32> = Vec::new();
+    let r = Bencher::new("executor phase: owned sections, mmap + reuse")
+        .runs(5, 30)
+        .run(|| {
+            for (p, f) in files.iter().enumerate() {
+                let mut reader = SectionReader::open_mapped(f).unwrap();
+                for m in owned {
+                    if topo.expert_of(p, m.level) != m.expert {
+                        continue;
+                    }
+                    reader.read_into(&m.delta_section(), &mut delta).unwrap();
+                    std::hint::black_box(delta.len());
+                }
+            }
+        });
+    csv.push(format!(
+        "executor_phase,4x4,{},0,owned_sections_mmap,{:.9},{owned_bytes}",
+        man.total_params, r.mean_s
+    ));
+    compare(&owned_r, &r);
+    summary.push(("executor_owned_s", Json::num(owned_r.mean_s)));
+    summary.push(("executor_owned_mmap_s", Json::num(r.mean_s)));
+    summary.push(("executor_mmap_speedup", Json::num(owned_r.mean_s / r.mean_s)));
+    summary.push(("owned_bytes_per_phase", Json::num(owned_bytes as f64)));
+    summary.push(("full_bytes_per_phase", Json::num(full_phase_bytes as f64)));
     println!(
         "\nexecutor bytes/phase: owned-sections {owned_bytes} vs full {full_phase_bytes} \
          ({:.1}x less I/O)",
         full_phase_bytes as f64 / owned_bytes.max(1) as f64
     );
 
-    let out = dipaco::metrics::results_dir().join("bench_ckpt.csv");
-    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    let out = bench_dir.join("bench_ckpt.csv");
+    std::fs::create_dir_all(&bench_dir).unwrap();
     std::fs::write(&out, csv.join("\n")).unwrap();
     println!("csv: {}", out.display());
+    let json_out = bench_dir.join("BENCH_ckpt.json");
+    dipaco::metrics::write_summary(&json_out, summary).unwrap();
+    println!("summary: {}", json_out.display());
 }

@@ -116,7 +116,7 @@ fn main() {
         let cfg = OuterConfig {
             diloco: DilocoConfig::default(),
             shard_sizes: vec![100; topo.paths],
-            io: Default::default(),
+            ..Default::default()
         };
 
         // naive: gather all, then average serially
@@ -167,8 +167,9 @@ fn main() {
         compare(&naive, best.as_ref().unwrap());
         println!();
     }
-    let out = dipaco::metrics::results_dir().join("bench_outer_opt.csv");
-    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    let out = bench_dir.join("bench_outer_opt.csv");
+    std::fs::create_dir_all(&bench_dir).unwrap();
     std::fs::write(&out, results_csv.join("\n")).unwrap();
     println!("csv: {}", out.display());
 }

@@ -9,11 +9,13 @@
 
 use std::time::{Duration, Instant};
 
-use dipaco::benchkit::{header, Bencher};
+use dipaco::benchkit::{compare, header, Bencher};
 use dipaco::config::{BreakerConfig, ServeConfig};
+use dipaco::serve::batcher::{pad_batch, pad_batch_into};
 use dipaco::serve::server::{PathExecutor, Server};
 use dipaco::serve::stats::ServeReport;
 use dipaco::testkit::routers::{one_hot, one_hot_router};
+use dipaco::util::json::Json;
 use dipaco::util::rng::Rng;
 
 const PATHS: usize = 8;
@@ -113,6 +115,46 @@ fn main() {
     println!("path-serving bench (paper §2.6), {PATHS} paths, {REQUESTS} requests\n");
     let mut csv =
         vec!["scenario,p50_ms,p95_ms,p99_ms,tok_per_s,served,rejected".to_string()];
+    let mut summary: Vec<(&str, Json)> = Vec::new();
+
+    // Padding hot path: per-flush allocation vs the worker's reused
+    // buffer (pad_batch_into). Kernel rows reuse the CSV schema with
+    // mean/p95 in the ms columns and pads/s in tok_per_s.
+    println!("padding hot path (half-full {BATCH}-doc batch, seq {SEQ}):");
+    header();
+    let row = vec![0i32; SEQ];
+    let rows: Vec<&[i32]> = (0..BATCH / 2).map(|_| row.as_slice()).collect();
+    let r_alloc = Bencher::new("pad_batch (alloc per flush)")
+        .runs(20, 200)
+        .throughput(1.0)
+        .run(|| {
+            std::hint::black_box(pad_batch(&rows, BATCH).len());
+        });
+    csv.push(format!(
+        "pad_batch alloc,{:.6},{:.6},0,{:.0},0,0",
+        r_alloc.mean_s * 1e3,
+        r_alloc.p95_s * 1e3,
+        r_alloc.throughput.unwrap()
+    ));
+    let mut toks: Vec<i32> = Vec::new();
+    let r_into = Bencher::new("pad_batch_into (reused buffer)")
+        .runs(20, 200)
+        .throughput(1.0)
+        .run(|| {
+            pad_batch_into(&rows, BATCH, &mut toks);
+            std::hint::black_box(toks.len());
+        });
+    csv.push(format!(
+        "pad_batch_into reuse,{:.6},{:.6},0,{:.0},0,0",
+        r_into.mean_s * 1e3,
+        r_into.p95_s * 1e3,
+        r_into.throughput.unwrap()
+    ));
+    compare(&r_alloc, &r_into);
+    summary.push(("pad_alloc_s", Json::num(r_alloc.mean_s)));
+    summary.push(("pad_into_s", Json::num(r_into.mean_s)));
+    summary.push(("pad_into_speedup", Json::num(r_alloc.mean_s / r_into.mean_s)));
+    println!();
 
     let park = ServeConfig::default();
     let tight = ServeConfig {
@@ -206,8 +248,15 @@ fn main() {
         ));
     }
 
-    let out = dipaco::metrics::results_dir().join("bench").join("bench_serve.csv");
-    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
+    summary.push(("guarded_tok_per_s", Json::num(guarded_tok_s)));
+    summary.push(("unguarded_tok_per_s", Json::num(unguarded_tok_s)));
+
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    let out = bench_dir.join("bench_serve.csv");
+    std::fs::create_dir_all(&bench_dir).unwrap();
     std::fs::write(&out, csv.join("\n")).unwrap();
     println!("\ncsv: {}", out.display());
+    let json_out = bench_dir.join("BENCH_serve.json");
+    dipaco::metrics::write_summary(&json_out, summary).unwrap();
+    println!("summary: {}", json_out.display());
 }

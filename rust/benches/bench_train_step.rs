@@ -1,33 +1,139 @@
-//! L1/L2 hot-path bench — PJRT execution cost of each entrypoint, and the
-//! rust-side dispatch overhead (literal building + tuple decomposition)
-//! relative to raw compute. Needs `make artifacts` (skips otherwise).
+//! L1/L2 hot-path bench — fused f32 kernels (artifact-free, always runs)
+//! plus PJRT execution cost of each entrypoint and the rust-side dispatch
+//! overhead (literal building + tuple decomposition) relative to raw
+//! compute. The PJRT rows need `make artifacts` and are skipped without
+//! them; the kernel rows run everywhere, so the CSV always lands.
 //!
 //! This is the wall-clock unit every experiment above is priced in: one
 //! inner step of one path. Perf target (EXPERIMENTS.md §Perf): rust
 //! dispatch overhead < 10% of PJRT execute time.
 
-use dipaco::benchkit::{header, Bencher};
+use dipaco::benchkit::{compare, header, Bencher};
 use dipaco::runtime::engine::{artifact_dir, Engine};
+use dipaco::util::json::Json;
+use dipaco::util::kernels;
 use dipaco::util::rng::Rng;
 
+/// Element count for the kernel micro-benches: path-preset scale
+/// (~1M f32 per path), the size the optimizer loops actually chew.
+const KN: usize = 1 << 20;
+
 fn main() {
-    // preset selectable so the fused A/B can run on whichever artifacts
-    // carry the train_steps entrypoint (DIPACO_BENCH_PRESET, default path).
+    println!("train-step bench: fused kernels + PJRT entrypoints\n");
+    header();
+    let mut csv = vec!["bench,mean_s,tokens_per_s".to_string()];
+    let mut summary: Vec<(&str, Json)> = Vec::new();
+
+    // ---- part 1: fused optimizer kernels vs scalar reference ----
+    // Same data, mutated in place run over run (cost is data-independent);
+    // bit-exactness is pinned by util::kernels property tests, so only
+    // speed is at stake here.
+    let mut rng = Rng::new(7);
+    let g: Vec<f32> = (0..KN).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let mask: Vec<f32> = (0..KN).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let mut p = vec![0.5f32; KN];
+    let mut v = vec![0.0f32; KN];
+
+    let r_s = Bencher::new("nesterov step, scalar reference")
+        .runs(10, 40)
+        .throughput(KN as f64)
+        .run(|| {
+            kernels::nesterov_scalar(&mut p, &mut v, &g, 1e-4, 0.9);
+            std::hint::black_box(p[0]);
+        });
+    csv.push(format!("kernel_nesterov_scalar,{:.9},{:.0}", r_s.mean_s, r_s.throughput.unwrap()));
+    let r_f = Bencher::new("nesterov step, fused chunks")
+        .runs(10, 40)
+        .throughput(KN as f64)
+        .run(|| {
+            kernels::nesterov_step(&mut p, &mut v, &g, 1e-4, 0.9);
+            std::hint::black_box(p[0]);
+        });
+    csv.push(format!("kernel_nesterov_fused,{:.9},{:.0}", r_f.mean_s, r_f.throughput.unwrap()));
+    compare(&r_s, &r_f);
+    summary.push(("nesterov_speedup", Json::num(r_s.mean_s / r_f.mean_s)));
+
+    let mut sum = vec![0.0f32; KN];
+    let r_s = Bencher::new("weighted accumulate, scalar reference")
+        .runs(10, 40)
+        .throughput(KN as f64)
+        .run(|| {
+            kernels::accumulate_scalar(&mut sum, &g, 0.37);
+            std::hint::black_box(sum[0]);
+        });
+    csv.push(format!("kernel_accum_scalar,{:.9},{:.0}", r_s.mean_s, r_s.throughput.unwrap()));
+    let r_f = Bencher::new("weighted accumulate, fused chunks")
+        .runs(10, 40)
+        .throughput(KN as f64)
+        .run(|| {
+            kernels::accumulate(&mut sum, &g, 0.37);
+            std::hint::black_box(sum[0]);
+        });
+    csv.push(format!("kernel_accum_fused,{:.9},{:.0}", r_f.mean_s, r_f.throughput.unwrap()));
+    compare(&r_s, &r_f);
+    summary.push(("accumulate_speedup", Json::num(r_s.mean_s / r_f.mean_s)));
+
+    let mut theta = vec![0.5f32; KN];
+    let mut am = vec![0.0f32; KN];
+    let mut av = vec![0.0f32; KN];
+    let r_s = Bencher::new("adamw update, scalar reference")
+        .runs(10, 40)
+        .throughput(KN as f64)
+        .run(|| {
+            kernels::adamw_scalar(
+                &mut theta, &mut am, &mut av, &g, &mask, 3.0, 1e-3, 0.9, 0.999, 1e-8, 0.1,
+            );
+            std::hint::black_box(theta[0]);
+        });
+    csv.push(format!("kernel_adamw_scalar,{:.9},{:.0}", r_s.mean_s, r_s.throughput.unwrap()));
+    let r_f = Bencher::new("adamw update, fused chunks")
+        .runs(10, 40)
+        .throughput(KN as f64)
+        .run(|| {
+            kernels::adamw(
+                &mut theta, &mut am, &mut av, &g, &mask, 3.0, 1e-3, 0.9, 0.999, 1e-8, 0.1,
+            );
+            std::hint::black_box(theta[0]);
+        });
+    csv.push(format!("kernel_adamw_fused,{:.9},{:.0}", r_f.mean_s, r_f.throughput.unwrap()));
+    compare(&r_s, &r_f);
+    summary.push(("adamw_speedup", Json::num(r_s.mean_s / r_f.mean_s)));
+    println!();
+
+    // ---- part 2: PJRT entrypoints (needs artifacts; preset selectable
+    // so the fused A/B can run on whichever artifacts carry the
+    // train_steps entrypoint — DIPACO_BENCH_PRESET, default path) ----
     let preset = std::env::var("DIPACO_BENCH_PRESET").unwrap_or_else(|_| "path".into());
     let dir = artifact_dir(&preset);
-    if !dir.join("manifest.json").exists() {
-        println!("skipping bench_train_step: artifacts/{preset} not built");
-        return;
+    if dir.join("manifest.json").exists() {
+        run_pjrt_part(&preset, &dir, &mut csv, &mut summary);
+    } else {
+        println!("(artifacts/{preset} not built; PJRT rows skipped)");
     }
-    let engine = Engine::load(&dir).expect("engine");
+
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    let out = bench_dir.join("bench_train_step.csv");
+    std::fs::create_dir_all(&bench_dir).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("\ncsv: {}", out.display());
+    let json_out = bench_dir.join("BENCH_train_step.json");
+    dipaco::metrics::write_summary(&json_out, summary).unwrap();
+    println!("summary: {}", json_out.display());
+}
+
+fn run_pjrt_part(
+    preset: &str,
+    dir: &std::path::Path,
+    csv: &mut Vec<String>,
+    summary: &mut Vec<(&str, Json)>,
+) {
+    let engine = Engine::load(dir).expect("engine");
     let mc = engine.model().clone();
     let n = engine.manifest.total_params;
     println!(
         "train-step bench: preset={preset} params={n} batch={} seq={}\n",
         mc.batch, mc.seq_train
     );
-    header();
-    let mut csv = vec!["bench,mean_s,tokens_per_s".to_string()];
 
     let theta = engine.init(0).unwrap();
     let m = vec![0.0f32; n];
@@ -55,6 +161,7 @@ fn main() {
             );
         });
     csv.push(format!("train_step,{:.6},{:.0}", r.mean_s, r.throughput.unwrap()));
+    summary.push(("train_step_tokens_per_s", Json::num(r.throughput.unwrap())));
 
     let r = Bencher::new("token_logprobs seq_train")
         .runs(8, 30)
@@ -124,7 +231,7 @@ fn main() {
                 );
             });
         csv.push(format!("tau_fused,{:.6},{:.0}", r_fused.mean_s, r_fused.throughput.unwrap()));
-        dipaco::benchkit::compare(&r_loop, &r_fused);
+        compare(&r_loop, &r_fused);
     } else {
         println!("(artifacts built without train_steps; fused A/B skipped)");
     }
@@ -138,11 +245,6 @@ fn main() {
             std::hint::black_box(a);
         });
     csv.push(format!("dispatch_literals,{:.6},0", r.mean_s));
-
-    let out = dipaco::metrics::results_dir().join("bench_train_step.csv");
-    std::fs::create_dir_all(out.parent().unwrap()).unwrap();
-    std::fs::write(&out, csv.join("\n")).unwrap();
-    println!("\ncsv: {}", out.display());
 }
 
 fn xla_literals(

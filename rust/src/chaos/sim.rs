@@ -32,7 +32,7 @@ use crate::chaos::injector::{FaultInjector, TaskAction};
 use crate::chaos::plan::FaultPlan;
 use crate::config::{DilocoConfig, TopologySpec};
 use crate::coordinator::db::{CheckpointDb, CkptRow};
-use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig, OuterIoStats};
+use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig};
 use crate::coordinator::queue::TaskQueue;
 use crate::coordinator::task::{Task, TrainTask};
 use crate::optim::Nesterov;
@@ -267,7 +267,7 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
     let cfg = OuterConfig {
         diloco: diloco.clone(),
         shard_sizes: vec![1; topo.paths],
-        io: OuterIoStats::default(),
+        ..Default::default()
     };
     // Master velocity map: outer momentum belongs to the MODULE, not to
     // any particular executor — re-sharding between phases (executor

@@ -526,6 +526,8 @@ pub struct RunConfig {
     pub transfer_delay_ms: u64,
     /// Outer-optimization executor shards (paper §3.3).
     pub outer_executors: usize,
+    /// Threads for the per-phase path-assembly fan-out (1 = serial).
+    pub assembly_threads: usize,
     pub seed: u64,
 }
 
@@ -538,6 +540,7 @@ impl Default for RunConfig {
             lease_ms: 30_000,
             transfer_delay_ms: 0,
             outer_executors: 2,
+            assembly_threads: 4,
             seed: 7,
         }
     }

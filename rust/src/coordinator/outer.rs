@@ -30,6 +30,7 @@ use crate::coordinator::db::{CheckpointDb, CkptRow};
 use crate::optim::{rescale_factor, Nesterov, OuterAccumulator};
 use crate::params::checkpoint::{Checkpoint, SectionReader};
 use crate::topology::{ModuleId, ModuleStore, Topology};
+use crate::util::pool::{Pool, PooledBuf};
 
 /// Notification that a module finished its outer update for a phase.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -74,6 +75,9 @@ pub struct OuterConfig {
     pub shard_sizes: Vec<usize>,
     /// Cross-executor I/O accounting (atomics; shared by reference).
     pub io: OuterIoStats,
+    /// Delta-buffer pool shared by the run's executors: steady-state
+    /// phases reduce every module without transient allocations.
+    pub pool: Arc<Pool<f32>>,
 }
 
 /// The executor loop: consumes path-checkpoint rows for `phase`, returns
@@ -99,8 +103,10 @@ pub fn executor_loop(
     // run-dependent order — so contributions are buffered and reduced in
     // path-id order once the quorum is complete, making the outer update
     // bit-identical regardless of arrival order. Transient memory is the
-    // same O(size x P_le) bytes the accumulator would have read anyway.
-    let mut acc: HashMap<ModuleId, Vec<(usize, Vec<f32>, f64)>> = HashMap::new();
+    // same O(size x P_le) bytes the accumulator would have read anyway —
+    // and the buffers come from (and return to) `cfg.pool`, so after the
+    // first phase warms the pool, reduction allocates nothing.
+    let mut acc: HashMap<ModuleId, Vec<(usize, PooledBuf<f32>, f64)>> = HashMap::new();
     let mut done: HashMap<ModuleId, bool> = owned.iter().map(|&m| (m, false)).collect();
     // Double-delivery guard: `run_phase_outer` subscribes and then replays
     // existing rows, so a row inserted between the two can arrive twice;
@@ -109,6 +115,10 @@ pub fn executor_loop(
     // Modules with zero expected contributions can't occur: every module
     // has P_le >= 1 paths by construction.
     let mut remaining = owned.len();
+    // Quorum-reduction state reused across modules: one accumulator and
+    // one averaged-gradient buffer per executor, reset per module.
+    let mut racc = OuterAccumulator::new(0);
+    let mut g: Vec<f32> = Vec::new();
     while remaining > 0 {
         let row = rx.recv().context("db notification channel closed")?;
         if row.kind != "path" || row.phase != phase {
@@ -151,11 +161,14 @@ pub fn executor_loop(
         } else {
             1.0
         };
-        let mut reader = SectionReader::open(&row.file)
+        // Zero-copy open: sections are checksummed and decoded straight
+        // from the mapped file image (buffered fallback inside).
+        let mut reader = SectionReader::open_mapped(&row.file)
             .with_context(|| format!("executor opening {}", row.file.display()))?;
         for m in wanted {
-            let delta = reader
-                .read(&m.delta_section())
+            let mut delta = Pool::take(&cfg.pool, 0);
+            reader
+                .read_into(&m.delta_section(), &mut delta)
                 .with_context(|| format!("executor reading {} of {}", m, row.file.display()))?;
             cfg.io.sections_read.fetch_add(1, Ordering::Relaxed);
             let expected = topo.paths_through(m);
@@ -165,11 +178,11 @@ pub fn executor_loop(
             if buf.len() == expected {
                 let mut contribs = acc.remove(&m).unwrap();
                 contribs.sort_by_key(|&(p, _, _)| p);
-                let mut a = OuterAccumulator::new(size);
+                racc.reset(size);
                 for (_, d, cw) in &contribs {
-                    a.add(d, *cw);
+                    racc.add(d, *cw);
                 }
-                let mut g = a.average();
+                racc.average_into(&mut g);
                 let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
                 if scale != 1.0 {
                     g.iter_mut().for_each(|x| *x *= scale);
@@ -181,6 +194,7 @@ pub fn executor_loop(
                 done.insert(m, true);
                 remaining -= 1;
                 let _ = done_tx.send(ModuleDone { phase, module: m });
+                // `contribs` drops here, returning its buffers to the pool.
             }
         }
         // The reader's own counter is authoritative: for a legacy DPC1
@@ -375,7 +389,7 @@ mod tests {
         let cfg = OuterConfig {
             diloco: DilocoConfig::default(),
             shard_sizes: vec![10, 20, 30, 40],
-            io: OuterIoStats::default(),
+            ..Default::default()
         };
 
         // naive on store_b
@@ -442,7 +456,7 @@ mod tests {
                 ..Default::default()
             },
             shard_sizes: vec![1; topo.paths],
-            io: OuterIoStats::default(),
+            ..Default::default()
         };
         let shards = shard_modules(&topo, 1);
         let mut opts = vec![Nesterov::new(0.7, 0.9)];
@@ -470,7 +484,7 @@ mod tests {
         let cfg = OuterConfig {
             diloco: DilocoConfig::default(),
             shard_sizes: vec![10, 20, 30, 40],
-            io: OuterIoStats::default(),
+            ..Default::default()
         };
         let dbb = CheckpointDb::new();
         let mut rows = Vec::new();
@@ -531,7 +545,7 @@ mod tests {
             let cfg = OuterConfig {
                 diloco: DilocoConfig::default(),
                 shard_sizes: vec![1; topo.paths],
-                io: OuterIoStats::default(),
+                ..Default::default()
             };
             let (tx, rx) = channel();
             for r in &rows {

@@ -33,6 +33,8 @@ use crate::optim::Nesterov;
 use crate::params::checkpoint;
 use crate::runtime::engine::Engine;
 use crate::topology::{ModuleStore, Topology};
+use crate::util::pool::Pool as BufPool;
+use crate::util::threadpool::parallel_map;
 
 /// Result of one phase.
 #[derive(Debug, Clone)]
@@ -70,8 +72,13 @@ pub struct DipacoRun {
     /// the latest completed phase (paths keep their moments like DiLoCo
     /// workers do; the state itself never passes through the coordinator).
     opt_files: HashMap<usize, PathBuf>,
-    /// Reused assembly buffer (`total_params` floats, allocated once).
-    assemble_buf: Vec<f32>,
+    /// Pool of assembly buffers (`total_params` floats each): the
+    /// data-parallel assembly fan-out holds at most `assembly_threads`
+    /// at once, all reused phase over phase.
+    assemble_pool: Arc<BufPool<f32>>,
+    /// Delta-buffer pool for the outer executors, persistent across
+    /// phases so steady-state reduction allocates nothing.
+    outer_pool: Arc<BufPool<f32>>,
     pub stats: Vec<PhaseStats>,
 }
 
@@ -132,7 +139,8 @@ impl DipacoRun {
             executor_shards,
             next_task_id: 1,
             opt_files: HashMap::new(),
-            assemble_buf: Vec::new(),
+            assemble_pool: BufPool::new(8),
+            outer_pool: BufPool::new(256),
             stats: Vec::new(),
         })
     }
@@ -156,14 +164,30 @@ impl DipacoRun {
         // Theta only: AdamW state chains through worker-local opt files.
         let opt_dir = self.rundir.join("opt");
         std::fs::create_dir_all(&opt_dir)?;
+        // Assemble + write every path's input checkpoint, data-parallel
+        // across `run.assembly_threads`: outputs are independent files,
+        // buffers come from the pool, and the store lock is taken ONCE
+        // for the whole fan-out (assembly only reads modules). Results
+        // come back in path order, so task ids stay deterministic.
+        let paths: Vec<usize> = (0..self.topo.paths).collect();
+        let topo = &self.topo;
+        let assemble_pool = &self.assemble_pool;
+        let phase_dir_ref = &phase_dir;
+        let ckpt_ins: Vec<PathBuf> = {
+            let store = self.store.lock().unwrap();
+            let store: &ModuleStore = &store;
+            parallel_map(&paths, self.run.assembly_threads.max(1), |&path| {
+                let mut buf = BufPool::take(assemble_pool, 0);
+                topo.assemble_into(store, path, &mut buf);
+                let ckpt_in = phase_dir_ref.join(format!("path{path}.in.dpc"));
+                checkpoint::save_sections(&ckpt_in, &[("theta", buf.as_slice())])?;
+                Ok(ckpt_in)
+            })
+            .into_iter()
+            .collect::<Result<_>>()?
+        };
         let mut tasks = Vec::with_capacity(self.topo.paths);
-        for path in 0..self.topo.paths {
-            {
-                let store = self.store.lock().unwrap();
-                self.topo.assemble_into(&store, path, &mut self.assemble_buf);
-            }
-            let ckpt_in = phase_dir.join(format!("path{path}.in.dpc"));
-            checkpoint::save_sections(&ckpt_in, &[("theta", self.assemble_buf.as_slice())])?;
+        for (path, ckpt_in) in ckpt_ins.into_iter().enumerate() {
             let opt_out = opt_dir.join(format!("path{path}.t{phase}.opt.dpc"));
             // None on the path's first phase (worker starts from zero
             // moments); otherwise the previous phase's state file.
@@ -189,6 +213,7 @@ impl DipacoRun {
             diloco: self.diloco.clone(),
             shard_sizes: self.sharding.sizes(),
             io: OuterIoStats::default(),
+            pool: Arc::clone(&self.outer_pool),
         };
         let (done_tx, _done_rx) = channel();
         run_phase_outer(

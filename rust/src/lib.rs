@@ -13,7 +13,7 @@
 //! Layer map (see DESIGN.md for the full inventory):
 //! * [`util`] — substrates built in-repo because only the `xla` crate's
 //!   dependency closure is vendored: JSON, RNG, CLI, thread pool, stats,
-//!   logging, keyed barrier.
+//!   logging, keyed barrier, buffer pool, fused f32 kernels.
 //! * [`data`] — byte tokenizer, synthetic multi-domain corpus (the C4
 //!   substitution), sequence packing, shard storage.
 //! * [`routing`] — coarse offline routing: k-means / product k-means
@@ -50,7 +50,9 @@ pub mod util {
     pub mod barrier;
     pub mod cli;
     pub mod json;
+    pub mod kernels;
     pub mod log;
+    pub mod pool;
     pub mod rng;
     pub mod stats;
     pub mod threadpool;

@@ -44,6 +44,7 @@ fn run() -> Result<()> {
         Some("train") => train_cmd(&args),
         Some("eval") => eval_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("bench-summary") => bench_summary_cmd(),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}\n");
@@ -73,7 +74,9 @@ fn run() -> Result<()> {
                  --max-batch N            micro-batch flush size (default engine batch)\n\
                  --max-wait-ms N          micro-batch flush deadline (default 15)\n\
                  --serve-workers N        concurrent client threads (default 4)\n\
-                 --reject                 reject-on-full backpressure (default park)"
+                 --reject                 reject-on-full backpressure (default park)\n\
+                 \n\
+                 bench-summary: merge results/bench/BENCH_*.json into BENCH_summary.json"
             );
             Ok(())
         }
@@ -183,6 +186,7 @@ fn train_cmd(args: &Args) -> Result<()> {
             lease_ms: 60_000,
             transfer_delay_ms: args.u64("transfer-delay", 0),
             outer_executors: args.usize("executors", 2),
+            assembly_threads: args.usize("assembly-threads", 4),
             seed: args.u64("seed", 7),
         },
         rundir: env.workdir.join(format!(
@@ -308,6 +312,50 @@ fn serve_cmd(args: &Args) -> Result<()> {
     if rejects > 0 {
         println!("({rejects} requests rejected by backpressure)");
     }
+    Ok(())
+}
+
+/// Merge every `results/bench/BENCH_*.json` the bench binaries emitted
+/// into one `BENCH_summary.json`, keyed by bench name (the file stem
+/// minus the `BENCH_` prefix). The perf trajectory PR over PR is judged
+/// from this file; `make bench-all` ends by calling it.
+fn bench_summary_cmd() -> Result<()> {
+    use dipaco::util::json::Json;
+
+    let dir = metrics::results_dir().join("bench");
+    let mut parts: Vec<(String, Json)> = Vec::new();
+    if dir.is_dir() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let Some(stem) = path.file_stem().and_then(|s| s.to_str()) else {
+                continue;
+            };
+            let Some(name) = stem.strip_prefix("BENCH_") else {
+                continue;
+            };
+            if name == "summary" || path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let json = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{}: {e:?}", path.display()))?;
+            parts.push((name.to_string(), json));
+        }
+    }
+    parts.sort_by(|a, b| a.0.cmp(&b.0));
+    if parts.is_empty() {
+        println!(
+            "no BENCH_*.json under {} — run `make bench-all` first",
+            dir.display()
+        );
+        return Ok(());
+    }
+    let names: Vec<String> = parts.iter().map(|(n, _)| n.clone()).collect();
+    let entries: Vec<(&str, Json)> = parts.iter().map(|(n, j)| (n.as_str(), j.clone())).collect();
+    let out = dir.join("BENCH_summary.json");
+    metrics::write_summary(&out, entries)?;
+    println!("merged {} benches ({}) into {}", names.len(), names.join(", "), out.display());
     Ok(())
 }
 

@@ -13,6 +13,7 @@
 use std::collections::HashMap;
 
 use crate::topology::{ModuleId, Topology};
+use crate::util::kernels;
 
 /// Online weighted average of outer gradients for one module.
 #[derive(Debug, Clone)]
@@ -31,14 +32,22 @@ impl OuterAccumulator {
         }
     }
 
+    /// Reset to a pristine accumulator of `size` elements, keeping the
+    /// sum buffer's allocation — executors reduce many modules per phase
+    /// and reuse one accumulator across them.
+    pub fn reset(&mut self, size: usize) {
+        self.sum.clear();
+        self.sum.resize(size, 0.0);
+        self.weight = 0.0;
+        self.contributions = 0;
+    }
+
     /// Add one path's outer gradient with weight `w` (shard size under
     /// loss reweighing, 1.0 otherwise). O(size); no buffering of deltas.
     pub fn add(&mut self, delta: &[f32], w: f64) {
         assert_eq!(delta.len(), self.sum.len());
         assert!(w > 0.0);
-        for (s, &d) in self.sum.iter_mut().zip(delta) {
-            *s += (d as f64 * w) as f32;
-        }
+        kernels::accumulate(&mut self.sum, delta, w);
         self.weight += w;
         self.contributions += 1;
     }
@@ -49,9 +58,18 @@ impl OuterAccumulator {
 
     /// Weighted mean (Eq. 2-3 with alpha normalized by total weight).
     pub fn average(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.average_into(&mut out);
+        out
+    }
+
+    /// Weighted mean into a caller-owned (typically pooled) buffer —
+    /// bit-identical to [`OuterAccumulator::average`], no allocation in
+    /// steady state.
+    pub fn average_into(&self, out: &mut Vec<f32>) {
         assert!(self.weight > 0.0, "no contributions");
         let inv = (1.0 / self.weight) as f32;
-        self.sum.iter().map(|&s| s * inv).collect()
+        kernels::scale_into(&self.sum, inv, out);
     }
 }
 
@@ -81,11 +99,7 @@ impl Nesterov {
             .velocity
             .entry(m)
             .or_insert_with(|| vec![0.0; g.len()]);
-        let mu = self.momentum;
-        for ((p, v), &gi) in params.iter_mut().zip(v.iter_mut()).zip(g) {
-            *v = mu * *v + gi;
-            *p -= self.lr * (gi + mu * *v);
-        }
+        kernels::nesterov_step(params, v, g, self.lr, self.momentum);
     }
 
     pub fn velocity_of(&self, m: ModuleId) -> Option<&[f32]> {
@@ -150,6 +164,27 @@ mod tests {
         assert!((avg[1] - 2.0).abs() < 1e-6);
         assert!((avg[2] - 1.5).abs() < 1e-6);
         assert_eq!(acc.contributions(), 2);
+    }
+
+    #[test]
+    fn average_into_matches_average_and_reset_reuses() {
+        let mut acc = OuterAccumulator::new(3);
+        acc.add(&[1.0, 2.0, 3.0], 1.0);
+        acc.add(&[3.0, 2.0, 1.0], 3.0);
+        let a = acc.average();
+        let mut b = vec![9.0f32; 7]; // dirty, wrong-sized buffer
+        acc.average_into(&mut b);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "average_into must be bit-identical to average"
+        );
+        // reset: pristine state, same buffer
+        acc.reset(2);
+        assert_eq!(acc.contributions(), 0);
+        acc.add(&[4.0, 6.0], 2.0);
+        assert_eq!(acc.contributions(), 1);
+        assert_eq!(acc.average(), vec![4.0, 6.0]);
     }
 
     #[test]

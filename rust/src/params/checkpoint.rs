@@ -206,6 +206,15 @@ pub fn load_section(path: &Path, name: &str) -> Result<Vec<f32>> {
         .with_context(|| format!("loading section {name} from {}", path.display()))
 }
 
+/// Random access to one section, decoded straight into a caller-owned
+/// (typically pooled) buffer — the zero-allocation form of
+/// [`load_section`].
+pub fn load_section_into(path: &Path, name: &str, out: &mut Vec<f32>) -> Result<()> {
+    SectionReader::open(path)?
+        .read_into(name, out)
+        .with_context(|| format!("loading section {name} from {}", path.display()))
+}
+
 #[derive(Debug, Clone)]
 struct DirEntry {
     name: String,
@@ -268,15 +277,70 @@ fn parse_directory(head: &[u8]) -> Result<Vec<DirEntry>> {
 }
 
 /// Open-once random access over a checkpoint's sections: parses only the
-/// header directory, then serves `read(name)` calls with seek + exact
-/// payload reads. Tracks payload bytes served so callers (the executor
-/// path) can account I/O. For legacy DPC1 files (no directory) it falls
-/// back to a full-file parse and counts the whole file as read.
+/// header directory, then serves `read(name)` / `read_into(name, buf)`
+/// calls. Two DPC2 backends share the same checksum discipline:
+///
+/// * [`SectionReader::open`] — buffered: seek + one exact payload read,
+///   decoded in a single pass (no intermediate byte vector).
+/// * [`SectionReader::open_mapped`] — zero-copy: the file is mmap'd
+///   read-only (falling back to one whole-file read where mmap is
+///   unavailable or fails) and payloads are checksummed and decoded
+///   straight from the mapped bytes.
+///
+/// Both track payload bytes served so callers (the executor path) can
+/// account I/O. For legacy DPC1 files (no directory) both fall back to a
+/// full-file parse and count the whole file as read.
 pub struct SectionReader {
-    file: Option<std::fs::File>,
+    backend: Backend,
     dir: Vec<DirEntry>,
-    legacy: Option<Checkpoint>,
     bytes_read: u64,
+}
+
+enum Backend {
+    /// Buffered random access: seek + exact read per section.
+    File(std::fs::File),
+    /// Zero-copy: payloads decoded straight from the file image.
+    Mapped(FileBytes),
+    /// DPC1 fallback: whole-file parse held in memory.
+    Legacy(Checkpoint),
+}
+
+/// The complete file image behind a mapped reader.
+enum FileBytes {
+    #[cfg(unix)]
+    Os(mmap_impl::Map),
+    /// Fallback when mmap is unavailable (non-unix) or fails (empty
+    /// file, exotic filesystem): one buffered whole read.
+    Owned(Vec<u8>),
+}
+
+impl FileBytes {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            FileBytes::Os(m) => m.as_slice(),
+            FileBytes::Owned(v) => v.as_slice(),
+        }
+    }
+
+    fn map_or_read(f: &std::fs::File, len: usize, path: &Path) -> Result<FileBytes> {
+        #[cfg(unix)]
+        if let Some(m) = mmap_impl::Map::of(f, len) {
+            return Ok(FileBytes::Os(m));
+        }
+        let mut buf = Vec::with_capacity(len);
+        let mut src = f; // `&File: Read`; cursor is at 0 on a fresh open
+        src.read_to_end(&mut buf)
+            .with_context(|| format!("opening {}", path.display()))?;
+        Ok(FileBytes::Owned(buf))
+    }
+}
+
+fn find_entry(dir: &[DirEntry], name: &str) -> Result<DirEntry> {
+    dir.iter()
+        .find(|e| e.name == name)
+        .cloned()
+        .with_context(|| format!("section {name} missing"))
 }
 
 impl SectionReader {
@@ -291,9 +355,8 @@ impl SectionReader {
             let ck = Checkpoint::load(path)?;
             let bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
             return Ok(SectionReader {
-                file: None,
+                backend: Backend::Legacy(ck),
                 dir: Vec::new(),
-                legacy: Some(ck),
                 bytes_read: bytes,
             });
         }
@@ -313,33 +376,81 @@ impl SectionReader {
             .with_context(|| format!("{}: truncated checkpoint header", path.display()))?;
         let dir = parse_directory(&head).with_context(|| format!("reading {}", path.display()))?;
         Ok(SectionReader {
-            file: Some(f),
+            backend: Backend::File(f),
             dir,
-            legacy: None,
+            bytes_read: 0,
+        })
+    }
+
+    /// Zero-copy open: map the whole file read-only and serve section
+    /// reads from the mapped bytes (checksums included). Semantics —
+    /// error strings, byte accounting, DPC1 fallback — match
+    /// [`SectionReader::open`] exactly; only the I/O path differs.
+    ///
+    /// Lifetime note (see DESIGN.md "Hot path & memory"): the mapping
+    /// lives as long as the reader. Checkpoint GC unlinks published files
+    /// while executors may still hold readers — on unix the mapping keeps
+    /// the inode alive until drop, so a concurrent GC pass can never make
+    /// reads fault.
+    pub fn open_mapped(path: &Path) -> Result<SectionReader> {
+        let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let len = f
+            .metadata()
+            .with_context(|| format!("opening {}", path.display()))?
+            .len() as usize;
+        let bytes = FileBytes::map_or_read(&f, len, path)?;
+        let buf = bytes.as_slice();
+        if buf.len() < 12 {
+            bail!("{}: truncated checkpoint", path.display());
+        }
+        if &buf[..4] == MAGIC_V1 {
+            let ck = load_dpc1(buf, path)?;
+            let total = buf.len() as u64;
+            return Ok(SectionReader {
+                backend: Backend::Legacy(ck),
+                dir: Vec::new(),
+                bytes_read: total,
+            });
+        }
+        if &buf[..4] != MAGIC_V2 {
+            bail!("{}: not a DPC checkpoint", path.display());
+        }
+        let header_len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        if header_len < DIR_FIXED || header_len > (1 << 24) {
+            bail!("{}: corrupt checkpoint header", path.display());
+        }
+        if header_len > buf.len() {
+            bail!("{}: truncated checkpoint header", path.display());
+        }
+        let dir =
+            parse_directory(&buf[..header_len]).with_context(|| format!("reading {}", path.display()))?;
+        Ok(SectionReader {
+            backend: Backend::Mapped(bytes),
+            dir,
             bytes_read: 0,
         })
     }
 
     /// Section names, in file order.
     pub fn names(&self) -> Vec<&str> {
-        match &self.legacy {
-            Some(ck) => ck.sections.iter().map(|(n, _)| n.as_str()).collect(),
-            None => self.dir.iter().map(|e| e.name.as_str()).collect(),
+        match &self.backend {
+            Backend::Legacy(ck) => ck.sections.iter().map(|(n, _)| n.as_str()).collect(),
+            _ => self.dir.iter().map(|e| e.name.as_str()).collect(),
         }
     }
 
     pub fn has(&self, name: &str) -> bool {
-        match &self.legacy {
-            Some(ck) => ck.get(name).is_some(),
-            None => self.dir.iter().any(|e| e.name == name),
+        match &self.backend {
+            Backend::Legacy(ck) => ck.get(name).is_some(),
+            _ => self.dir.iter().any(|e| e.name == name),
         }
     }
 
     /// Length (f32 count) of a section, from the directory alone.
     pub fn len_of(&self, name: &str) -> Option<usize> {
-        match &self.legacy {
-            Some(ck) => ck.get(name).map(|d| d.len()),
-            None => self.dir.iter().find(|e| e.name == name).map(|e| e.len),
+        match &self.backend {
+            Backend::Legacy(ck) => ck.get(name).map(|d| d.len()),
+            _ => self.dir.iter().find(|e| e.name == name).map(|e| e.len),
         }
     }
 
@@ -350,28 +461,144 @@ impl SectionReader {
 
     /// Read one section's data, verifying its checksum.
     pub fn read(&mut self, name: &str) -> Result<Vec<f32>> {
-        if let Some(ck) = &self.legacy {
-            return ck
-                .get(name)
-                .map(|d| d.to_vec())
-                .with_context(|| format!("section {name} missing"));
+        let mut out = Vec::new();
+        self.read_into(name, &mut out)?;
+        Ok(out)
+    }
+
+    /// Read one section into a caller-owned (typically pooled) buffer —
+    /// clear + fill, capacity reused — verifying its checksum. One pass:
+    /// no intermediate byte vector on any backend.
+    pub fn read_into(&mut self, name: &str, out: &mut Vec<f32>) -> Result<()> {
+        match &mut self.backend {
+            Backend::Legacy(ck) => {
+                let d = ck
+                    .get(name)
+                    .with_context(|| format!("section {name} missing"))?;
+                out.clear();
+                out.extend_from_slice(d);
+                Ok(())
+            }
+            Backend::File(f) => {
+                let e = find_entry(&self.dir, name)?;
+                f.seek(SeekFrom::Start(e.offset))?;
+                out.clear();
+                out.resize(e.len, 0.0);
+                // One-pass decode: the payload lands directly in `out`'s
+                // storage as raw LE bytes, is checksummed in place, then
+                // re-typed element-wise (identity on little-endian —
+                // `from_le_bytes(to_ne_bytes(..))` compiles to nothing).
+                let view = unsafe {
+                    std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, e.len * 4)
+                };
+                f.read_exact(view)
+                    .with_context(|| format!("section {name}: truncated payload"))?;
+                if fletcher64(view) != e.sum {
+                    bail!("section {name}: checksum mismatch (torn write?)");
+                }
+                self.bytes_read += (e.len * 4) as u64;
+                for v in out.iter_mut() {
+                    *v = f32::from_le_bytes(v.to_ne_bytes());
+                }
+                Ok(())
+            }
+            Backend::Mapped(bytes) => {
+                let e = find_entry(&self.dir, name)?;
+                let buf = bytes.as_slice();
+                let start = e.offset as usize;
+                let end = start
+                    .checked_add(e.len.checked_mul(4).context("section length overflow")?)
+                    .context("section offset overflow")?;
+                if end > buf.len() {
+                    bail!("section {name}: truncated payload");
+                }
+                let payload = &buf[start..end];
+                if fletcher64(payload) != e.sum {
+                    bail!("section {name}: checksum mismatch (torn write?)");
+                }
+                out.clear();
+                out.reserve(e.len);
+                out.extend(
+                    payload
+                        .chunks_exact(4)
+                        .map(|ch| f32::from_le_bytes(ch.try_into().unwrap())),
+                );
+                self.bytes_read += payload.len() as u64;
+                Ok(())
+            }
         }
-        let e = self
-            .dir
-            .iter()
-            .find(|e| e.name == name)
-            .with_context(|| format!("section {name} missing"))?
-            .clone();
-        let f = self.file.as_mut().expect("non-legacy reader has a file");
-        f.seek(SeekFrom::Start(e.offset))?;
-        let mut bytes = vec![0u8; e.len * 4];
-        f.read_exact(&mut bytes)
-            .with_context(|| format!("section {name}: truncated payload"))?;
-        if fletcher64(&bytes) != e.sum {
-            bail!("section {name}: checksum mismatch (torn write?)");
+    }
+}
+
+/// Minimal read-only mmap binding, hand-declared because the vendored
+/// dependency closure has only `anyhow` + `xla` (no `libc`/`memmap2`);
+/// these two symbols exist in every unix libc.
+#[cfg(unix)]
+mod mmap_impl {
+    use std::os::unix::io::AsRawFd;
+
+    unsafe extern "C" {
+        unsafe fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        unsafe fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// Owned read-only mapping of a whole file; unmapped on drop.
+    pub struct Map {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // Safety: the mapping is PROT_READ for its entire lifetime, so its
+    // bytes are immutable and sharing them across threads is as safe as
+    // sharing a `&[u8]`.
+    unsafe impl Send for Map {}
+    unsafe impl Sync for Map {}
+
+    impl Map {
+        /// `None` on any failure (zero-length file is EINVAL, exotic
+        /// filesystems, fd limits) — the caller falls back to a buffered
+        /// whole-file read, never to an error.
+        pub fn of(file: &std::fs::File, len: usize) -> Option<Map> {
+            if len == 0 {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return None; // MAP_FAILED
+            }
+            Some(Map { ptr, len })
         }
-        self.bytes_read += bytes.len() as u64;
-        Ok(read_f32s_le(&bytes))
+
+        pub fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
     }
 }
 
@@ -642,6 +869,109 @@ mod tests {
             e.contains("section directory checksum mismatch"),
             "wrong directory error: {e}"
         );
+    }
+
+    #[test]
+    fn mapped_reader_matches_buffered() {
+        let p = tmpdir().join("map1.dpc");
+        let big: Vec<f32> = (0..4096).map(|i| (i as f32).cos()).collect();
+        let small = [1.0f32, 2.0];
+        save_sections(&p, &[("big", &big), ("small", &small)]).unwrap();
+        let mut buffered = SectionReader::open(&p).unwrap();
+        let mut mapped = SectionReader::open_mapped(&p).unwrap();
+        assert_eq!(mapped.names(), buffered.names());
+        assert_eq!(mapped.len_of("big"), Some(4096));
+        for name in ["big", "small"] {
+            let a = buffered.read(name).unwrap();
+            let b = mapped.read(name).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "backends disagree on {name}");
+        }
+        // identical byte accounting in both modes
+        assert_eq!(mapped.bytes_read(), buffered.bytes_read());
+        assert_eq!(mapped.bytes_read(), (4096 + 2) * 4);
+    }
+
+    #[test]
+    fn read_into_reuses_buffer_and_matches_read() {
+        let p = tmpdir().join("map2.dpc");
+        let a: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        let b = vec![7.0f32; 10];
+        save_sections(&p, &[("a", &a), ("b", &b)]).unwrap();
+        type Open = fn(&Path) -> Result<SectionReader>;
+        for open in [SectionReader::open as Open, SectionReader::open_mapped] {
+            let mut r = open(&p).unwrap();
+            let mut buf = vec![9.9f32; 3]; // dirty, wrong-sized
+            r.read_into("a", &mut buf).unwrap();
+            assert_eq!(buf, a);
+            let cap = buf.capacity();
+            r.read_into("b", &mut buf).unwrap();
+            assert_eq!(buf, b);
+            assert!(cap >= 1000 && buf.capacity() >= cap, "buffer must be reused");
+            assert!(r.read_into("missing", &mut buf).is_err());
+            assert_eq!(r.bytes_read(), (1000 + 10) * 4);
+        }
+        // convenience helper agrees
+        let mut out = Vec::new();
+        load_section_into(&p, "b", &mut out).unwrap();
+        assert_eq!(out, b);
+    }
+
+    #[test]
+    fn mapped_corruption_errors_match_buffered() {
+        // The mapped backend must diagnose the corruptor's three damage
+        // modes with the SAME error strings as the buffered one — the
+        // chaos oracle matches on them.
+        use crate::chaos::corruptor::{corrupt_file, CorruptMode};
+        let dir = tmpdir();
+        let theta: Vec<f32> = (0..256).map(|i| i as f32 * 0.25).collect();
+        let tail = vec![1.5f32; 256];
+        let write = |p: &Path| {
+            save_sections(p, &[("theta", theta.as_slice()), ("tail", tail.as_slice())]).unwrap()
+        };
+
+        let p = dir.join("m-trunc.dpc");
+        write(&p);
+        corrupt_file(&p, CorruptMode::TruncatePayload).unwrap();
+        let mut r = SectionReader::open_mapped(&p).unwrap();
+        assert_eq!(r.read("theta").unwrap(), theta);
+        let e = format!("{:#}", r.read("tail").unwrap_err());
+        assert!(e.contains("truncated payload"), "wrong truncation error: {e}");
+        assert!(!e.contains("checksum mismatch"), "misdiagnosed as checksum: {e}");
+
+        let p = dir.join("m-flip.dpc");
+        write(&p);
+        corrupt_file(&p, CorruptMode::FlipPayloadByte).unwrap();
+        let mut r = SectionReader::open_mapped(&p).unwrap();
+        let e = format!("{:#}", r.read("theta").unwrap_err());
+        assert!(e.contains("checksum mismatch (torn write?)"), "wrong flip error: {e}");
+
+        let p = dir.join("m-dir.dpc");
+        write(&p);
+        corrupt_file(&p, CorruptMode::DamageDirectory).unwrap();
+        let e = format!("{:#}", SectionReader::open_mapped(&p).unwrap_err());
+        assert!(
+            e.contains("section directory checksum mismatch"),
+            "wrong directory error: {e}"
+        );
+    }
+
+    #[test]
+    fn mapped_reader_handles_dpc1_and_garbage() {
+        let p = tmpdir().join("map-legacy.dpc");
+        let ck = Checkpoint::new().with("theta", vec![3.0; 20]);
+        ck.save_dpc1(&p).unwrap();
+        let mut r = SectionReader::open_mapped(&p).unwrap();
+        assert_eq!(r.read("theta").unwrap(), vec![3.0; 20]);
+        let file_len = std::fs::metadata(&p).unwrap().len();
+        assert_eq!(r.bytes_read(), file_len, "legacy counts the whole file");
+
+        let g = tmpdir().join("map-garbage.dpc");
+        std::fs::write(&g, b"not a checkpoint at all").unwrap();
+        assert!(SectionReader::open_mapped(&g).is_err());
+        let empty = tmpdir().join("map-empty.dpc");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(SectionReader::open_mapped(&empty).is_err());
     }
 
     #[test]

@@ -178,10 +178,21 @@ impl<T> BoundedQueue<T> {
 /// `[batch, seq]` buffer; the caller scores only the first `rows.len()`
 /// rows.
 pub fn pad_batch(rows: &[&[i32]], batch: usize) -> Vec<i32> {
+    let mut out = Vec::new();
+    pad_batch_into(rows, batch, &mut out);
+    out
+}
+
+/// Allocation-free variant of [`pad_batch`]: pads into a caller-owned
+/// buffer (cleared first), so the serve worker's steady state reuses one
+/// flattened token buffer per batch instead of allocating `batch * seq`
+/// ints per flush.
+pub fn pad_batch_into(rows: &[&[i32]], batch: usize, out: &mut Vec<i32>) {
     assert!(!rows.is_empty(), "cannot pad an empty batch");
     assert!(rows.len() <= batch, "{} rows > batch {batch}", rows.len());
     let seq = rows[0].len();
-    let mut out = Vec::with_capacity(batch * seq);
+    out.clear();
+    out.reserve(batch * seq);
     for r in rows {
         assert_eq!(r.len(), seq, "ragged token rows in one batch");
         out.extend_from_slice(r);
@@ -189,7 +200,6 @@ pub fn pad_batch(rows: &[&[i32]], batch: usize) -> Vec<i32> {
     for _ in rows.len()..batch {
         out.extend_from_slice(rows[0]);
     }
-    out
 }
 
 #[cfg(test)]
@@ -367,6 +377,19 @@ mod tests {
         assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 1, 2, 3, 1, 2, 3]);
         // already full: no padding
         assert_eq!(pad_batch(&[r0], 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pad_batch_into_matches_and_reuses_buffer() {
+        let r0: &[i32] = &[1, 2, 3];
+        let r1: &[i32] = &[4, 5, 6];
+        let mut buf = vec![99; 100]; // dirty, oversized — must be cleared
+        pad_batch_into(&[r0, r1], 4, &mut buf);
+        assert_eq!(buf, pad_batch(&[r0, r1], 4));
+        let cap = buf.capacity();
+        pad_batch_into(&[r1], 2, &mut buf);
+        assert_eq!(buf, vec![4, 5, 6, 4, 5, 6]);
+        assert_eq!(buf.capacity(), cap, "steady state must not reallocate");
     }
 
     #[test]

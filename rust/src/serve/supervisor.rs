@@ -28,7 +28,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::SupervisorConfig;
-use crate::serve::batcher::{pad_batch, BoundedQueue};
+use crate::serve::batcher::{pad_batch_into, BoundedQueue};
 use crate::serve::breaker::CircuitBreaker;
 use crate::serve::request::{ServeError, ServeRequest, ServeResponse};
 use crate::serve::server::PathExecutor;
@@ -121,6 +121,9 @@ fn drain_loop<E: PathExecutor>(
     idle: Duration,
 ) -> DrainExit {
     let mut after_success = false;
+    // Flattened [batch, seq] token buffer, reused across every batch this
+    // incarnation drains — steady-state padding allocates nothing.
+    let mut toks: Vec<i32> = Vec::new();
     loop {
         let batch = match queue.pop_batch(max_batch, max_wait, idle) {
             None => return DrainExit::Drained,
@@ -130,7 +133,7 @@ fn drain_loop<E: PathExecutor>(
         let taken = Instant::now();
         let fill = batch.len();
         let rows: Vec<&[i32]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
-        let toks = pad_batch(&rows, exec.batch());
+        pad_batch_into(&rows, exec.batch(), &mut toks);
         stats.record_batch(path, fill);
         let forwarded = catch_unwind(AssertUnwindSafe(|| exec.forward(&toks, fill)));
         // Batch execution time feeds the breaker's latency trip: a wedged

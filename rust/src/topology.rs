@@ -546,6 +546,31 @@ mod tests {
     }
 
     #[test]
+    fn pooled_assemble_into_matches_allocating_assemble() {
+        // The phase-assembly fan-out runs assemble_into on pool-recycled
+        // buffers; output must be bit-identical to the allocating path no
+        // matter what stale contents the recycled buffer carries.
+        use crate::util::pool::Pool;
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        let theta: Vec<f32> = (0..m.total_params).map(|i| (i % 7) as f32 - 3.0).collect();
+        let store = ModuleStore::from_base(&t, &theta);
+        let pool: std::sync::Arc<Pool<f32>> = Pool::new(4);
+        for round in 0..3 {
+            for p in 0..t.paths {
+                let mut buf = Pool::take(&pool, 0);
+                buf.resize(17, f32::NAN); // poison before reuse
+                t.assemble_into(&store, p, &mut buf);
+                let want = store.assemble(&t, p);
+                assert_eq!(buf.len(), want.len(), "round {round} path {p}");
+                let same = buf.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(same, "round {round} path {p}: pooled != allocating");
+            }
+        }
+        assert!(pool.stats().hits > 0, "later rounds must reuse pooled buffers");
+    }
+
+    #[test]
     fn mixture_params_grows_with_k() {
         let m = manifest();
         let small = Topology::build(&m, &TopologySpec::grid(vec![2, 2])).mixture_params();

@@ -20,6 +20,7 @@ use crate::info;
 use crate::optim::OuterAccumulator;
 use crate::runtime::engine::Engine;
 use crate::topology::{ModuleId, ModuleStore, Topology};
+use crate::util::kernels;
 use crate::util::threadpool::parallel_map;
 
 /// Module-space AdamW state.
@@ -33,6 +34,8 @@ pub struct AdamState {
 /// for matrices; the decay mask is handled by passing `wd` per call site
 /// (module granularity: modules contain both matrices and vectors, so the
 /// sync trainer applies decay with the same per-leaf mask as the HLO).
+/// Delegates to the fused chunked kernel, which is bit-identical to the
+/// original per-element loop (see `util::kernels` property tests).
 #[allow(clippy::too_many_arguments)]
 pub fn adamw_update(
     theta: &mut [f32],
@@ -46,13 +49,9 @@ pub fn adamw_update(
     eps: f32,
     wd: f32,
 ) {
-    for i in 0..theta.len() {
-        st.m[i] = b1 * st.m[i] + (1.0 - b1) * g[i];
-        st.v[i] = b2 * st.v[i] + (1.0 - b2) * g[i] * g[i];
-        let mhat = st.m[i] / (1.0 - b1.powf(step));
-        let vhat = st.v[i] / (1.0 - b2.powf(step));
-        theta[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * decay_mask[i] * theta[i]);
-    }
+    kernels::adamw(
+        theta, &mut st.m, &mut st.v, g, decay_mask, step, lr, b1, b2, eps, wd,
+    );
 }
 
 /// Per-leaf weight-decay mask in theta space, mirroring

@@ -1,0 +1,340 @@
+//! Fused, autovectorizable f32 kernels for the per-phase hot loops
+//! (ISSUE 8 / ROADMAP item 5).
+//!
+//! Every kernel here is **bit-exact** against its `_scalar` reference:
+//! the chaos convergence-equivalence oracles digest module stores and
+//! demand bit-identical f32 trajectories per seed, so the only
+//! transformations allowed are ones that keep each element's arithmetic
+//! literally unchanged — fixed-width chunking of elementwise loops (so
+//! LLVM can keep the bounds checks out of the body and vectorize it) and
+//! hoisting loop-invariant scalars (`powf` bias corrections in AdamW).
+//! Reassociating reductions, reciprocal-multiplying divisions, or FMA
+//! contraction would all change low bits and are deliberately absent.
+//!
+//! The `_scalar` references stay public: the property tests in this
+//! module prove bitwise equality on random sizes (including
+//! non-multiple-of-chunk tails), and `bench_train_step` times fused vs
+//! scalar so the speedup is a measured number, not a claim.
+
+/// Elements per unrolled chunk. 8 f32 lanes = one AVX2 register; the
+/// array conversion below removes bounds checks inside the chunk body.
+const LANES: usize = 8;
+
+/// Nesterov outer step, fused: `v <- mu v + g; p <- p - lr (g + mu v)`.
+/// Uses the *updated* velocity in the parameter update, matching
+/// [`nesterov_scalar`] bit for bit.
+pub fn nesterov_step(params: &mut [f32], vel: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    assert_eq!(params.len(), vel.len());
+    assert_eq!(params.len(), g.len());
+    let main = params.len() - params.len() % LANES;
+    let (pm, pt) = params.split_at_mut(main);
+    let (vm, vt) = vel.split_at_mut(main);
+    let (gm, gt) = g.split_at(main);
+    for ((pc, vc), gc) in pm
+        .chunks_exact_mut(LANES)
+        .zip(vm.chunks_exact_mut(LANES))
+        .zip(gm.chunks_exact(LANES))
+    {
+        let pc: &mut [f32; LANES] = pc.try_into().unwrap();
+        let vc: &mut [f32; LANES] = vc.try_into().unwrap();
+        let gc: &[f32; LANES] = gc.try_into().unwrap();
+        for i in 0..LANES {
+            let v = mu * vc[i] + gc[i];
+            vc[i] = v;
+            pc[i] -= lr * (gc[i] + mu * v);
+        }
+    }
+    for ((p, v), &gi) in pt.iter_mut().zip(vt.iter_mut()).zip(gt) {
+        let vn = mu * *v + gi;
+        *v = vn;
+        *p -= lr * (gi + mu * vn);
+    }
+}
+
+/// Scalar reference for [`nesterov_step`] (the pre-fusion loop).
+pub fn nesterov_scalar(params: &mut [f32], vel: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    assert_eq!(params.len(), vel.len());
+    assert_eq!(params.len(), g.len());
+    for ((p, v), &gi) in params.iter_mut().zip(vel.iter_mut()).zip(g) {
+        *v = mu * *v + gi;
+        *p -= lr * (gi + mu * *v);
+    }
+}
+
+/// Weighted accumulate, fused: `sum[i] += (delta[i] as f64 * w) as f32`.
+/// The widen-to-f64 product then round-to-f32 is the accumulator's
+/// contract (weights are shard sizes, far outside f32-exact range).
+pub fn accumulate(sum: &mut [f32], delta: &[f32], w: f64) {
+    assert_eq!(sum.len(), delta.len());
+    let main = sum.len() - sum.len() % LANES;
+    let (sm, st) = sum.split_at_mut(main);
+    let (dm, dt) = delta.split_at(main);
+    for (sc, dc) in sm.chunks_exact_mut(LANES).zip(dm.chunks_exact(LANES)) {
+        let sc: &mut [f32; LANES] = sc.try_into().unwrap();
+        let dc: &[f32; LANES] = dc.try_into().unwrap();
+        for i in 0..LANES {
+            sc[i] += (dc[i] as f64 * w) as f32;
+        }
+    }
+    for (s, &d) in st.iter_mut().zip(dt) {
+        *s += (d as f64 * w) as f32;
+    }
+}
+
+/// Scalar reference for [`accumulate`].
+pub fn accumulate_scalar(sum: &mut [f32], delta: &[f32], w: f64) {
+    assert_eq!(sum.len(), delta.len());
+    for (s, &d) in sum.iter_mut().zip(delta) {
+        *s += (d as f64 * w) as f32;
+    }
+}
+
+/// `out[i] = src[i] * factor` into a reused buffer (the allocation-free
+/// form of `OuterAccumulator::average`).
+pub fn scale_into(src: &[f32], factor: f32, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(src.len());
+    let main = src.len() - src.len() % LANES;
+    for sc in src[..main].chunks_exact(LANES) {
+        let sc: &[f32; LANES] = sc.try_into().unwrap();
+        let mut block = [0.0f32; LANES];
+        for i in 0..LANES {
+            block[i] = sc[i] * factor;
+        }
+        out.extend_from_slice(&block);
+    }
+    for &s in &src[main..] {
+        out.push(s * factor);
+    }
+}
+
+/// AdamW update, fused: bias corrections `1 - b^step` are hoisted out of
+/// the loop (they are loop-invariant — the scalar reference recomputes
+/// `powf` per element, which costs more than the rest of the update
+/// combined), every per-element op is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw(
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    decay_mask: &[f32],
+    step: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    wd: f32,
+) {
+    assert_eq!(theta.len(), m.len());
+    assert_eq!(theta.len(), v.len());
+    assert_eq!(theta.len(), g.len());
+    assert_eq!(theta.len(), decay_mask.len());
+    let bc1 = 1.0 - b1.powf(step);
+    let bc2 = 1.0 - b2.powf(step);
+    let main = theta.len() - theta.len() % LANES;
+    let (tm, tt) = theta.split_at_mut(main);
+    let (mm, mt) = m.split_at_mut(main);
+    let (vm, vt) = v.split_at_mut(main);
+    let (gm, gt) = g.split_at(main);
+    let (km, kt) = decay_mask.split_at(main);
+    for ((((tc, mc), vc), gc), kc) in tm
+        .chunks_exact_mut(LANES)
+        .zip(mm.chunks_exact_mut(LANES))
+        .zip(vm.chunks_exact_mut(LANES))
+        .zip(gm.chunks_exact(LANES))
+        .zip(km.chunks_exact(LANES))
+    {
+        let tc: &mut [f32; LANES] = tc.try_into().unwrap();
+        let mc: &mut [f32; LANES] = mc.try_into().unwrap();
+        let vc: &mut [f32; LANES] = vc.try_into().unwrap();
+        let gc: &[f32; LANES] = gc.try_into().unwrap();
+        let kc: &[f32; LANES] = kc.try_into().unwrap();
+        for i in 0..LANES {
+            mc[i] = b1 * mc[i] + (1.0 - b1) * gc[i];
+            vc[i] = b2 * vc[i] + (1.0 - b2) * gc[i] * gc[i];
+            let mhat = mc[i] / bc1;
+            let vhat = vc[i] / bc2;
+            tc[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * kc[i] * tc[i]);
+        }
+    }
+    for i in 0..tt.len() {
+        mt[i] = b1 * mt[i] + (1.0 - b1) * gt[i];
+        vt[i] = b2 * vt[i] + (1.0 - b2) * gt[i] * gt[i];
+        let mhat = mt[i] / bc1;
+        let vhat = vt[i] / bc2;
+        tt[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * kt[i] * tt[i]);
+    }
+}
+
+/// Scalar reference for [`adamw`] — the original per-element loop with
+/// `powf` recomputed per element, exactly as `train/sync.rs` shipped it.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_scalar(
+    theta: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    decay_mask: &[f32],
+    step: f32,
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    wd: f32,
+) {
+    for i in 0..theta.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        let mhat = m[i] / (1.0 - b1.powf(step));
+        let vhat = v[i] / (1.0 - b2.powf(step));
+        theta[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * decay_mask[i] * theta[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, gens};
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    // Sizes straddling the chunk width: empty, sub-chunk, exact multiples,
+    // and off-by-one tails around them.
+    fn gen_len(rng: &mut crate::util::rng::Rng) -> usize {
+        match rng.gen_range(4) {
+            0 => rng.gen_range(LANES), // 0..LANES: pure tail
+            1 => LANES * (1 + rng.gen_range(4)), // exact multiple
+            2 => LANES * (1 + rng.gen_range(4)) + 1 + rng.gen_range(LANES - 1),
+            _ => 1 + rng.gen_range(1000),
+        }
+    }
+
+    #[test]
+    fn nesterov_fused_is_bit_identical() {
+        forall(
+            "fused nesterov == scalar nesterov (bitwise)",
+            101,
+            60,
+            |rng| {
+                let n = gen_len(rng);
+                (
+                    gens::f32_vec(rng, n, 1.0),
+                    gens::f32_vec(rng, n, 0.5),
+                    gens::f32_vec(rng, n, 0.1),
+                    rng.f64() as f32,
+                    rng.f64() as f32,
+                )
+            },
+            |(p0, v0, g, lr, mu)| {
+                let (mut pa, mut va) = (p0.clone(), v0.clone());
+                let (mut pb, mut vb) = (p0.clone(), v0.clone());
+                nesterov_step(&mut pa, &mut va, g, *lr, *mu);
+                nesterov_scalar(&mut pb, &mut vb, g, *lr, *mu);
+                if bits(&pa) != bits(&pb) || bits(&va) != bits(&vb) {
+                    return Err(format!("diverged at n={}", p0.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn accumulate_fused_is_bit_identical() {
+        forall(
+            "fused accumulate == scalar accumulate (bitwise)",
+            202,
+            60,
+            |rng| {
+                let n = gen_len(rng);
+                (
+                    gens::f32_vec(rng, n, 1.0),
+                    gens::f32_vec(rng, n, 1.0),
+                    1.0 + rng.f64() * 100.0,
+                )
+            },
+            |(s0, d, w)| {
+                let mut a = s0.clone();
+                let mut b = s0.clone();
+                accumulate(&mut a, d, *w);
+                accumulate_scalar(&mut b, d, *w);
+                if bits(&a) != bits(&b) {
+                    return Err(format!("diverged at n={}", s0.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn scale_into_is_bit_identical_and_reuses_buffer() {
+        forall(
+            "scale_into == map-collect scale (bitwise)",
+            303,
+            60,
+            |rng| (gens::f32_vec(rng, gen_len(rng), 2.0), rng.f64() as f32),
+            |(src, factor)| {
+                let want: Vec<f32> = src.iter().map(|&s| s * factor).collect();
+                let mut out = vec![7.0f32; 3]; // dirty, wrong-sized buffer
+                scale_into(src, *factor, &mut out);
+                if bits(&out) != bits(&want) {
+                    return Err(format!("diverged at n={}", src.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn adamw_fused_is_bit_identical() {
+        forall(
+            "fused adamw == scalar adamw (bitwise)",
+            404,
+            40,
+            |rng| {
+                let n = gen_len(rng);
+                let mask: Vec<f32> = (0..n).map(|_| (rng.gen_range(2)) as f32).collect();
+                (
+                    gens::f32_vec(rng, n, 1.0),
+                    gens::f32_vec(rng, n, 0.1),
+                    (0..n)
+                        .map(|_| rng.normal_f32(0.0, 0.1).abs())
+                        .collect::<Vec<f32>>(),
+                    gens::f32_vec(rng, n, 0.5),
+                    mask,
+                    1.0 + rng.gen_range(500) as f32,
+                )
+            },
+            |(t0, m0, v0, g, mask, step)| {
+                let (mut ta, mut ma, mut va) = (t0.clone(), m0.clone(), v0.clone());
+                let (mut tb, mut mb, mut vb) = (t0.clone(), m0.clone(), v0.clone());
+                adamw(
+                    &mut ta, &mut ma, &mut va, g, mask, *step, 1e-3, 0.9, 0.999, 1e-8, 0.1,
+                );
+                adamw_scalar(
+                    &mut tb, &mut mb, &mut vb, g, mask, *step, 1e-3, 0.9, 0.999, 1e-8, 0.1,
+                );
+                if bits(&ta) != bits(&tb) || bits(&ma) != bits(&mb) || bits(&va) != bits(&vb) {
+                    return Err(format!("diverged at n={} step={step}", t0.len()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tail_only_and_empty_inputs() {
+        // Degenerate shapes the chunked split must handle: 0 and < LANES.
+        for n in [0usize, 1, LANES - 1, LANES, LANES + 1] {
+            let g: Vec<f32> = (0..n).map(|i| i as f32 * 0.25 - 1.0).collect();
+            let (mut pa, mut va) = (vec![1.0f32; n], vec![0.5f32; n]);
+            let (mut pb, mut vb) = (vec![1.0f32; n], vec![0.5f32; n]);
+            nesterov_step(&mut pa, &mut va, &g, 0.7, 0.9);
+            nesterov_scalar(&mut pb, &mut vb, &g, 0.7, 0.9);
+            assert_eq!(bits(&pa), bits(&pb), "n={n}");
+            assert_eq!(bits(&va), bits(&vb), "n={n}");
+        }
+    }
+}

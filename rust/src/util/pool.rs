@@ -1,0 +1,200 @@
+//! Thread-safe buffer pool: a bounded free-list of `Vec<T>` so
+//! steady-state phases and serving reuse allocations instead of churning
+//! the allocator once per module per phase (ISSUE 8 / ROADMAP item 5).
+//!
+//! Ownership rule (see DESIGN.md "Hot path & memory"): a [`PooledBuf`]
+//! owns its `Vec` for its whole lifetime and returns it to the pool on
+//! drop — cleared, capacity intact. Buffers never alias, and the pool
+//! never hands the same `Vec` to two takers, so pooled code is exactly as
+//! data-race-free as the allocating code it replaces. Retention is
+//! bounded (`max_retained`) so a burst of large buffers can't pin memory
+//! forever; beyond the bound, drops fall through to the allocator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Free-list of reusable `Vec<T>` buffers. Cheap to share via `Arc`.
+#[derive(Debug)]
+pub struct Pool<T> {
+    free: Mutex<Vec<Vec<T>>>,
+    max_retained: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Take/return counters, for tests asserting steady-state reuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Takes served from the free-list.
+    pub hits: u64,
+    /// Takes that had to allocate a fresh `Vec`.
+    pub misses: u64,
+    /// Buffers currently parked in the free-list.
+    pub idle: usize,
+}
+
+impl<T> Pool<T> {
+    /// A pool retaining at most `max_retained` idle buffers.
+    pub fn new(max_retained: usize) -> Arc<Self> {
+        Arc::new(Pool {
+            free: Mutex::new(Vec::new()),
+            max_retained,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// Take a buffer with at least `cap` capacity (empty, len 0). Served
+    /// from the free-list when possible; the returned guard gives the
+    /// buffer back on drop. Associated fn (not a method) because the
+    /// guard must hold its own `Arc` handle to the pool.
+    pub fn take(pool: &Arc<Self>, cap: usize) -> PooledBuf<T> {
+        let reused = pool.free.lock().unwrap().pop();
+        let mut buf = match reused {
+            Some(b) => {
+                pool.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                pool.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        if buf.capacity() < cap {
+            buf.reserve(cap - buf.len());
+        }
+        PooledBuf {
+            buf: Some(buf),
+            pool: Arc::clone(pool),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            idle: self.free.lock().unwrap().len(),
+        }
+    }
+
+    fn put_back(&self, mut buf: Vec<T>) {
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_retained {
+            free.push(buf);
+        }
+        // else: drop, letting the allocator reclaim it (bounded retention).
+    }
+}
+
+impl<T> Default for Pool<T> {
+    fn default() -> Self {
+        Pool {
+            free: Mutex::new(Vec::new()),
+            max_retained: 64,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+}
+
+/// RAII guard over a pooled `Vec<T>`; derefs to the `Vec` so call sites
+/// read like plain vector code. Returns the buffer on drop.
+#[derive(Debug)]
+pub struct PooledBuf<T> {
+    buf: Option<Vec<T>>,
+    pool: Arc<Pool<T>>,
+}
+
+impl<T> PooledBuf<T> {
+    /// Detach the buffer from the pool (it will NOT be returned).
+    pub fn into_inner(mut self) -> Vec<T> {
+        self.buf.take().expect("buffer already detached")
+    }
+}
+
+impl<T> std::ops::Deref for PooledBuf<T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        self.buf.as_ref().expect("buffer already detached")
+    }
+}
+
+impl<T> std::ops::DerefMut for PooledBuf<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        self.buf.as_mut().expect("buffer already detached")
+    }
+}
+
+impl<T> Drop for PooledBuf<T> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.pool.put_back(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_reuses_capacity() {
+        let pool: Arc<Pool<f32>> = Pool::new(8);
+        let cap_after_first;
+        {
+            let mut b = Pool::take(&pool, 1000);
+            b.resize(1000, 1.0f32);
+            cap_after_first = b.capacity();
+        } // returned
+        for _ in 0..10 {
+            let b = Pool::take(&pool, 1000);
+            assert!(b.is_empty(), "pooled buffer must come back cleared");
+            assert!(b.capacity() >= cap_after_first, "capacity must survive");
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses, 1, "only the first take allocates");
+        assert_eq!(s.hits, 10);
+        assert_eq!(s.idle, 1);
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let pool: Arc<Pool<u8>> = Pool::new(2);
+        let bufs: Vec<_> = (0..5).map(|_| Pool::take(&pool, 16)).collect();
+        drop(bufs);
+        assert_eq!(pool.stats().idle, 2, "free-list capped at max_retained");
+    }
+
+    #[test]
+    fn into_inner_detaches() {
+        let pool: Arc<Pool<i32>> = Pool::new(4);
+        let mut b = Pool::take(&pool, 4);
+        b.push(42);
+        let v = b.into_inner();
+        assert_eq!(v, vec![42]);
+        assert_eq!(pool.stats().idle, 0, "detached buffer is not returned");
+    }
+
+    #[test]
+    fn concurrent_takes_never_alias() {
+        let pool: Arc<Pool<u64>> = Pool::new(32);
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let pool = Arc::clone(&pool);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    let mut b = Pool::take(&pool, 64);
+                    let tag = t * 1_000_000 + i;
+                    b.resize(64, tag);
+                    assert!(b.iter().all(|&x| x == tag), "aliased buffer");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, 8 * 200);
+    }
+}

@@ -9,7 +9,7 @@ use std::time::Duration;
 
 use dipaco::config::{DilocoConfig, StemPlacement, TopologySpec};
 use dipaco::coordinator::db::CkptRow;
-use dipaco::coordinator::outer::{executor_loop, OuterConfig, OuterIoStats};
+use dipaco::coordinator::outer::{executor_loop, OuterConfig};
 use dipaco::coordinator::queue::TaskQueue;
 use dipaco::coordinator::task::{Task, TrainTask};
 use dipaco::optim::{Nesterov, OuterAccumulator};
@@ -427,7 +427,7 @@ fn prop_random_fault_delivery_never_double_accumulates() {
                 let cfg = OuterConfig {
                     diloco: DilocoConfig::default(),
                     shard_sizes: vec![1; topo.paths],
-                    io: OuterIoStats::default(),
+                    ..Default::default()
                 };
                 let mut opt = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
                 let (tx, rx) = channel();
