@@ -7,7 +7,7 @@
 PYTHON ?= python3
 PRESETS ?= test path large
 
-.PHONY: artifacts build test bench bench-ckpt bench-serve bench-train bench-assembly bench-outer bench-all chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
+.PHONY: artifacts build test bench bench-ckpt bench-serve bench-train bench-assembly bench-outer bench-stream bench-all chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
 
 artifacts:
 	@for p in $(PRESETS); do \
@@ -47,9 +47,15 @@ bench-assembly:
 bench-outer:
 	cargo bench --bench bench_outer_opt
 
+# Streaming outer sync: published bytes per delta codec (f32/bf16/int8,
+# int8 must be >= 3.5x smaller), codec encode/decode throughput, and the
+# last-publish -> last-applied exchange-window gap, serial vs staggered.
+bench-stream:
+	cargo bench --bench bench_stream
+
 # Every bench, then merge the per-bench BENCH_*.json baselines into
 # results/bench/BENCH_summary.json.
-bench-all: bench-train bench-ckpt bench-assembly bench-serve bench-outer
+bench-all: bench-train bench-ckpt bench-assembly bench-serve bench-outer bench-stream
 	cargo run --release -- bench-summary
 
 # Chaos harness (DESIGN.md "Failure model"): named fault-injection

@@ -1,0 +1,260 @@
+//! Streaming outer sync bench (DESIGN.md "Streaming outer sync"):
+//!
+//! 1. **Wire bytes per codec** — the same per-module path deltas encoded
+//!    as f32 / bf16 / int8-quantized sections; int8 must cut published
+//!    bytes by >= 3.5x vs f32 (header + section overhead included);
+//! 2. **Codec throughput** — encode (with error-feedback residual) and
+//!    decode rates for each codec;
+//! 3. **Exchange window** — the last-publish -> last-applied gap. Serial
+//!    publication leaves ALL read/decode/reduce/apply work after the
+//!    final row lands; staggered per-module-group publication overlaps
+//!    everything but the final groups with inner training, so the gap
+//!    shrinks by ~the group count.
+//!
+//! CSV lands in `results/bench/bench_stream.csv`, baselines in
+//! `results/bench/BENCH_stream.json` (merged by `make bench-all`).
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use dipaco::benchkit::{header, Bencher};
+use dipaco::config::{DeltaCodec, TopologySpec};
+use dipaco::optim::{Nesterov, OuterAccumulator};
+use dipaco::params::checkpoint::{decode_delta_into, encode_delta_feedback, Checkpoint, SectionReader};
+use dipaco::params::manifest::Manifest;
+use dipaco::topology::{ModuleId, Topology};
+use dipaco::util::json::Json;
+use dipaco::util::rng::Rng;
+
+/// Synthetic manifest with `blocks` transformer blocks at width `d`
+/// (no artifacts needed).
+fn synthetic_manifest(d: usize, blocks: usize) -> Manifest {
+    let mut leaves = Vec::new();
+    let mut off = 0usize;
+    let mut push = |name: String, shape: Vec<usize>, off: &mut usize| {
+        let size: usize = shape.iter().product();
+        leaves.push(format!(
+            r#"{{"name":"{name}","offset":{off},"size":{size},"shape":[{}]}}"#,
+            shape.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",")
+        ));
+        *off += size;
+    };
+    push("embed.tok".into(), vec![256, d], &mut off);
+    push("embed.pos".into(), vec![256, d], &mut off);
+    for i in 0..blocks {
+        push(format!("block{i}.attn.wq"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wk"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wv"), vec![d, d], &mut off);
+        push(format!("block{i}.attn.wo"), vec![d, d], &mut off);
+        push(format!("block{i}.mlp.w1"), vec![d, 4 * d], &mut off);
+        push(format!("block{i}.mlp.w2"), vec![4 * d, d], &mut off);
+    }
+    push("head.w".into(), vec![d, 256], &mut off);
+    let text = format!(
+        r#"{{"preset":"bench","config":{{"vocab":256,"d_model":{d},"n_layers":{blocks},
+          "n_heads":4,"d_ff":{f},"seq_train":128,"seq_eval":256,"batch":8,"prefix":32,"d_head":16}},
+          "total_params":{off},"leaves":[{ls}],"entrypoints":[]}}"#,
+        f = 4 * d,
+        ls = leaves.join(",")
+    );
+    Manifest::from_json(&Json::parse(&text).unwrap()).unwrap()
+}
+
+/// Save one group-row file: each module's delta encoded with `codec`.
+fn save_group_row(
+    topo: &Topology,
+    codec: DeltaCodec,
+    group: &[ModuleId],
+    before: &[f32],
+    after: &[f32],
+    file: &std::path::Path,
+) {
+    let mut delta = Vec::new();
+    let mut ck = Checkpoint::new();
+    for &m in group {
+        topo.module_delta_into(m, before, after, &mut delta);
+        let (wire, _res) = encode_delta_feedback(codec, &delta);
+        ck = ck.with(&m.delta_section(), wire);
+    }
+    ck.save(file).unwrap();
+}
+
+fn main() {
+    println!("streaming outer sync bench: codec bytes + exchange-window gap\n");
+    header();
+    let dir = std::env::temp_dir().join(format!("dipaco-bench-stream-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut csv = vec!["part,variant,groups,mean_s,bytes".to_string()];
+    let mut summary: Vec<(&str, Json)> = Vec::new();
+
+    let man = synthetic_manifest(64, 8);
+    let topo = Topology::build(&man, &TopologySpec::grid(vec![4, 4]));
+    let mut rng = Rng::new(0);
+    let theta: Vec<f32> = (0..man.total_params).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+    let after: Vec<f32> = theta
+        .iter()
+        .map(|&x| 0.995 * x - 0.01 * rng.normal_f32(0.0, 1.0))
+        .collect();
+
+    // ---- part 1+2: wire bytes and codec throughput on path 0's deltas
+    let modules = topo.modules_of_path(0);
+    let mut deltas: Vec<Vec<f32>> = Vec::new();
+    for &m in &modules {
+        let mut d = Vec::new();
+        topo.module_delta_into(m, &theta, &after, &mut d);
+        deltas.push(d);
+    }
+    let mut wire_bytes: HashMap<&str, u64> = HashMap::new();
+    for codec in [DeltaCodec::F32, DeltaCodec::Bf16, DeltaCodec::Int8] {
+        let file = dir.join(format!("path0.{codec}.dpc"));
+        save_group_row(&topo, codec, &modules, &theta, &after, &file);
+        let bytes = std::fs::metadata(&file).unwrap().len();
+        wire_bytes.insert(codec.as_str(), bytes);
+
+        let r = Bencher::new(&format!("{codec} encode + residual (path 0)"))
+            .runs(10, 100)
+            .run(|| {
+                for d in &deltas {
+                    let (wire, res) = encode_delta_feedback(codec, d);
+                    std::hint::black_box((wire.len(), res.len()));
+                }
+            });
+        csv.push(format!("codec_encode,{codec},1,{:.9},{bytes}", r.mean_s));
+
+        let mut words: Vec<f32> = Vec::new();
+        let mut out: Vec<f32> = Vec::new();
+        let r = Bencher::new(&format!("{codec} decode (mmap read + dequant)"))
+            .runs(10, 100)
+            .run(|| {
+                let mut rd = SectionReader::open_mapped(&file).unwrap();
+                for m in &modules {
+                    rd.read_into(&m.delta_section(), &mut words).unwrap();
+                    decode_delta_into(codec, &words, &mut out).unwrap();
+                    std::hint::black_box(out.len());
+                }
+            });
+        csv.push(format!("codec_decode,{codec},1,{:.9},{bytes}", r.mean_s));
+        println!();
+    }
+    let f32_bytes = wire_bytes["f32"];
+    let int8_bytes = wire_bytes["int8"];
+    let reduction = f32_bytes as f64 / int8_bytes.max(1) as f64;
+    summary.push(("wire_bytes_f32", Json::num(f32_bytes as f64)));
+    summary.push(("wire_bytes_bf16", Json::num(wire_bytes["bf16"] as f64)));
+    summary.push(("wire_bytes_int8", Json::num(int8_bytes as f64)));
+    summary.push(("int8_bytes_reduction", Json::num(reduction)));
+    println!(
+        "published bytes per path row: f32 {f32_bytes}, bf16 {}, int8 {int8_bytes} \
+         ({reduction:.2}x smaller than f32)",
+        wire_bytes["bf16"]
+    );
+    assert!(
+        reduction >= 3.5,
+        "int8 wire must cut bytes >= 3.5x vs f32, got {reduction:.2}x"
+    );
+
+    // ---- part 3: exchange window. Every path publishes its delta split
+    // into `groups` rows; only the FINAL group of each path lands after
+    // inner training ends, so the post-last-publish gap is the time to
+    // read/decode/reduce/apply just those rows (plus the modules' outer
+    // steps). groups=1 is the serial baseline: the whole exchange sits in
+    // the window.
+    let codec = DeltaCodec::F32;
+    let mut gaps: Vec<(usize, f64, u64)> = Vec::new();
+    for groups in [1usize, 3] {
+        // stage the rows: (path, gid, file, modules)
+        let mut rows: Vec<(usize, usize, std::path::PathBuf, Vec<ModuleId>)> = Vec::new();
+        for p in 0..topo.paths {
+            let gs = topo.publish_groups(p, groups);
+            for (gid, g) in gs.iter().enumerate() {
+                let file = dir.join(format!("win-p{p}-g{gid}-of{groups}.dpc"));
+                save_group_row(&topo, codec, g, &theta, &after, &file);
+                rows.push((p, gid, file, g.clone()));
+            }
+        }
+        let last_gid = groups.min(modules.len()) - 1;
+        let window_bytes: u64 = rows
+            .iter()
+            .filter(|(_, gid, _, _)| *gid == last_gid)
+            .map(|(_, _, f, _)| std::fs::metadata(f).unwrap().len())
+            .sum();
+
+        let base: HashMap<ModuleId, Vec<f32>> = topo
+            .all_modules()
+            .iter()
+            .map(|&m| (m, vec![0.0f32; topo.levels[m.level].size]))
+            .collect();
+        let mut words: Vec<f32> = Vec::new();
+        let mut delta: Vec<f32> = Vec::new();
+        let mut avg: Vec<f32> = Vec::new();
+        let (warmup, iters) = (3, 30);
+        let mut total = 0.0f64;
+        for it in 0..warmup + iters {
+            let mut accs: HashMap<ModuleId, OuterAccumulator> = base
+                .iter()
+                .map(|(&m, v)| (m, OuterAccumulator::new(v.len())))
+                .collect();
+            let mut params = base.clone();
+            let mut opt = Nesterov::new(0.7, 0.9);
+            // rows before the final group arrive DURING inner training —
+            // their cost overlaps compute and stays out of the window
+            for (_, _, file, mods) in rows.iter().filter(|(_, g, _, _)| *g != last_gid) {
+                let mut rd = SectionReader::open_mapped(file).unwrap();
+                for m in mods {
+                    rd.read_into(&m.delta_section(), &mut words).unwrap();
+                    decode_delta_into(codec, &words, &mut delta).unwrap();
+                    accs.get_mut(m).unwrap().add(&delta, 1.0);
+                }
+            }
+            // the window: final rows land, remaining reduce + apply runs
+            let t0 = Instant::now();
+            for (_, _, file, mods) in rows.iter().filter(|(_, g, _, _)| *g == last_gid) {
+                let mut rd = SectionReader::open_mapped(file).unwrap();
+                for m in mods {
+                    rd.read_into(&m.delta_section(), &mut words).unwrap();
+                    decode_delta_into(codec, &words, &mut delta).unwrap();
+                    accs.get_mut(m).unwrap().add(&delta, 1.0);
+                }
+            }
+            for (&m, acc) in &accs {
+                acc.average_into(&mut avg);
+                opt.step(m, params.get_mut(&m).unwrap(), &avg);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            std::hint::black_box(&params);
+            if it >= warmup {
+                total += dt;
+            }
+        }
+        let mean = total / iters as f64;
+        println!(
+            "exchange window, {groups} group(s): {:.3} ms gap, {window_bytes} bytes in window",
+            mean * 1e3
+        );
+        csv.push(format!("exchange_window,gap,{groups},{mean:.9},{window_bytes}"));
+        gaps.push((groups, mean, window_bytes));
+    }
+    let (serial, staggered) = (&gaps[0], &gaps[1]);
+    let shrink = serial.1 / staggered.1.max(1e-12);
+    summary.push(("gap_serial_s", Json::num(serial.1)));
+    summary.push(("gap_staggered_s", Json::num(staggered.1)));
+    summary.push(("stagger_gap_shrink", Json::num(shrink)));
+    summary.push(("window_bytes_serial", Json::num(serial.2 as f64)));
+    summary.push(("window_bytes_staggered", Json::num(staggered.2 as f64)));
+    println!(
+        "\nlast-publish -> last-applied gap: serial {:.3} ms vs staggered {:.3} ms \
+         ({shrink:.2}x smaller window)",
+        serial.1 * 1e3,
+        staggered.1 * 1e3
+    );
+
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    let out = bench_dir.join("bench_stream.csv");
+    std::fs::create_dir_all(&bench_dir).unwrap();
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("csv: {}", out.display());
+    let json_out = bench_dir.join("BENCH_stream.json");
+    dipaco::metrics::write_summary(&json_out, summary).unwrap();
+    println!("summary: {}", json_out.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -41,6 +41,28 @@ pub fn store_digest(topo: &Topology, store: &ModuleStore) -> u64 {
     (b << 32) | a
 }
 
+/// Largest elementwise |a - b| across all modules. The bounded-divergence
+/// oracle for lossy codecs: quantization moves bytes, error feedback
+/// bounds how far, and this measures the realized bound. Length mismatch
+/// returns infinity (structurally different stores never pass).
+pub fn max_abs_divergence(topo: &Topology, a: &ModuleStore, b: &ModuleStore) -> f64 {
+    let mut worst: f64 = 0.0;
+    for m in topo.all_modules() {
+        let (xs, ys) = (a.get(m), b.get(m));
+        if xs.len() != ys.len() {
+            return f64::INFINITY;
+        }
+        for (x, y) in xs.iter().zip(ys) {
+            let d = (*x as f64 - *y as f64).abs();
+            if !d.is_finite() {
+                return f64::INFINITY;
+            }
+            worst = worst.max(d);
+        }
+    }
+    worst
+}
+
 /// First bitwise difference between two stores, human-readable.
 pub fn first_divergence(topo: &Topology, a: &ModuleStore, b: &ModuleStore) -> Option<String> {
     for m in topo.all_modules() {
@@ -63,6 +85,11 @@ pub enum Verdict {
     /// Faulted run finished and its store is bit-identical to the
     /// reference — the coordinator absorbed every fault.
     ConvergedIdentical,
+    /// Faulted run finished within the scenario's divergence tolerance
+    /// (lossy-codec scenarios, where bitwise identity is not the
+    /// contract but bounded drift is). `max_abs` is the realized worst
+    /// elementwise gap.
+    ConvergedBounded { max_abs: f64 },
     /// The plan contained an unrecoverable fault (checkpoint corruption)
     /// and the run aborted with a structured error, as it must.
     AbortedLoudly { error: String },
@@ -97,7 +124,9 @@ impl ChaosReport {
     pub fn is_pass(&self) -> bool {
         matches!(
             self.verdict,
-            Verdict::ConvergedIdentical | Verdict::AbortedLoudly { .. }
+            Verdict::ConvergedIdentical
+                | Verdict::ConvergedBounded { .. }
+                | Verdict::AbortedLoudly { .. }
         )
     }
 
@@ -108,6 +137,10 @@ impl ChaosReport {
             Verdict::ConvergedIdentical => {
                 Json::obj(vec![("kind", Json::str("converged-identical"))])
             }
+            Verdict::ConvergedBounded { max_abs } => Json::obj(vec![
+                ("kind", Json::str("converged-bounded")),
+                ("max_abs", Json::num(*max_abs)),
+            ]),
             Verdict::AbortedLoudly { error } => Json::obj(vec![
                 ("kind", Json::str("aborted-loudly")),
                 ("error", Json::str(error.clone())),
@@ -176,6 +209,22 @@ pub fn run_scenario_vs(
     reference: &SimSpec,
     plan: &FaultPlan,
 ) -> Result<ChaosReport> {
+    run_scenario_vs_tol(name, faulted, reference, plan, None)
+}
+
+/// Like [`run_scenario_vs`] with an explicit divergence tolerance:
+/// `None` demands bitwise identity; `Some(tol)` accepts a finished run
+/// whose worst elementwise gap vs the reference is `<= tol`
+/// ([`Verdict::ConvergedBounded`]) — the oracle for lossy delta codecs,
+/// where the faulted spec deliberately quantizes and only bounded drift
+/// is the contract.
+pub fn run_scenario_vs_tol(
+    name: &str,
+    faulted: &SimSpec,
+    reference: &SimSpec,
+    plan: &FaultPlan,
+    tolerance: Option<f64>,
+) -> Result<ChaosReport> {
     ensure!(
         faulted.seed == reference.seed,
         "faulted and reference specs must share a seed"
@@ -199,11 +248,12 @@ pub fn run_scenario_vs(
     let fault_out = run_sim(faulted, plan, &base.join("faulted"))
         .with_context(|| format!("scenario {name}: faulted run"))?;
 
-    let report = judge(name, faulted, plan, &topo, &ref_out, &fault_out, &base);
+    let report = judge(name, faulted, plan, &topo, &ref_out, &fault_out, &base, tolerance);
     let _ = std::fs::remove_dir_all(&base);
     Ok(report)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn judge(
     name: &str,
     spec: &SimSpec,
@@ -212,6 +262,7 @@ fn judge(
     ref_out: &SimOutcome,
     fault_out: &SimOutcome,
     base: &Path,
+    tolerance: Option<f64>,
 ) -> ChaosReport {
     let expects_abort = plan.expects_abort();
     let (verdict, faulted_digest) = match (&fault_out.error, expects_abort) {
@@ -230,9 +281,26 @@ fn judge(
         (None, true) => (Verdict::UnexpectedSuccess, Some(store_digest(topo, &fault_out.store))),
         (None, false) => {
             let d = store_digest(topo, &fault_out.store);
-            match first_divergence(topo, &ref_out.store, &fault_out.store) {
-                None => (Verdict::ConvergedIdentical, Some(d)),
-                Some(detail) => (Verdict::Diverged { detail }, Some(d)),
+            match tolerance {
+                None => match first_divergence(topo, &ref_out.store, &fault_out.store) {
+                    None => (Verdict::ConvergedIdentical, Some(d)),
+                    Some(detail) => (Verdict::Diverged { detail }, Some(d)),
+                },
+                Some(tol) => {
+                    let max_abs = max_abs_divergence(topo, &ref_out.store, &fault_out.store);
+                    if max_abs <= tol {
+                        (Verdict::ConvergedBounded { max_abs }, Some(d))
+                    } else {
+                        (
+                            Verdict::Diverged {
+                                detail: format!(
+                                    "max |Δ| {max_abs:.3e} exceeds tolerance {tol:.3e}"
+                                ),
+                            },
+                            Some(d),
+                        )
+                    }
+                }
             }
         }
     };
@@ -597,6 +665,37 @@ mod tests {
         assert_ne!(d0, store_digest(&topo, &b));
         let msg = first_divergence(&topo, &a, &b).expect("must spot the flip");
         assert!(msg.contains("bitwise"), "unhelpful divergence message: {msg}");
+    }
+
+    #[test]
+    fn max_abs_divergence_measures_worst_gap_and_bounded_verdict_passes() {
+        let spec = SimSpec::new(3);
+        let topo = sim_topology(&spec);
+        let theta: Vec<f32> = (0..topo.total_params).map(|i| i as f32 * 0.01).collect();
+        let a = ModuleStore::from_base(&topo, &theta);
+        let mut b = a.clone();
+        assert_eq!(max_abs_divergence(&topo, &a, &b), 0.0);
+        let m = topo.all_modules()[0];
+        b.get_mut(m)[1] += 0.5;
+        let d = max_abs_divergence(&topo, &a, &b);
+        assert!((d - 0.5).abs() < 1e-4, "worst gap should be ~0.5, got {d}");
+
+        let rep = ChaosReport {
+            scenario: "unit-bounded".into(),
+            seed: 3,
+            planned: vec![],
+            fired: vec![],
+            unfired: vec![],
+            phases_run: 3,
+            completed: 12,
+            requeues: 0,
+            dead_tasks: 0,
+            reference_digest: 1,
+            faulted_digest: Some(2),
+            verdict: Verdict::ConvergedBounded { max_abs: d },
+        };
+        assert!(rep.is_pass(), "bounded convergence within tolerance is a pass");
+        assert!(rep.to_json().to_string().contains("converged-bounded"));
     }
 
     #[test]

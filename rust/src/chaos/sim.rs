@@ -30,13 +30,15 @@ use anyhow::{Context, Result};
 
 use crate::chaos::injector::{FaultInjector, TaskAction};
 use crate::chaos::plan::FaultPlan;
-use crate::config::{DilocoConfig, TopologySpec};
+use crate::config::{DeltaCodec, DilocoConfig, TopologySpec};
 use crate::coordinator::db::{CheckpointDb, CkptRow};
-use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig};
+use crate::coordinator::outer::{
+    collect_late_contribs, run_phase_outer, shard_modules, LateContrib, OuterConfig,
+};
 use crate::coordinator::queue::TaskQueue;
 use crate::coordinator::task::{Task, TrainTask};
 use crate::optim::Nesterov;
-use crate::params::checkpoint;
+use crate::params::checkpoint::{self, Checkpoint};
 use crate::params::manifest::Manifest;
 use crate::topology::{ModuleId, ModuleStore, Topology};
 use crate::util::json::Json;
@@ -59,6 +61,16 @@ pub struct SimSpec {
     pub topo: TopologySpec,
     pub layers: usize,
     pub d: usize,
+    /// Wire codec for worker delta sections (streaming outer sync).
+    pub codec: DeltaCodec,
+    /// Module groups per path for staggered publication; 0/1 = one
+    /// whole-path row, the pre-streaming layout.
+    pub publish_groups: usize,
+    /// Straggler grace window for the outer executors (0 = wait forever).
+    pub grace_ms: u64,
+    /// `(phase, path)` pairs declared late up front: executors skip their
+    /// rows in-phase and they merge into the NEXT phase's accumulation.
+    pub declared_late: Vec<(usize, usize)>,
 }
 
 impl SimSpec {
@@ -72,6 +84,10 @@ impl SimSpec {
             topo: TopologySpec::grid(vec![2, 2]),
             layers: 4,
             d: 8,
+            codec: DeltaCodec::F32,
+            publish_groups: 0,
+            grace_ms: 0,
+            declared_late: Vec::new(),
         }
     }
 }
@@ -157,31 +173,116 @@ fn sim_run_train(
     topo: &Topology,
     injector: &FaultInjector,
     seed: u64,
+    codec: DeltaCodec,
+    publish_groups: usize,
     t: &TrainTask,
 ) -> Result<()> {
     let before = checkpoint::load_section(&t.ckpt_in, "theta")
         .with_context(|| format!("sim worker loading input for path {}", t.path))?;
     let after = sim_after(seed, t.phase, t.path, &before);
-    // ship one delta section per traversed module, same as the real worker
-    let (ck, modules) = topo.delta_checkpoint(t.path, &before, &after);
-    let ck = ck.with("loss", vec![1.0]);
-    injector.before_publish(t.phase, t.path);
-    ck.save(&t.ckpt_out)?;
-    injector.corrupt_after_write(t.phase, t.path, &t.ckpt_out)?;
-    db.insert(CkptRow {
-        rowid: 0,
-        phase: t.phase,
-        path_id: t.path,
-        kind: "path".into(),
-        file: t.ckpt_out.clone(),
-        step: t.steps,
-        loss: 1.0,
-        modules,
-    });
-    injector.mark_published(t.phase, t.path);
+    let groups = topo.publish_groups(t.path, publish_groups.max(1));
+    let need_residual = codec.is_lossy() || groups.len() > 1;
+    // Residual chain: sim tasks carry no optimizer state (`opt_in` is
+    // None), so the previous phase's residual file is derived from the
+    // run layout. It is a pure function of (seed, phases so far), and
+    // phase t-1's files are immutable once its outer update ran, so
+    // zombie re-executions of this task still write identical bytes.
+    let mut res_in: Option<Checkpoint> = if need_residual && t.phase > 0 {
+        let p = t
+            .ckpt_out
+            .parent()
+            .and_then(Path::parent)
+            .map(|root| {
+                root.join(format!("phase{}", t.phase - 1))
+                    .join(format!("path{}.opt.res.dpc", t.path))
+            })
+            .context("sim task ckpt_out has no phase dir parent")?;
+        Some(
+            Checkpoint::load(&p)
+                .with_context(|| format!("sim worker loading residual {}", p.display()))?,
+        )
+    } else {
+        None
+    };
+    let mut res_out: Vec<(String, Vec<f32>)> = Vec::new();
+    let mut delta: Vec<f32> = Vec::new();
+    let last_gid = groups.len() - 1;
+    for (gid, group) in groups.iter().enumerate() {
+        let last = gid == last_gid;
+        // The sim inner phase is one pure jump, so every group snapshots
+        // the same final theta; staggering here exercises the row
+        // plumbing, not partial movement.
+        let mut ck = Checkpoint::new();
+        let mut modules = Vec::with_capacity(group.len());
+        for &m in group {
+            topo.module_delta_into(m, &before, &after, &mut delta);
+            if let Some(rck) = res_in.as_mut() {
+                let r = rck
+                    .take(&format!("res:{m}"))
+                    .with_context(|| format!("sim residual missing section res:{m}"))?;
+                anyhow::ensure!(
+                    r.len() == delta.len(),
+                    "sim residual res:{m} has {} floats, module expects {}",
+                    r.len(),
+                    delta.len()
+                );
+                for (d, ri) in delta.iter_mut().zip(&r) {
+                    *d += ri;
+                }
+            }
+            let (wire, qres) = checkpoint::encode_delta_feedback(codec, &delta);
+            if need_residual {
+                res_out.push((format!("res:{m}"), qres));
+            }
+            modules.push(m);
+            ck = ck.with(&m.delta_section(), wire);
+        }
+        let (file, kind) = if last {
+            let kind = if gid == 0 {
+                "path".to_string()
+            } else {
+                format!("path:g{gid}")
+            };
+            (t.ckpt_out.clone(), kind)
+        } else {
+            (
+                t.ckpt_out.with_extension(format!("g{gid}.dpc")),
+                format!("path:g{gid}"),
+            )
+        };
+        if last {
+            ck = ck.with("loss", vec![1.0]);
+            injector.before_publish(t.phase, t.path);
+        }
+        ck.save(&file)?;
+        if last {
+            injector.corrupt_after_write(t.phase, t.path, &file)?;
+        }
+        db.insert(CkptRow {
+            rowid: 0,
+            phase: t.phase,
+            path_id: t.path,
+            kind,
+            file,
+            step: t.steps,
+            loss: 1.0,
+            modules,
+        });
+        if last {
+            injector.mark_published(t.phase, t.path);
+        }
+    }
+    if need_residual {
+        let refs: Vec<(&str, &[f32])> = res_out
+            .iter()
+            .map(|(n, d)| (n.as_str(), d.as_slice()))
+            .collect();
+        checkpoint::save_sections(&t.opt_out.with_extension("res.dpc"), &refs)?;
+    }
     Ok(())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn sim_worker_loop(
     queue: &TaskQueue,
     db: &CheckpointDb,
@@ -189,6 +290,8 @@ fn sim_worker_loop(
     injector: &FaultInjector,
     shutdown: &AtomicBool,
     seed: u64,
+    codec: DeltaCodec,
+    publish_groups: usize,
     name: &str,
 ) {
     loop {
@@ -215,7 +318,7 @@ fn sim_worker_loop(
                 }
             }
         }
-        match sim_run_train(db, topo, injector, seed, &t) {
+        match sim_run_train(db, topo, injector, seed, codec, publish_groups, &t) {
             Ok(()) => {
                 queue.complete(lease);
             }
@@ -249,12 +352,24 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
         let injector = Arc::clone(&injector);
         let shutdown = Arc::clone(&shutdown);
         let seed = spec.seed;
+        let codec = spec.codec;
+        let publish_groups = spec.publish_groups;
         let name = format!("sim-{w}");
         workers.push(
             std::thread::Builder::new()
                 .name(name.clone())
                 .spawn(move || {
-                    sim_worker_loop(&queue, &db, &topo, &injector, &shutdown, seed, &name)
+                    sim_worker_loop(
+                        &queue,
+                        &db,
+                        &topo,
+                        &injector,
+                        &shutdown,
+                        seed,
+                        codec,
+                        publish_groups,
+                        &name,
+                    )
                 })
                 .expect("spawn sim worker"),
         );
@@ -264,15 +379,13 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
         loss_reweigh: false,
         ..Default::default()
     };
-    let cfg = OuterConfig {
-        diloco: diloco.clone(),
-        shard_sizes: vec![1; topo.paths],
-        ..Default::default()
-    };
     // Master velocity map: outer momentum belongs to the MODULE, not to
     // any particular executor — re-sharding between phases (executor
     // drop/re-join) must not reset it.
     let mut velocity: HashMap<ModuleId, Vec<f32>> = HashMap::new();
+    // Late-path contributions collected after one phase, merged into the
+    // next phase's accumulation (streaming outer sync's grace semantics).
+    let mut carry: Vec<LateContrib> = Vec::new();
     let (done_tx, _done_rx) = channel();
 
     let mut phases_run = 0usize;
@@ -323,15 +436,33 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
             }
         }
         queue.push_all(tasks);
+        let cfg = OuterConfig {
+            diloco: diloco.clone(),
+            shard_sizes: vec![1; topo.paths],
+            codec: spec.codec,
+            grace: (spec.grace_ms > 0).then(|| Duration::from_millis(spec.grace_ms)),
+            declared_late: spec.declared_late.clone(),
+            carry_in: std::mem::take(&mut carry),
+            ..Default::default()
+        };
         let res = run_phase_outer(&topo, &store, &mut opts, &shards, &cfg, t, &db, &done_tx);
         // merge velocity back regardless of outcome (abort must not lose it)
         for opt in opts {
             velocity.extend(opt.into_velocity());
         }
         match res {
-            Ok(_) => {
+            Ok(report) => {
                 queue.wait_idle(Duration::from_millis(5));
                 phases_run += 1;
+                if t + 1 < spec.phases && !report.late.is_empty() {
+                    match collect_late_contribs(&topo, &db, &cfg, t, &report.late) {
+                        Ok(c) => carry = c,
+                        Err(e) => {
+                            error = Some(format!("{e:#}"));
+                            break;
+                        }
+                    }
+                }
             }
             Err(e) => {
                 error = Some(format!("{e:#}"));

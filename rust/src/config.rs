@@ -510,6 +510,51 @@ impl ServeConfig {
     }
 }
 
+/// Wire codec for `delta:` sections in worker checkpoints (streaming
+/// outer sync). Lossy codecs pair with worker-side error feedback: the
+/// quantization residual is carried into the next phase's delta, so the
+/// information lost per phase is bounded by one quantization step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DeltaCodec {
+    /// Bulk f32 LE — the exact, byte-deterministic default.
+    #[default]
+    F32,
+    /// Round-to-nearest-even truncation to bfloat16 (2 bytes/elem, ~2x).
+    Bf16,
+    /// Per-section absmax-scaled int8 (1 byte/elem, ~4x).
+    Int8,
+}
+
+impl DeltaCodec {
+    pub fn parse(s: &str) -> Option<DeltaCodec> {
+        match s {
+            "f32" => Some(DeltaCodec::F32),
+            "bf16" => Some(DeltaCodec::Bf16),
+            "int8" => Some(DeltaCodec::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeltaCodec::F32 => "f32",
+            DeltaCodec::Bf16 => "bf16",
+            DeltaCodec::Int8 => "int8",
+        }
+    }
+
+    /// Whether decode(encode(x)) can differ from x.
+    pub fn is_lossy(&self) -> bool {
+        !matches!(self, DeltaCodec::F32)
+    }
+}
+
+impl std::fmt::Display for DeltaCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Coordinator runtime settings (paper §3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -528,6 +573,19 @@ pub struct RunConfig {
     pub outer_executors: usize,
     /// Threads for the per-phase path-assembly fan-out (1 = serial).
     pub assembly_threads: usize,
+    /// Wire codec for shipped `delta:` sections.
+    pub delta_codec: DeltaCodec,
+    /// Staggered publication: split a path's modules into this many
+    /// groups and publish each group's delta as soon as its slice of the
+    /// inner steps finishes. 0 or 1 = publish everything at phase end
+    /// (the classic serial exchange window).
+    pub publish_groups: usize,
+    /// Straggler grace window, ms: once a module has at least one
+    /// contribution, an executor waits at most this long past the phase
+    /// deadline for missing paths before declaring them late and applying
+    /// the outer update without them (their deltas merge into the next
+    /// phase). 0 = off: the outer update gates on every path.
+    pub straggler_grace_ms: u64,
     pub seed: u64,
 }
 
@@ -541,6 +599,9 @@ impl Default for RunConfig {
             transfer_delay_ms: 0,
             outer_executors: 2,
             assembly_threads: 4,
+            delta_codec: DeltaCodec::F32,
+            publish_groups: 0,
+            straggler_grace_ms: 0,
             seed: 7,
         }
     }
@@ -627,6 +688,18 @@ mod tests {
             ServeConfig::from_json(&Json::parse(r#"{"breaker":{"window":64}}"#).unwrap()).unwrap();
         assert_eq!(partial.breaker.window, 64);
         assert_eq!(partial.breaker.probes, BreakerConfig::default().probes);
+    }
+
+    #[test]
+    fn delta_codec_parse_roundtrip() {
+        for c in [DeltaCodec::F32, DeltaCodec::Bf16, DeltaCodec::Int8] {
+            assert_eq!(DeltaCodec::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(DeltaCodec::parse("fp8"), None);
+        assert_eq!(DeltaCodec::default(), DeltaCodec::F32);
+        assert!(!DeltaCodec::F32.is_lossy());
+        assert!(DeltaCodec::Bf16.is_lossy());
+        assert!(DeltaCodec::Int8.is_lossy());
     }
 
     #[test]

@@ -91,6 +91,20 @@ impl CheckpointDb {
             .collect()
     }
 
+    /// Rows of `phase` whose kind starts with `prefix`, oldest first.
+    /// Streaming workers publish one row per module group under
+    /// `path:g{i}` alongside (or instead of) a whole-path `path` row;
+    /// `query_prefix(phase, "path")` picks up both without matching
+    /// unrelated kinds like `eval`.
+    pub fn query_prefix(&self, phase: usize, prefix: &str) -> Vec<CkptRow> {
+        let g = self.inner.lock().unwrap();
+        g.rows
+            .iter()
+            .filter(|r| r.phase == phase && r.kind.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
     pub fn lookup(&self, phase: usize, path_id: usize, kind: &str) -> Option<CkptRow> {
         let g = self.inner.lock().unwrap();
         g.index
@@ -208,6 +222,19 @@ mod tests {
         assert_eq!(db.query(0, "path").len(), 2);
         assert!(db.lookup(1, 0, "path").is_some());
         assert!(db.lookup(1, 1, "path").is_none());
+    }
+
+    #[test]
+    fn query_prefix_matches_streamed_group_rows_not_eval() {
+        let db = CheckpointDb::new();
+        db.insert(row(0, 0, "path"));
+        db.insert(row(0, 1, "path:g0"));
+        db.insert(row(0, 1, "path:g1"));
+        db.insert(row(0, 2, "eval"));
+        db.insert(row(1, 3, "path"));
+        let got = db.query_prefix(0, "path");
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|r| r.kind != "eval" && r.phase == 0));
     }
 
     #[test]

@@ -10,6 +10,16 @@
 //! once a module has heard from all `P_{l,e}` of its paths applies the
 //! Nesterov outer update (Algorithm 1 lines 13-14) with norm rescaling.
 //!
+//! Streaming outer sync (DESIGN.md "Streaming outer sync"): workers may
+//! publish per-module-group rows (`kind = "path:g{i}"`) as soon as a
+//! group's inner steps finish, so reduction overlaps the tail of the
+//! inner phase; sections may be quantized under [`DeltaCodec`]; and a
+//! straggler grace window ([`OuterConfig::grace`]) lets a module apply
+//! eagerly with the contributions that made it — every missing
+//! `(path, module)` contribution is *declared late* and handed back so
+//! the phase driver can merge it into the NEXT phase's accumulation
+//! ([`OuterConfig::carry_in`]) instead of gating this one.
+//!
 //! Per-executor I/O is O(bytes of owned modules × paths through them) —
 //! not O(total_params × paths) — which is what lets "the overall model
 //! [be] never materialized in a single location but always split across
@@ -20,15 +30,16 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::DilocoConfig;
+use crate::config::{DeltaCodec, DilocoConfig};
 use crate::coordinator::db::{CheckpointDb, CkptRow};
 use crate::optim::{rescale_factor, Nesterov, OuterAccumulator};
-use crate::params::checkpoint::{Checkpoint, SectionReader};
+use crate::params::checkpoint::{decode_delta_into, Checkpoint, SectionReader};
 use crate::topology::{ModuleId, ModuleStore, Topology};
 use crate::util::pool::{Pool, PooledBuf};
 
@@ -51,7 +62,8 @@ pub fn shard_modules(topo: &Topology, executors: usize) -> Vec<Vec<ModuleId>> {
 /// Shared I/O accounting across a phase's executors: checkpoint sections
 /// fetched and their payload bytes. The owned-sections tests and
 /// `bench_ckpt` assert on these to prove reads scale with module size,
-/// not `total_params`.
+/// not `total_params` — so accounting must be exact on every exit path,
+/// including mid-row read failures.
 #[derive(Debug, Default)]
 pub struct OuterIoStats {
     pub sections_read: AtomicU64,
@@ -67,6 +79,31 @@ impl OuterIoStats {
     }
 }
 
+/// A straggler's contribution carried from the previous phase: applied to
+/// the NEXT phase's accumulation for its module, with the same weight the
+/// executor would have used in its own phase. `delta` is already decoded
+/// (plain f32), so carry is codec-independent.
+#[derive(Debug, Clone)]
+pub struct LateContrib {
+    pub path: usize,
+    pub module: ModuleId,
+    pub delta: Vec<f32>,
+    pub weight: f64,
+}
+
+/// What one phase's outer optimization produced.
+#[derive(Debug)]
+pub struct OuterPhaseReport {
+    /// Modules resolved this phase (every owned module — with or without
+    /// an update).
+    pub modules_updated: usize,
+    /// `(path, module)` contributions that did NOT make this phase's
+    /// quorums — declared-late paths plus grace-window timeouts — sorted.
+    /// The phase driver collects them (see [`collect_late_contribs`]) and
+    /// feeds them into the next phase's [`OuterConfig::carry_in`].
+    pub late: Vec<(usize, ModuleId)>,
+}
+
 /// Configuration shared by all executors of a run.
 #[derive(Default)]
 pub struct OuterConfig {
@@ -78,11 +115,95 @@ pub struct OuterConfig {
     /// Delta-buffer pool shared by the run's executors: steady-state
     /// phases reduce every module without transient allocations.
     pub pool: Arc<Pool<f32>>,
+    /// Wire codec for delta sections (must match what workers encode).
+    pub codec: DeltaCodec,
+    /// Straggler grace window: once armed, an executor that has not
+    /// resolved all owned modules by the deadline applies each unfinished
+    /// module with the contributions that arrived and declares the rest
+    /// late, instead of blocking the phase forever. `None` = wait
+    /// indefinitely (the pre-streaming behavior).
+    pub grace: Option<Duration>,
+    /// `(phase, path)` pairs declared late up front (chaos scenarios, or
+    /// a scheduler that already knows a worker is gone): the path's rows
+    /// are skipped in its phase and its contributions are reported late.
+    pub declared_late: Vec<(usize, usize)>,
+    /// Contributions carried over from the previous phase's stragglers;
+    /// each joins its module's quorum as one extra expected contribution.
+    pub carry_in: Vec<LateContrib>,
+}
+
+impl OuterConfig {
+    fn weight_of(&self, path: usize) -> f64 {
+        if self.diloco.loss_reweigh {
+            self.shard_sizes.get(path).copied().unwrap_or(1).max(1) as f64
+        } else {
+            1.0
+        }
+    }
+}
+
+/// One buffered contribution: (path id, carried-from-previous-phase,
+/// delta, weight). Reduction sorts by `(path, carried)` so the f32
+/// accumulation order is a pure function of the contribution set, never
+/// of arrival order.
+type Contrib = (usize, bool, PooledBuf<f32>, f64);
+
+/// Apply module `m`'s outer update if its buffered contributions meet
+/// `quorum` (normal operation passes the expected count; grace expiry
+/// passes whatever arrived). A quorum of zero resolves the module with
+/// NO update — it still counts as done and notifies, so the phase can
+/// complete when every contribution of a module was declared late.
+/// Returns whether the module resolved.
+#[allow(clippy::too_many_arguments)]
+fn try_finish_module(
+    topo: &Topology,
+    store: &Mutex<ModuleStore>,
+    opt: &mut Nesterov,
+    cfg: &OuterConfig,
+    phase: usize,
+    m: ModuleId,
+    quorum: usize,
+    acc: &mut HashMap<ModuleId, Vec<Contrib>>,
+    racc: &mut OuterAccumulator,
+    g: &mut Vec<f32>,
+    done: &mut HashMap<ModuleId, bool>,
+    remaining: &mut usize,
+    done_tx: &Sender<ModuleDone>,
+) -> bool {
+    if done.get(&m) != Some(&false) {
+        return false;
+    }
+    let have = acc.get(&m).map_or(0, |v| v.len());
+    if have < quorum {
+        return false;
+    }
+    if have > 0 {
+        let mut contribs = acc.remove(&m).unwrap();
+        contribs.sort_by_key(|c| (c.0, c.1));
+        let size = contribs[0].2.len();
+        racc.reset(size);
+        for (_, _, d, cw) in &contribs {
+            racc.add(d, *cw);
+        }
+        racc.average_into(g);
+        let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
+        if scale != 1.0 {
+            g.iter_mut().for_each(|x| *x *= scale);
+        }
+        let mut store_g = store.lock().unwrap();
+        opt.step(m, store_g.get_mut(m), g);
+        // `contribs` drops here, returning its buffers to the pool.
+    }
+    done.insert(m, true);
+    *remaining -= 1;
+    let _ = done_tx.send(ModuleDone { phase, module: m });
+    true
 }
 
 /// The executor loop: consumes path-checkpoint rows for `phase`, returns
-/// when all owned modules are updated. Designed to be run on a thread per
-/// executor shard.
+/// when all owned modules are resolved. Designed to be run on a thread
+/// per executor shard. Returns the `(path, module)` contributions that
+/// missed this phase (declared-late paths and grace-window timeouts).
 #[allow(clippy::too_many_arguments)]
 pub fn executor_loop(
     topo: &Topology,
@@ -93,123 +214,216 @@ pub fn executor_loop(
     phase: usize,
     rx: &Receiver<CkptRow>,
     done_tx: &Sender<ModuleDone>,
-) -> Result<()> {
+) -> Result<Vec<(usize, ModuleId)>> {
     if owned.is_empty() {
-        return Ok(());
+        return Ok(Vec::new());
     }
-    // Per-module buffered contributions: (path id, delta, weight). The
-    // f32 accumulation in `OuterAccumulator` is order-sensitive, and under
-    // faults (retries, stragglers, reordered publication) rows arrive in a
-    // run-dependent order — so contributions are buffered and reduced in
-    // path-id order once the quorum is complete, making the outer update
+    let late_set: HashSet<usize> = cfg
+        .declared_late
+        .iter()
+        .filter(|&&(ph, _)| ph == phase)
+        .map(|&(_, p)| p)
+        .collect();
+    // Per-module buffered contributions. The f32 accumulation in
+    // `OuterAccumulator` is order-sensitive, and under faults (retries,
+    // stragglers, reordered publication) rows arrive in a run-dependent
+    // order — so contributions are buffered and reduced in (path,
+    // carried) order once the quorum is complete, making the outer update
     // bit-identical regardless of arrival order. Transient memory is the
     // same O(size x P_le) bytes the accumulator would have read anyway —
     // and the buffers come from (and return to) `cfg.pool`, so after the
     // first phase warms the pool, reduction allocates nothing.
-    let mut acc: HashMap<ModuleId, Vec<(usize, PooledBuf<f32>, f64)>> = HashMap::new();
+    let mut acc: HashMap<ModuleId, Vec<Contrib>> = HashMap::new();
     let mut done: HashMap<ModuleId, bool> = owned.iter().map(|&m| (m, false)).collect();
     // Double-delivery guard: `run_phase_outer` subscribes and then replays
     // existing rows, so a row inserted between the two can arrive twice;
-    // accumulating it twice overshoots `expected` and deadlocks the phase.
-    let mut seen: HashSet<(usize, usize)> = HashSet::new();
-    // Modules with zero expected contributions can't occur: every module
-    // has P_le >= 1 paths by construction.
+    // accumulating it twice overshoots the quorum. Keyed by (path, kind)
+    // because a staggered worker legitimately publishes several rows per
+    // path — one per module group.
+    let mut seen: HashSet<(usize, String)> = HashSet::new();
+    // Expected contributions per owned module: its paths, minus the ones
+    // declared late for this phase, plus carried-over stragglers.
+    let mut expected: HashMap<ModuleId, usize> = HashMap::new();
+    let mut late_out: Vec<(usize, ModuleId)> = Vec::new();
+    for &m in owned {
+        let paths = topo.paths_of_module(m);
+        let late_here = paths.iter().filter(|p| late_set.contains(p)).count();
+        expected.insert(m, topo.paths_through(m) - late_here);
+        // Declared-late contributions are late by fiat, whether or not
+        // the reduced quorum completes — the next phase must pick them up.
+        for p in paths {
+            if late_set.contains(&p) {
+                late_out.push((p, m));
+            }
+        }
+    }
     let mut remaining = owned.len();
     // Quorum-reduction state reused across modules: one accumulator and
     // one averaged-gradient buffer per executor, reset per module.
     let mut racc = OuterAccumulator::new(0);
     let mut g: Vec<f32> = Vec::new();
+    // Wire scratch: sections decode out of this under `cfg.codec`.
+    let mut wire: Vec<f32> = Vec::new();
+    // Seed carried-over contributions, then resolve any module whose
+    // quorum is already satisfiable (fully-carried, or zero expected
+    // after declared-late removal → resolved with no update).
+    for c in &cfg.carry_in {
+        if done.get(&c.module) != Some(&false) {
+            continue; // another shard owns it (or it isn't in this topology)
+        }
+        let mut buf = Pool::take(&cfg.pool, 0);
+        buf.extend_from_slice(&c.delta);
+        acc.entry(c.module).or_default().push((c.path, true, buf, c.weight));
+        *expected.get_mut(&c.module).unwrap() += 1;
+    }
+    for &m in owned {
+        let q = expected[&m];
+        try_finish_module(
+            topo, store, opt, cfg, phase, m, q, &mut acc, &mut racc, &mut g, &mut done,
+            &mut remaining, done_tx,
+        );
+    }
+    // Deadline armed at loop entry: an executor past it resolves
+    // everything it can and declares the rest late.
+    let deadline = cfg.grace.map(|g| Instant::now() + g);
     while remaining > 0 {
-        let row = rx.recv().context("db notification channel closed")?;
-        if row.kind != "path" || row.phase != phase {
+        let row = if let Some(deadline) = deadline {
+            match rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    for &m in owned {
+                        if done.get(&m) != Some(&false) {
+                            continue;
+                        }
+                        // Fresh (non-carried) contributions that arrived;
+                        // every other non-declared path of m is timing-late.
+                        let fresh: HashSet<usize> = acc
+                            .get(&m)
+                            .map(|v| v.iter().filter(|c| !c.1).map(|c| c.0).collect())
+                            .unwrap_or_default();
+                        for p in topo.paths_of_module(m) {
+                            if !late_set.contains(&p) && !fresh.contains(&p) {
+                                late_out.push((p, m));
+                            }
+                        }
+                        let have = acc.get(&m).map_or(0, |v| v.len());
+                        try_finish_module(
+                            topo, store, opt, cfg, phase, m, have, &mut acc, &mut racc,
+                            &mut g, &mut done, &mut remaining, done_tx,
+                        );
+                    }
+                    break;
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    anyhow::bail!("db notification channel closed")
+                }
+            }
+        } else {
+            rx.recv().context("db notification channel closed")?
+        };
+        let streamed = row.kind.starts_with("path:g");
+        if (row.kind != "path" && !streamed) || row.phase != phase {
             continue;
         }
-        if !seen.insert((row.phase, row.path_id)) {
-            continue; // duplicate delivery of this path's checkpoint
+        if late_set.contains(&row.path_id) {
+            continue; // declared late: merges into the NEXT phase instead
         }
-        // Sections we must fetch: owned, unfinished modules this path
-        // traverses. The topology decides; the row's `modules` metadata
-        // must agree — a path row missing a required section would hang
-        // the phase if skipped silently, so fail loudly instead.
-        let wanted: Vec<ModuleId> = topo
-            .modules_of_path(row.path_id)
-            .into_iter()
-            .filter(|m| done.get(m) == Some(&false)) // owned and not finished
-            .collect();
-        if wanted.is_empty() {
-            continue; // nothing of ours in this checkpoint — no file I/O
+        if !seen.insert((row.path_id, row.kind.clone())) {
+            continue; // duplicate delivery of this checkpoint row
         }
-        // Empty metadata = unknown (e.g. a DB reloaded from pre-DPC2
-        // state; nothing in the live pipeline produces it) — probe the
-        // file and let the section read below error loudly if the file
-        // predates the delta-section exchange. Resuming a phase across
-        // the format upgrade is not supported; the failure is explicit,
-        // never a silent wrong answer.
-        if !row.modules.is_empty() {
-            if let Some(missing) = wanted.iter().copied().find(|m| !row.modules.contains(m)) {
+        // Sections we must fetch: owned, unfinished modules this row
+        // carries. For a streamed group row the row's metadata IS the
+        // group (the topology can't know the worker's group split), so
+        // empty metadata there is a hard error; for a whole-path row the
+        // topology decides and the metadata must agree — a path row
+        // missing a required section would hang the phase if skipped
+        // silently, so fail loudly instead.
+        let wanted: Vec<ModuleId> = if streamed {
+            if row.modules.is_empty() {
                 anyhow::bail!(
-                    "checkpoint row (phase {}, path {}) lacks section metadata for owned \
-                     module {missing} — file {}",
+                    "streamed checkpoint row (phase {}, path {}, kind {}) has no module \
+                     metadata — file {}",
                     row.phase,
                     row.path_id,
+                    row.kind,
                     row.file.display()
                 );
             }
-        }
-        let w = if cfg.diloco.loss_reweigh {
-            cfg.shard_sizes.get(row.path_id).copied().unwrap_or(1).max(1) as f64
+            row.modules
+                .iter()
+                .copied()
+                .filter(|m| done.get(m) == Some(&false))
+                .collect()
         } else {
-            1.0
+            let wanted: Vec<ModuleId> = topo
+                .modules_of_path(row.path_id)
+                .into_iter()
+                .filter(|m| done.get(m) == Some(&false)) // owned and not finished
+                .collect();
+            // Empty metadata = unknown (e.g. a DB reloaded from pre-DPC2
+            // state; nothing in the live pipeline produces it) — probe the
+            // file and let the section read below error loudly if the file
+            // predates the delta-section exchange. Resuming a phase across
+            // the format upgrade is not supported; the failure is explicit,
+            // never a silent wrong answer.
+            if !row.modules.is_empty() {
+                if let Some(missing) = wanted.iter().copied().find(|m| !row.modules.contains(m)) {
+                    anyhow::bail!(
+                        "checkpoint row (phase {}, path {}) lacks section metadata for owned \
+                         module {missing} — file {}",
+                        row.phase,
+                        row.path_id,
+                        row.file.display()
+                    );
+                }
+            }
+            wanted
         };
+        if wanted.is_empty() {
+            continue; // nothing of ours in this checkpoint — no file I/O
+        }
+        let w = cfg.weight_of(row.path_id);
         // Zero-copy open: sections are checksummed and decoded straight
         // from the mapped file image (buffered fallback inside).
         let mut reader = SectionReader::open_mapped(&row.file)
             .with_context(|| format!("executor opening {}", row.file.display()))?;
-        for m in wanted {
-            let mut delta = Pool::take(&cfg.pool, 0);
-            reader
-                .read_into(&m.delta_section(), &mut delta)
-                .with_context(|| format!("executor reading {} of {}", m, row.file.display()))?;
-            cfg.io.sections_read.fetch_add(1, Ordering::Relaxed);
-            let expected = topo.paths_through(m);
-            let size = delta.len();
-            let buf = acc.entry(m).or_default();
-            buf.push((row.path_id, delta, w));
-            if buf.len() == expected {
-                let mut contribs = acc.remove(&m).unwrap();
-                contribs.sort_by_key(|&(p, _, _)| p);
-                racc.reset(size);
-                for (_, d, cw) in &contribs {
-                    racc.add(d, *cw);
-                }
-                racc.average_into(&mut g);
-                let scale = rescale_factor(topo, m, cfg.diloco.norm_rescale);
-                if scale != 1.0 {
-                    g.iter_mut().for_each(|x| *x *= scale);
-                }
-                {
-                    let mut store_g = store.lock().unwrap();
-                    opt.step(m, store_g.get_mut(m), &g);
-                }
-                done.insert(m, true);
-                remaining -= 1;
-                let _ = done_tx.send(ModuleDone { phase, module: m });
-                // `contribs` drops here, returning its buffers to the pool.
-            }
-        }
-        // The reader's own counter is authoritative: for a legacy DPC1
-        // fallback it reports the whole-file read, which a per-section
-        // sum would understate.
+        // A legacy DPC1 fallback reads the whole file at open; count it
+        // immediately so no later exit path can lose it. (DPC2 backends
+        // report 0 here and accrue per verified section below.)
         cfg.io
             .payload_bytes_read
             .fetch_add(reader.bytes_read(), Ordering::Relaxed);
+        for m in wanted {
+            // Watermark accounting: take the reader's counter before and
+            // after, and record the delta BEFORE propagating any error —
+            // a mid-row failure must not lose the bytes already verified.
+            let before = reader.bytes_read();
+            let res = reader.read_into(&m.delta_section(), &mut wire);
+            cfg.io
+                .payload_bytes_read
+                .fetch_add(reader.bytes_read() - before, Ordering::Relaxed);
+            res.with_context(|| format!("executor reading {} of {}", m, row.file.display()))?;
+            cfg.io.sections_read.fetch_add(1, Ordering::Relaxed);
+            let mut delta = Pool::take(&cfg.pool, 0);
+            decode_delta_into(cfg.codec, &wire, &mut delta)
+                .with_context(|| format!("executor decoding {} of {}", m, row.file.display()))?;
+            acc.entry(m).or_default().push((row.path_id, false, delta, w));
+            let q = expected[&m];
+            try_finish_module(
+                topo, store, opt, cfg, phase, m, q, &mut acc, &mut racc, &mut g, &mut done,
+                &mut remaining, done_tx,
+            );
+        }
     }
-    Ok(())
+    late_out.sort();
+    late_out.dedup();
+    Ok(late_out)
 }
 
 /// Run one phase's outer optimization with `executors` sharded executor
 /// threads, consuming checkpoints as they appear in `db`. Blocks until
-/// every module is updated; returns the number of modules updated.
+/// every module is resolved (or the grace window expires); returns the
+/// per-phase report including contributions declared late.
 ///
 /// `opts` carries each executor's persistent Nesterov state across phases
 /// (velocity must survive phase boundaries).
@@ -223,24 +437,27 @@ pub fn run_phase_outer(
     phase: usize,
     db: &Arc<CheckpointDb>,
     done_tx: &Sender<ModuleDone>,
-) -> Result<usize> {
+) -> Result<OuterPhaseReport> {
     // Subscribe before replaying existing rows so nothing is missed; rows
     // landing in between may be delivered twice, which `executor_loop`
-    // dedups by (phase, path). Replaying only this phase's rows keeps the
-    // replay O(paths), not O(all rows ever).
+    // dedups by (path, kind). Replaying the "path" prefix picks up both
+    // whole-path rows and streamed group rows ("path:g{i}"), but not
+    // "eval" rows. Replaying only this phase's rows keeps the replay
+    // O(paths), not O(all rows ever).
     let subs: Vec<Receiver<CkptRow>> = shards
         .iter()
         .map(|_| {
             let (tx, rx) = channel();
             db.subscribe(tx.clone());
             // replay rows already present (tasks that finished early)
-            for row in db.query(phase, "path") {
+            for row in db.query_prefix(phase, "path") {
                 let _ = tx.send(row);
             }
             rx
         })
         .collect();
     let total: usize = shards.iter().map(|s| s.len()).sum();
+    let mut late: Vec<(usize, ModuleId)> = Vec::new();
     std::thread::scope(|s| -> Result<()> {
         let mut joins = Vec::new();
         for ((owned, rx), opt) in shards.iter().zip(subs.into_iter()).zip(opts.iter_mut()) {
@@ -252,16 +469,79 @@ pub fn run_phase_outer(
             }));
         }
         for j in joins {
-            j.join().expect("executor panicked")?;
+            late.extend(j.join().expect("executor panicked")?);
         }
         Ok(())
     })?;
-    Ok(total)
+    // Shards own disjoint modules, so the merged list is already unique;
+    // sort so the report is deterministic regardless of shard count.
+    late.sort();
+    Ok(OuterPhaseReport {
+        modules_updated: total,
+        late,
+    })
+}
+
+/// Fetch the deltas a phase declared late, once the phase's rows have all
+/// been published (the phase driver calls this after `wait_idle`, when
+/// every worker — however late — has written its rows). Each becomes a
+/// [`LateContrib`] for the next phase's `carry_in`. Reads are accounted
+/// into `cfg.io` like any other executor read.
+pub fn collect_late_contribs(
+    topo: &Topology,
+    db: &CheckpointDb,
+    cfg: &OuterConfig,
+    phase: usize,
+    late: &[(usize, ModuleId)],
+) -> Result<Vec<LateContrib>> {
+    if late.is_empty() {
+        return Ok(Vec::new());
+    }
+    let rows = db.query_prefix(phase, "path");
+    let mut wire: Vec<f32> = Vec::new();
+    let mut out = Vec::with_capacity(late.len());
+    for &(p, m) in late {
+        // The row that carries this module: a streamed group row listing
+        // it in metadata, or a whole-path row (empty metadata = legacy
+        // probe, same as the executor's rule).
+        let row = rows
+            .iter()
+            .find(|r| {
+                r.path_id == p
+                    && (r.modules.contains(&m) || (r.kind == "path" && r.modules.is_empty()))
+            })
+            .with_context(|| {
+                format!("late path {p}: no published row carries module {m} (phase {phase})")
+            })?;
+        let mut reader = SectionReader::open_mapped(&row.file)
+            .with_context(|| format!("late-merge opening {}", row.file.display()))?;
+        cfg.io
+            .payload_bytes_read
+            .fetch_add(reader.bytes_read(), Ordering::Relaxed);
+        let before = reader.bytes_read();
+        let res = reader.read_into(&m.delta_section(), &mut wire);
+        cfg.io
+            .payload_bytes_read
+            .fetch_add(reader.bytes_read() - before, Ordering::Relaxed);
+        res.with_context(|| format!("late-merge reading {} of {}", m, row.file.display()))?;
+        cfg.io.sections_read.fetch_add(1, Ordering::Relaxed);
+        let mut delta = Vec::new();
+        decode_delta_into(cfg.codec, &wire, &mut delta)
+            .with_context(|| format!("late-merge decoding {} of {}", m, row.file.display()))?;
+        out.push(LateContrib {
+            path: p,
+            module: m,
+            delta,
+            weight: cfg.weight_of(p),
+        });
+    }
+    Ok(out)
 }
 
 /// Naive (non-sharded, non-online) outer update used as the §3.3 baseline
 /// in benches: wait for ALL checkpoints, load each one IN FULL, then
-/// average and update serially.
+/// average and update serially. F32-codec, phase-synchronous only — it is
+/// the baseline the streaming path is measured against.
 pub fn naive_phase_outer(
     topo: &Topology,
     store: &Mutex<ModuleStore>,
@@ -291,11 +571,7 @@ pub fn naive_phase_outer(
             let delta = ck
                 .get(&m.delta_section())
                 .with_context(|| format!("ckpt missing section for module {m}"))?;
-            let w = if cfg.diloco.loss_reweigh {
-                cfg.shard_sizes.get(row.path_id).copied().unwrap_or(1).max(1) as f64
-            } else {
-                1.0
-            };
+            let w = cfg.weight_of(row.path_id);
             acc.add(delta, w);
         }
         if acc.contributions() == 0 {
@@ -360,6 +636,14 @@ mod tests {
             .collect()
     }
 
+    fn assert_stores_close(topo: &Topology, a: &ModuleStore, b: &ModuleStore, tol: f32) {
+        for m in topo.all_modules() {
+            for (x, y) in a.get(m).iter().zip(b.get(m)) {
+                assert!((x - y).abs() < tol, "module {m} diverged: {x} vs {y}");
+            }
+        }
+    }
+
     #[test]
     fn sharding_covers_all_modules() {
         let (topo, _, _) = setup();
@@ -414,10 +698,12 @@ mod tests {
                 db2.insert(r);
             }
         });
-        let n = run_phase_outer(&topo, &store_a, &mut opts, &shards, &cfg, 0, &db, &done_tx)
-            .unwrap();
+        let report =
+            run_phase_outer(&topo, &store_a, &mut opts, &shards, &cfg, 0, &db, &done_tx).unwrap();
         feeder.join().unwrap();
+        let n = report.modules_updated;
         assert_eq!(n, topo.all_modules().len());
+        assert!(report.late.is_empty());
         // every module got a done notification
         let mut dones = 0;
         while done_rx.try_recv().is_ok() {
@@ -427,13 +713,7 @@ mod tests {
 
         let a = store_a.lock().unwrap();
         let b = store_b.lock().unwrap();
-        for m in topo.all_modules() {
-            let va = a.get(m);
-            let vb = b.get(m);
-            for (x, y) in va.iter().zip(vb) {
-                assert!((x - y).abs() < 1e-5, "module {m} diverged: {x} vs {y}");
-            }
-        }
+        assert_stores_close(&topo, &a, &b, 1e-5);
     }
 
     #[test]
@@ -476,7 +756,7 @@ mod tests {
     fn duplicate_deliveries_are_deduped() {
         // Regression test for the subscribe/replay double-delivery bug:
         // a row delivered twice must be accumulated ONCE — before the
-        // dedup, contributions overshot `expected` and the phase hung.
+        // dedup, contributions overshot the quorum and the phase hung.
         let (topo, store, theta) = setup();
         let store_ref = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
         let dir = std::env::temp_dir().join(format!("dipaco-outer3-{}", std::process::id()));
@@ -512,14 +792,7 @@ mod tests {
 
         let a = store.lock().unwrap();
         let b = store_ref.lock().unwrap();
-        for m in topo.all_modules() {
-            for (x, y) in a.get(m).iter().zip(b.get(m)) {
-                assert!(
-                    (x - y).abs() < 1e-6,
-                    "module {m} double-accumulated: {x} vs {y}"
-                );
-            }
-        }
+        assert_stores_close(&topo, &a, &b, 1e-6);
     }
 
     #[test]
@@ -585,5 +858,294 @@ mod tests {
             .sum();
         assert_eq!(total_section_bytes, want_total);
         assert!(total_section_bytes < full_bytes);
+    }
+
+    #[test]
+    fn declared_late_path_skips_phase_and_reports_pairs() {
+        // A declared-late path's rows are skipped, its modules apply at
+        // reduced quorum (== naive over the remaining paths), and every
+        // (late path, module) pair is reported for next-phase carry.
+        let (topo, store, theta) = setup();
+        let store_ref = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
+        let dir = std::env::temp_dir().join(format!("dipaco-outer5-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let rows: Vec<CkptRow> = (0..topo.paths)
+            .map(|p| save_path_ckpt(&dir, &topo, 0, p, &theta, &perturbed_after(&theta, p)))
+            .collect();
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![1; topo.paths],
+            declared_late: vec![(0, 1)],
+            ..Default::default()
+        };
+
+        // reference: naive over everything EXCEPT path 1
+        let dbb = CheckpointDb::new();
+        for r in rows.iter().filter(|r| r.path_id != 1) {
+            dbb.insert(r.clone());
+        }
+        let mut opt_ref = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        naive_phase_outer(&topo, &store_ref, &mut opt_ref, &cfg, 0, &dbb).unwrap();
+
+        // executor gets ALL rows, including the declared-late path's
+        let owned = topo.all_modules();
+        let (tx, rx) = channel();
+        for r in &rows {
+            tx.send(r.clone()).unwrap();
+        }
+        drop(tx);
+        let mut opt = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        let (done_tx, _done_rx) = channel();
+        let late = executor_loop(&topo, &store, &mut opt, &owned, &cfg, 0, &rx, &done_tx).unwrap();
+
+        let mut want: Vec<(usize, ModuleId)> =
+            topo.modules_of_path(1).into_iter().map(|m| (1, m)).collect();
+        want.sort();
+        assert_eq!(late, want);
+        let a = store.lock().unwrap();
+        let b = store_ref.lock().unwrap();
+        assert_stores_close(&topo, &a, &b, 1e-6);
+    }
+
+    #[test]
+    fn grace_expiry_applies_partial_quorum_and_reports_timing_late() {
+        // With a grace window armed and one path never publishing, the
+        // executor resolves every module with the contributions that made
+        // it (== naive over the arrived paths) and reports the missing
+        // (path, module) pairs instead of hanging.
+        let (topo, store, theta) = setup();
+        let store_ref = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
+        let dir = std::env::temp_dir().join(format!("dipaco-outer6-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let straggler = topo.paths - 1;
+        let rows: Vec<CkptRow> = (0..topo.paths)
+            .filter(|&p| p != straggler)
+            .map(|p| save_path_ckpt(&dir, &topo, 0, p, &theta, &perturbed_after(&theta, p)))
+            .collect();
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![1; topo.paths],
+            grace: Some(Duration::from_millis(50)),
+            ..Default::default()
+        };
+
+        let dbb = CheckpointDb::new();
+        for r in &rows {
+            dbb.insert(r.clone());
+        }
+        let mut opt_ref = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        naive_phase_outer(&topo, &store_ref, &mut opt_ref, &cfg, 0, &dbb).unwrap();
+
+        let owned = topo.all_modules();
+        let (tx, rx) = channel();
+        for r in &rows {
+            tx.send(r.clone()).unwrap();
+        }
+        // NOTE: tx stays alive — the executor must exit via the grace
+        // deadline, not via a disconnected channel.
+        let mut opt = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        let (done_tx, done_rx) = channel();
+        let late = executor_loop(&topo, &store, &mut opt, &owned, &cfg, 0, &rx, &done_tx).unwrap();
+        drop(tx);
+
+        let mut want: Vec<(usize, ModuleId)> = topo
+            .modules_of_path(straggler)
+            .into_iter()
+            .map(|m| (straggler, m))
+            .collect();
+        want.sort();
+        assert_eq!(late, want);
+        // every module still resolved (and notified), none hung
+        let mut dones = 0;
+        while done_rx.try_recv().is_ok() {
+            dones += 1;
+        }
+        assert_eq!(dones, topo.all_modules().len());
+        let a = store.lock().unwrap();
+        let b = store_ref.lock().unwrap();
+        assert_stores_close(&topo, &a, &b, 1e-6);
+    }
+
+    #[test]
+    fn carried_contribution_joins_next_phase_quorum() {
+        // A LateContrib carried into phase 1 raises its module's quorum
+        // by one and is reduced in (path, carried) order — verified
+        // against a hand-built accumulation. A carry for a module this
+        // executor does not own is ignored.
+        let (topo, store, theta) = setup();
+        let dir = std::env::temp_dir().join(format!("dipaco-outer7-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = *topo.modules_of_path(2).first().unwrap();
+        let size = topo.levels[m.level].size;
+        let carry_delta: Vec<f32> = (0..size).map(|i| 0.01 * ((i % 5) as f32 - 2.0)).collect();
+        let foreign = *topo
+            .all_modules()
+            .iter()
+            .find(|&&x| x != m)
+            .unwrap();
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![1; topo.paths],
+            carry_in: vec![
+                LateContrib {
+                    path: 2,
+                    module: m,
+                    delta: carry_delta.clone(),
+                    weight: 1.0,
+                },
+                LateContrib {
+                    path: 0,
+                    module: foreign,
+                    delta: vec![0.5; topo.levels[foreign.level].size],
+                    weight: 1.0,
+                },
+            ],
+            ..Default::default()
+        };
+
+        let rows: Vec<CkptRow> = (0..topo.paths)
+            .map(|p| save_path_ckpt(&dir, &topo, 1, p, &theta, &perturbed_after(&theta, p)))
+            .collect();
+        let owned = vec![m];
+        let (tx, rx) = channel();
+        for r in &rows {
+            tx.send(r.clone()).unwrap();
+        }
+        drop(tx); // without the carry the quorum would miss by one and bail here
+        let mut opt = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        let (done_tx, _done_rx) = channel();
+        let late =
+            executor_loop(&topo, &store, &mut opt, &owned, &cfg, 1, &rx, &done_tx).unwrap();
+        assert!(late.is_empty());
+
+        // hand-built reference: fresh contributions in path order, with
+        // the carried one slotted after fresh path 2 ((path, carried) order)
+        let mut entries: Vec<(usize, bool, Vec<f32>)> = topo
+            .paths_of_module(m)
+            .into_iter()
+            .map(|p| {
+                let (ck, _) = topo.delta_checkpoint(p, &theta, &perturbed_after(&theta, p));
+                (p, false, ck.get(&m.delta_section()).unwrap().to_vec())
+            })
+            .collect();
+        entries.push((2, true, carry_delta));
+        entries.sort_by_key(|e| (e.0, e.1));
+        let mut racc = OuterAccumulator::new(0);
+        racc.reset(size);
+        for e in &entries {
+            racc.add(&e.2, 1.0);
+        }
+        let mut g = Vec::new();
+        racc.average_into(&mut g);
+        let scale = rescale_factor(&topo, m, cfg.diloco.norm_rescale);
+        if scale != 1.0 {
+            g.iter_mut().for_each(|x| *x *= scale);
+        }
+        let store_ref = Arc::new(Mutex::new(ModuleStore::from_base(&topo, &theta)));
+        let mut opt_ref = Nesterov::new(cfg.diloco.outer_lr, cfg.diloco.outer_momentum);
+        {
+            let mut sg = store_ref.lock().unwrap();
+            opt_ref.step(m, sg.get_mut(m), &g);
+        }
+        let a = store.lock().unwrap();
+        let b = store_ref.lock().unwrap();
+        for (x, y) in a.get(m).iter().zip(b.get(m)) {
+            assert_eq!(x, y, "carried reduction must be bit-identical to reference");
+        }
+    }
+
+    #[test]
+    fn failed_row_accounts_bytes_already_read() {
+        // Satellite regression: a mid-row section-read failure must not
+        // lose the bytes already verified from that row. The checkpoint
+        // below carries only the FIRST module's section while the row
+        // metadata claims all of them, so the second read errors after
+        // one successful section.
+        let (topo, store, theta) = setup();
+        let dir = std::env::temp_dir().join(format!("dipaco-outer8-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mods = topo.modules_of_path(0);
+        assert!(mods.len() >= 2);
+        let first = mods[0];
+        let (ck_full, modules) = topo.delta_checkpoint(0, &theta, &perturbed_after(&theta, 0));
+        let name = first.delta_section();
+        let data = ck_full.get(&name).unwrap();
+        let file = dir.join("partial.dpc");
+        crate::params::checkpoint::save_sections(&file, &[(&name, data)]).unwrap();
+        let row = CkptRow {
+            rowid: 0,
+            phase: 0,
+            path_id: 0,
+            kind: "path".into(),
+            file,
+            step: 0,
+            loss: 1.0,
+            modules,
+        };
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![1; topo.paths],
+            ..Default::default()
+        };
+        let owned = topo.all_modules();
+        let (tx, rx) = channel();
+        tx.send(row).unwrap();
+        drop(tx);
+        let mut opt = Nesterov::new(0.7, 0.9);
+        let (done_tx, _done_rx) = channel();
+        let err = executor_loop(&topo, &store, &mut opt, &owned, &cfg, 0, &rx, &done_tx)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("executor reading"));
+        let (sections, bytes) = cfg.io.snapshot();
+        assert_eq!(sections, 1, "only the successful read counts as a section");
+        assert_eq!(
+            bytes,
+            4 * topo.levels[first.level].size as u64,
+            "bytes verified before the failure must be accounted"
+        );
+    }
+
+    #[test]
+    fn legacy_dpc1_row_accounts_whole_file_at_open() {
+        // A DPC1 fallback reads the entire file at open; the accounting
+        // must record that immediately (not only after the row's loop),
+        // and per-section watermark deltas add nothing on top.
+        let (topo, store, theta) = setup();
+        let dir = std::env::temp_dir().join(format!("dipaco-outer9-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (ck, modules) = topo.delta_checkpoint(0, &theta, &perturbed_after(&theta, 0));
+        let file = dir.join("legacy.dpc");
+        ck.save_dpc1(&file).unwrap();
+        let file_len = std::fs::metadata(&file).unwrap().len();
+        let row = CkptRow {
+            rowid: 0,
+            phase: 0,
+            path_id: 0,
+            kind: "path".into(),
+            file,
+            step: 0,
+            loss: 1.0,
+            modules,
+        };
+        let cfg = OuterConfig {
+            diloco: DilocoConfig::default(),
+            shard_sizes: vec![1; topo.paths],
+            ..Default::default()
+        };
+        // own just one module so only one section is consumed
+        let owned = vec![topo.modules_of_path(0)[0]];
+        let (tx, rx) = channel();
+        tx.send(row).unwrap();
+        drop(tx);
+        let mut opt = Nesterov::new(0.7, 0.9);
+        let (done_tx, _done_rx) = channel();
+        // the owned module's quorum needs more paths than the one row
+        // sent, so the loop ends on the closed channel — AFTER the row
+        // (and its whole-file legacy read) was processed and accounted
+        let err = executor_loop(&topo, &store, &mut opt, &owned, &cfg, 0, &rx, &done_tx);
+        assert!(err.is_err());
+        let (sections, bytes) = cfg.io.snapshot();
+        assert_eq!(sections, 1);
+        assert_eq!(bytes, file_len, "legacy open accounts the whole file");
     }
 }

@@ -22,7 +22,9 @@ use anyhow::{Context, Result};
 
 use crate::config::{DilocoConfig, RunConfig};
 use crate::coordinator::db::CheckpointDb;
-use crate::coordinator::outer::{run_phase_outer, shard_modules, OuterConfig, OuterIoStats};
+use crate::coordinator::outer::{
+    collect_late_contribs, run_phase_outer, shard_modules, LateContrib, OuterConfig, OuterIoStats,
+};
 use crate::coordinator::queue::TaskQueue;
 use crate::coordinator::task::{Task, TrainTask};
 use crate::coordinator::worker::{WorkerCtx, WorkerPool};
@@ -49,6 +51,9 @@ pub struct PhaseStats {
     /// Payload bytes those fetches served — O(module size × paths-through),
     /// not O(total_params × paths × executors).
     pub outer_bytes_read: u64,
+    /// `(path, module)` contributions that missed this phase's quorums
+    /// (straggler grace window) and were carried into the next phase.
+    pub late_merged: usize,
 }
 
 pub struct DipacoRun {
@@ -79,6 +84,10 @@ pub struct DipacoRun {
     /// Delta-buffer pool for the outer executors, persistent across
     /// phases so steady-state reduction allocates nothing.
     outer_pool: Arc<BufPool<f32>>,
+    /// Straggler contributions declared late by the previous phase,
+    /// waiting to join the next phase's accumulation (streaming outer
+    /// sync's late-merge; empty unless `run.straggler_grace_ms` > 0).
+    pending_carry: Vec<LateContrib>,
     pub stats: Vec<PhaseStats>,
 }
 
@@ -141,6 +150,7 @@ impl DipacoRun {
             opt_files: HashMap::new(),
             assemble_pool: BufPool::new(8),
             outer_pool: BufPool::new(256),
+            pending_carry: Vec::new(),
             stats: Vec::new(),
         })
     }
@@ -214,9 +224,14 @@ impl DipacoRun {
             shard_sizes: self.sharding.sizes(),
             io: OuterIoStats::default(),
             pool: Arc::clone(&self.outer_pool),
+            codec: self.run.delta_codec,
+            grace: (self.run.straggler_grace_ms > 0)
+                .then(|| std::time::Duration::from_millis(self.run.straggler_grace_ms)),
+            declared_late: Vec::new(), // production lateness is timing-based
+            carry_in: std::mem::take(&mut self.pending_carry),
         };
         let (done_tx, _done_rx) = channel();
-        run_phase_outer(
+        let report = run_phase_outer(
             &self.topo,
             &self.store,
             &mut self.outer_opts,
@@ -227,15 +242,34 @@ impl DipacoRun {
             &done_tx,
         )?;
         let outer_update_s = outer_t0.elapsed().as_secs_f64();
-        let (io_sections, io_bytes) = cfg.io.snapshot();
 
-        // drain outstanding eval tasks before closing the phase books
+        // drain outstanding eval tasks before closing the phase books —
+        // by idle, even declared-late workers have published their rows
         self.queue
             .wait_idle(std::time::Duration::from_millis(10));
 
-        let rows = self.db.query(phase, "path");
-        let mean_train_loss =
-            rows.iter().map(|r| r.loss as f64).sum::<f64>() / rows.len().max(1) as f64;
+        // Late-merge: pick up the straggler deltas the executors timed
+        // out on; they join the NEXT phase's accumulation (their reads
+        // count into this phase's I/O, snapshotted below).
+        if !report.late.is_empty() {
+            self.pending_carry =
+                collect_late_contribs(&self.topo, &self.db, &cfg, phase, &report.late)?;
+        }
+        let (io_sections, io_bytes) = cfg.io.snapshot();
+
+        // Mean train loss over final per-path rows: under staggered
+        // publication a path reports several rows ("path:g{i}"), so take
+        // each path's highest-step row (its end-of-phase running mean).
+        let rows = self.db.query_prefix(phase, "path");
+        let mut per_path: HashMap<usize, (usize, f32)> = HashMap::new();
+        for r in &rows {
+            let e = per_path.entry(r.path_id).or_insert((r.step, r.loss));
+            if r.step >= e.0 {
+                *e = (r.step, r.loss);
+            }
+        }
+        let mean_train_loss = per_path.values().map(|&(_, l)| l as f64).sum::<f64>()
+            / per_path.len().max(1) as f64;
         let stats = PhaseStats {
             phase,
             mean_train_loss,
@@ -244,17 +278,19 @@ impl DipacoRun {
             requeues: self.queue.stats().requeues - requeues_before,
             outer_sections_read: io_sections,
             outer_bytes_read: io_bytes,
+            late_merged: report.late.len(),
         };
         info!(
             "phases",
             "phase {phase}: loss={:.4} wall={:.1}s outer={:.2}s requeues={} \
-             exec_io={}sec/{}KiB",
+             exec_io={}sec/{}KiB late={}",
             stats.mean_train_loss,
             stats.wallclock_s,
             stats.outer_update_s,
             stats.requeues,
             stats.outer_sections_read,
-            stats.outer_bytes_read / 1024
+            stats.outer_bytes_read / 1024,
+            stats.late_merged
         );
         self.stats.push(stats.clone());
         Ok(stats)

@@ -334,6 +334,16 @@ impl TaskQueue {
             ("max_attempts", Json::num(self.max_attempts as f64)),
             ("reclaimed", Json::num(g.reclaimed as f64)),
             ("buried", Json::num(g.buried as f64)),
+            // per-task attempt counts: without these a poison task's
+            // dead-letter budget would reset on every server restart
+            ("generations", {
+                let mut gens: Vec<(u64, u64)> =
+                    g.generations.iter().map(|(&id, &n)| (id, n)).collect();
+                gens.sort_unstable();
+                Json::arr(gens.into_iter().map(|(id, n)| {
+                    Json::arr([Json::num(id as f64), Json::num(n as f64)])
+                }))
+            }),
         ])
     }
 
@@ -341,6 +351,7 @@ impl TaskQueue {
     /// in-flight tasks all return to pending (leases don't survive).
     pub fn restore(state: &Json, lease_duration: Duration) -> anyhow::Result<TaskQueue> {
         use crate::coordinator::task::{EvalTask, TrainTask};
+        use anyhow::Context;
         let max_attempts = state
             .get("max_attempts")
             .and_then(|v| v.as_usize())
@@ -371,12 +382,15 @@ impl TaskQueue {
                         .unwrap_or("")
                         .into(),
                 }),
-                _ => Task::Eval(EvalTask {
+                "eval" => Task::Eval(EvalTask {
                     id,
                     phase,
                     path,
                     ckpt: j.req("ckpt")?.as_str().unwrap_or("").into(),
                 }),
+                // A corrupted or future-format checkpoint must not be
+                // silently coerced into an eval task with default fields.
+                _ => anyhow::bail!("unrecognized task kind {kind:?} in queue checkpoint"),
             })
         };
         for key in ["pending", "in_flight"] {
@@ -403,6 +417,18 @@ impl TaskQueue {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(0) as u64;
             g.buried = state.get("buried").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+            // attempt counts survive the restart, so a poison task cannot
+            // mint a fresh max_attempts budget by crashing the server;
+            // pre-generations checkpoints restore with empty counts
+            if let Some(arr) = state.get("generations").and_then(|a| a.as_arr()) {
+                for pair in arr {
+                    let pair = pair.as_arr().context("generations entry not a pair")?;
+                    anyhow::ensure!(pair.len() == 2, "generations entry not a pair");
+                    let id = pair[0].as_usize().context("generations task id")? as u64;
+                    let n = pair[1].as_usize().context("generations count")? as u64;
+                    g.generations.insert(id, n);
+                }
+            }
         }
         Ok(q)
     }
@@ -622,6 +648,49 @@ mod tests {
         let q3 = TaskQueue::restore(&old, Duration::from_secs(5)).unwrap();
         assert_eq!(q3.stats().reclaimed, 0);
         assert_eq!(q3.stats().buried, 0);
+    }
+
+    #[test]
+    fn restore_bails_on_unrecognized_task_kind() {
+        // Regression: the decoder used to coerce ANY unknown kind into an
+        // eval task with default fields — a corrupted checkpoint silently
+        // turned train work into garbage evals.
+        let state = Json::parse(
+            r#"{"pending":[{"kind":"trian","id":1,"phase":0,"path":0,
+                "ckpt":"x.dpc"}],"in_flight":[],"dead":[],
+                "completed":0,"max_attempts":0}"#,
+        )
+        .unwrap();
+        let err = TaskQueue::restore(&state, Duration::from_secs(5)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unrecognized task kind"), "wrong error: {msg}");
+        assert!(msg.contains("trian"), "error must name the bad kind: {msg}");
+    }
+
+    #[test]
+    fn restore_then_bury_respects_prior_attempts() {
+        // Regression: checkpoint_state dropped the per-task generations
+        // map, so a poison task got a fresh max_attempts budget on every
+        // server restart and could churn forever.
+        let q = TaskQueue::with_max_attempts(Duration::from_secs(5), 2);
+        q.push(train_task(1));
+        let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        q.fail(l); // attempt 1 of 2: requeued
+        let state = q.checkpoint_state();
+        let q2 = TaskQueue::restore(&state, Duration::from_secs(5)).unwrap();
+        let (l2, t) = q2.lease("w1", Duration::from_millis(10)).unwrap();
+        assert_eq!(t.id(), 1);
+        assert_eq!(l2.generation, 2, "attempt count must survive the restart");
+        q2.fail(l2); // attempt 2 of 2: buried, NOT requeued
+        assert_eq!(q2.stats().dead, 1, "restart must not reset the dead-letter budget");
+        assert_eq!(q2.stats().requeues, 0);
+        assert!(q2.lease("w1", Duration::from_millis(5)).is_none());
+        // old-format checkpoints (no generations field) start counts empty
+        let old = Json::parse(
+            r#"{"pending":[],"in_flight":[],"dead":[],"completed":0,"max_attempts":0}"#,
+        )
+        .unwrap();
+        assert!(TaskQueue::restore(&old, Duration::from_secs(5)).is_ok());
     }
 
     #[test]

@@ -244,6 +244,36 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
     );
     let mut loss_sum = 0.0f64;
     let tau = mc.tau;
+    // ---- streaming outer sync setup (DESIGN.md "Streaming outer sync") ----
+    // Module groups publish as their inner-step boundary passes; with
+    // publish_groups <= 1 there is one group, published at phase end in
+    // the legacy position (byte-identical output for the f32 codec).
+    let codec = ctx.run.delta_codec;
+    let groups = ctx.topo.publish_groups(t.path, ctx.run.publish_groups.max(1));
+    let staggered = groups.len() > 1;
+    // Residual chain: lossy codecs carry quantization error forward;
+    // staggered publication additionally carries the movement a module
+    // makes AFTER its group's snapshot (it keeps training with the path).
+    let need_residual = codec.is_lossy() || staggered;
+    let mut res_in: Option<Checkpoint> = match (&t.opt_in, need_residual) {
+        (Some(p), true) => {
+            let rp = p.with_extension("res.dpc");
+            Some(Checkpoint::load(&rp).with_context(|| {
+                format!(
+                    "loading delta residual {} for path {} (required when codec={codec} \
+                     or staggered publication is on)",
+                    rp.display(),
+                    t.path
+                )
+            })?)
+        }
+        _ => None, // genesis phase (zero residual), or exact whole-phase f32
+    };
+    // boundary g: publish group g once this many inner steps are done
+    let bounds: Vec<usize> = (1..=groups.len()).map(|g| t.steps * g / groups.len()).collect();
+    let mut published = 0usize;
+    let mut res_out: Vec<(String, Vec<f32>)> = Vec::new();
+    let mut snaps: Vec<(usize, crate::topology::ModuleId, Vec<f32>)> = Vec::new();
     // §Perf A/B (EXPERIMENTS.md): the fused lax.scan path wins when steps
     // are dispatch-bound (tiny models: +8%) but LOSES ~11% at path scale,
     // where the scan's carried-buffer copies outweigh the saved dispatches.
@@ -270,6 +300,16 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
             m = m2;
             v = v2;
             loss_sum += losses.iter().map(|&l| l as f64).sum::<f64>();
+            let done = (chunk + 1) * tau;
+            while published + 1 < groups.len() && bounds[published] <= done {
+                let loss_now = (loss_sum / done as f64) as f32;
+                publish_group(
+                    ctx, t, published, false, &groups[published], &before, &theta,
+                    &mut res_in, &mut res_out, &mut snaps, need_residual, loss_now,
+                    t.start_step + done,
+                )?;
+                published += 1;
+            }
         }
     } else {
         for i in 0..t.steps {
@@ -283,6 +323,15 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
             m = out.m;
             v = out.v;
             loss_sum += out.loss as f64;
+            while published + 1 < groups.len() && bounds[published] <= i + 1 {
+                let loss_now = (loss_sum / (i + 1) as f64) as f32;
+                publish_group(
+                    ctx, t, published, false, &groups[published], &before, &theta,
+                    &mut res_in, &mut res_out, &mut snaps, need_residual, loss_now,
+                    t.start_step + i + 1,
+                )?;
+                published += 1;
+            }
         }
     }
     let mean_loss = (loss_sum / t.steps.max(1) as f64) as f32;
@@ -299,34 +348,36 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
     };
     // Ship one outer-gradient section per traversed module (paper
     // Algorithm 1 line 13, split worker-side): executors fetch only the
-    // sections of modules they own.
-    let (ck, modules) = ctx.topo.delta_checkpoint(t.path, &before, &theta);
-    let ck = ck.with("loss", vec![mean_loss]);
-    // Simulated cross-DC checkpoint transfer (Effingo, paper §3.3).
-    if ctx.run.transfer_delay_ms > 0 {
-        std::thread::sleep(Duration::from_millis(ctx.run.transfer_delay_ms));
+    // sections of modules they own. Any group whose boundary the loop
+    // already passed is published; the FINAL group publishes here, in the
+    // legacy position — with one group this is exactly the old whole-path
+    // checkpoint, byte for byte under the f32 codec.
+    while published < groups.len() {
+        let last = published + 1 == groups.len();
+        publish_group(
+            ctx, t, published, last, &groups[published], &before, &theta, &mut res_in,
+            &mut res_out, &mut snaps, need_residual, mean_loss,
+            t.start_step + t.steps,
+        )?;
+        published += 1;
     }
-    if let Some(inj) = ctx.chaos.as_deref() {
-        inj.before_publish(t.phase, t.path);
-    }
-    ck.save(&t.ckpt_out)?;
-    if let Some(inj) = ctx.chaos.as_deref() {
-        // torn-write simulation: the executor's checksum verification —
-        // not this worker — must detect the damage
-        inj.corrupt_after_write(t.phase, t.path, &t.ckpt_out)?;
-    }
-    ctx.db.insert(CkptRow {
-        rowid: 0,
-        phase: t.phase,
-        path_id: t.path,
-        kind: "path".into(),
-        file: t.ckpt_out.clone(),
-        step: t.start_step + t.steps,
-        loss: mean_loss,
-        modules,
-    });
-    if let Some(inj) = ctx.chaos.as_deref() {
-        inj.mark_published(t.phase, t.path);
+    // Error-feedback residual for the NEXT phase: quantization error per
+    // module, plus — for groups published before the phase ended — the
+    // movement their modules made after the snapshot (snapshot - final,
+    // in the delta's before-minus-after convention). Worker-local, like
+    // the optimizer state; never shipped.
+    if need_residual {
+        let mut fin = Vec::new();
+        for (idx, m, snap) in &snaps {
+            ctx.topo.extract_into(m.level, &theta, &mut fin);
+            let r = &mut res_out[*idx].1;
+            for (ri, (s, f)) in r.iter_mut().zip(snap.iter().zip(&fin)) {
+                *ri += s - f;
+            }
+        }
+        let refs: Vec<(&str, &[f32])> =
+            res_out.iter().map(|(n, d)| (n.as_str(), d.as_slice())).collect();
+        checkpoint::save_sections(&t.opt_out.with_extension("res.dpc"), &refs)?;
     }
     if let Some(ckpt) = eval_ckpt {
         let id = ctx.next_eval_id.fetch_add(1, Ordering::Relaxed);
@@ -336,6 +387,114 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
             path: t.path,
             ckpt,
         }));
+    }
+    Ok(())
+}
+
+/// Publish one module group's delta sections (streaming outer sync).
+///
+/// Non-final groups go to a side file (`<ckpt_out>.g{gid}.dpc`) under
+/// kind `path:g{gid}` with the group's modules as row metadata — the
+/// executor reduces them while the worker keeps stepping. The final
+/// group goes to `ckpt_out` itself in the legacy position: it carries
+/// the `loss` section, the simulated transfer delay, and the chaos
+/// publication hooks (exactly one before_publish/mark_published pair per
+/// task, so fault plans keep their one-fault-per-path semantics). With a
+/// single group its kind is plain `path`, preserving the phase-synchronous
+/// wire format bit for bit under the f32 codec.
+///
+/// Every published delta is `module_delta(before, theta_now) + residual_in`,
+/// encoded under the run codec; the encoder's error-feedback residual is
+/// collected into `res_out` (non-final groups also snapshot the module's
+/// current params so the post-snapshot movement can be folded in at phase
+/// end — see `run_train`).
+#[allow(clippy::too_many_arguments)]
+fn publish_group(
+    ctx: &WorkerCtx,
+    t: &TrainTask,
+    gid: usize,
+    last: bool,
+    group: &[crate::topology::ModuleId],
+    before: &[f32],
+    theta: &[f32],
+    res_in: &mut Option<Checkpoint>,
+    res_out: &mut Vec<(String, Vec<f32>)>,
+    snaps: &mut Vec<(usize, crate::topology::ModuleId, Vec<f32>)>,
+    need_residual: bool,
+    loss_now: f32,
+    step_now: usize,
+) -> Result<()> {
+    let codec = ctx.run.delta_codec;
+    let mut ck = Checkpoint::new();
+    let mut modules = Vec::with_capacity(group.len());
+    let mut delta = Vec::new();
+    for &m in group {
+        ctx.topo.module_delta_into(m, before, theta, &mut delta);
+        if let Some(rck) = res_in.as_mut() {
+            let r = rck.take(&format!("res:{m}")).with_context(|| {
+                format!("delta residual for path {} missing section res:{m}", t.path)
+            })?;
+            anyhow::ensure!(
+                r.len() == delta.len(),
+                "residual res:{m} sized {} vs module size {}",
+                r.len(),
+                delta.len()
+            );
+            for (d, ri) in delta.iter_mut().zip(&r) {
+                *d += ri;
+            }
+        }
+        let (wire, qres) = checkpoint::encode_delta_feedback(codec, &delta);
+        if need_residual {
+            if !last {
+                snaps.push((res_out.len(), m, ctx.topo.extract(m.level, theta)));
+            }
+            res_out.push((format!("res:{m}"), qres));
+        }
+        modules.push(m);
+        ck = ck.with(&m.delta_section(), wire);
+    }
+    let (file, kind) = if last {
+        let kind = if gid == 0 { "path".to_string() } else { format!("path:g{gid}") };
+        (t.ckpt_out.clone(), kind)
+    } else {
+        (
+            t.ckpt_out.with_extension(format!("g{gid}.dpc")),
+            format!("path:g{gid}"),
+        )
+    };
+    if last {
+        ck = ck.with("loss", vec![loss_now]);
+        // Simulated cross-DC checkpoint transfer (Effingo, paper §3.3).
+        if ctx.run.transfer_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(ctx.run.transfer_delay_ms));
+        }
+        if let Some(inj) = ctx.chaos.as_deref() {
+            inj.before_publish(t.phase, t.path);
+        }
+    }
+    ck.save(&file)?;
+    if last {
+        if let Some(inj) = ctx.chaos.as_deref() {
+            // torn-write simulation: the executor's checksum verification —
+            // not this worker — must detect the damage
+            inj.corrupt_after_write(t.phase, t.path, &file)?;
+        }
+    }
+    ctx.db.insert(CkptRow {
+        rowid: 0,
+        phase: t.phase,
+        path_id: t.path,
+        kind,
+        file,
+        step: step_now,
+        loss: loss_now,
+        modules,
+    });
+    if last {
+        if let Some(inj) = ctx.chaos.as_deref() {
+            inj.mark_published(t.phase, t.path);
+        }
     }
     Ok(())
 }

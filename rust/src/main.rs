@@ -15,7 +15,7 @@
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
 
-use dipaco::config::{RunConfig, ServeConfig, StemPlacement, TopologySpec};
+use dipaco::config::{DeltaCodec, RunConfig, ServeConfig, StemPlacement, TopologySpec};
 use dipaco::metrics;
 use dipaco::runtime::engine::{artifact_dir, Engine};
 use dipaco::train::dipaco::DipacoRecipe;
@@ -67,6 +67,9 @@ fn run() -> Result<()> {
                  --disc-phases N          discriminative phases (default 1)\n\
                  --early-stop             enable per-shard early stopping\n\
                  --path-specific          path-specific stem (flat-MoE style)\n\
+                 --delta-codec C          delta wire codec: f32|bf16|int8 (default f32)\n\
+                 --publish-groups N       staggered publication groups (default 0 = off)\n\
+                 --grace-ms N             straggler grace window, ms (default 0 = off)\n\
                  \n\
                  serve options:\n\
                  --requests N             request stream size (default 96)\n\
@@ -187,6 +190,13 @@ fn train_cmd(args: &Args) -> Result<()> {
             transfer_delay_ms: args.u64("transfer-delay", 0),
             outer_executors: args.usize("executors", 2),
             assembly_threads: args.usize("assembly-threads", 4),
+            delta_codec: {
+                let s = args.get_or("delta-codec", "f32");
+                DeltaCodec::parse(s)
+                    .with_context(|| format!("bad --delta-codec {s:?} (f32|bf16|int8)"))?
+            },
+            publish_groups: args.usize("publish-groups", 0),
+            straggler_grace_ms: args.u64("grace-ms", 0),
             seed: args.u64("seed", 7),
         },
         rundir: env.workdir.join(format!(

@@ -28,6 +28,7 @@
 //! parse for it. [`Checkpoint::save_dpc1`] is kept for the
 //! backward-compat and migration tests.
 
+use crate::config::DeltaCodec;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -213,6 +214,177 @@ pub fn load_section_into(path: &Path, name: &str, out: &mut Vec<f32>) -> Result<
     SectionReader::open(path)?
         .read_into(name, out)
         .with_context(|| format!("loading section {name} from {}", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// Lossy delta codecs (streaming outer sync).
+//
+// Quantized `delta:` payloads ride inside ordinary DPC2 sections: the
+// encoder packs a 12-byte header (codec tag, element count, scale) plus
+// the quantized elements into little-endian 4-byte words and hands them
+// to [`save_sections`] as if they were f32 data. The directory `len`
+// stays a word count and the per-section fletcher64 covers the packed
+// bytes, so corruption detection, mmap reads, and byte accounting all
+// work unchanged. Decoding is explicit: the reader knows the run's
+// [`DeltaCodec`] from config and the tag check catches any mismatch
+// loudly.
+//
+// Error feedback: [`encode_delta_feedback`] returns, along with the wire
+// words, the residual `total - dequantized` — elementwise f32, exact by
+// Sterbenz's lemma since the dequantized value is within half a
+// quantization step of the input — which the worker carries into the
+// next phase's delta. Information lost per phase is therefore bounded by
+// one quantization step, not accumulated.
+// ---------------------------------------------------------------------------
+
+/// Tag space for quantized delta sections; low byte is the codec id.
+const QDELTA_MAGIC: u32 = 0x5144_5400; // "QDT\0"
+const QDELTA_MASK: u32 = 0xFFFF_FF00;
+/// Header words before the packed payload: tag, element count, scale.
+const QDELTA_HEADER_WORDS: usize = 3;
+
+fn codec_id(codec: DeltaCodec) -> u32 {
+    match codec {
+        DeltaCodec::F32 => 0, // never written: f32 sections are raw
+        DeltaCodec::Bf16 => 1,
+        DeltaCodec::Int8 => 2,
+    }
+}
+
+/// Round-to-nearest-even truncation to bfloat16. NaN payload bits are
+/// forced quiet so rounding can't turn a NaN into infinity.
+fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Encode a delta under `codec` into DPC2 section words and return the
+/// wire words together with the error-feedback residual
+/// (`total - dequantized`, elementwise; all zeros for the exact f32
+/// codec). The caller carries the residual into the next phase's delta.
+pub fn encode_delta_feedback(codec: DeltaCodec, total: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    match codec {
+        DeltaCodec::F32 => (total.to_vec(), vec![0.0; total.len()]),
+        DeltaCodec::Bf16 => {
+            let n = total.len();
+            let mut words = Vec::with_capacity(QDELTA_HEADER_WORDS + n.div_ceil(2));
+            words.push(f32::from_bits(QDELTA_MAGIC | codec_id(codec)));
+            words.push(f32::from_bits(n as u32));
+            words.push(0.0); // scale unused
+            let mut residual = Vec::with_capacity(n);
+            for pair in total.chunks(2) {
+                let mut w: u32 = 0;
+                for (i, &x) in pair.iter().enumerate() {
+                    let h = f32_to_bf16(x);
+                    residual.push(x - bf16_to_f32(h));
+                    w |= (h as u32) << (16 * i);
+                }
+                words.push(f32::from_bits(w));
+            }
+            (words, residual)
+        }
+        DeltaCodec::Int8 => {
+            let n = total.len();
+            let absmax = total.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = absmax / 127.0;
+            let mut words = Vec::with_capacity(QDELTA_HEADER_WORDS + n.div_ceil(4));
+            words.push(f32::from_bits(QDELTA_MAGIC | codec_id(codec)));
+            words.push(f32::from_bits(n as u32));
+            words.push(scale);
+            let mut residual = Vec::with_capacity(n);
+            for quad in total.chunks(4) {
+                let mut w: u32 = 0;
+                for (i, &x) in quad.iter().enumerate() {
+                    let q = if scale == 0.0 {
+                        0i8
+                    } else {
+                        (x / scale).round().clamp(-127.0, 127.0) as i8
+                    };
+                    residual.push(x - q as f32 * scale);
+                    w |= ((q as u8) as u32) << (8 * i);
+                }
+                words.push(f32::from_bits(w));
+            }
+            (words, residual)
+        }
+    }
+}
+
+/// Encode without keeping the residual (benches, tests).
+pub fn encode_delta(codec: DeltaCodec, total: &[f32]) -> Vec<f32> {
+    encode_delta_feedback(codec, total).0
+}
+
+/// Decode a delta section read off the wire. `codec` comes from run
+/// config; a section whose tag disagrees (raw f32 bytes, or a different
+/// quantizer) fails loudly rather than deserializing garbage.
+pub fn decode_delta_into(codec: DeltaCodec, words: &[f32], out: &mut Vec<f32>) -> Result<()> {
+    if codec == DeltaCodec::F32 {
+        out.clear();
+        out.extend_from_slice(words);
+        return Ok(());
+    }
+    if words.len() < QDELTA_HEADER_WORDS {
+        bail!("quantized delta section too short ({} words)", words.len());
+    }
+    let tag = words[0].to_bits();
+    if tag & QDELTA_MASK != QDELTA_MAGIC {
+        bail!("delta codec mismatch: expected {codec}, section is not a quantized delta");
+    }
+    if tag != QDELTA_MAGIC | codec_id(codec) {
+        bail!(
+            "delta codec mismatch: expected {codec}, section carries codec id {}",
+            tag & !QDELTA_MASK
+        );
+    }
+    let n = words[1].to_bits() as usize;
+    let payload = &words[QDELTA_HEADER_WORDS..];
+    let want_words = match codec {
+        DeltaCodec::Bf16 => n.div_ceil(2),
+        DeltaCodec::Int8 => n.div_ceil(4),
+        DeltaCodec::F32 => unreachable!(),
+    };
+    if payload.len() != want_words {
+        bail!(
+            "quantized delta length mismatch: {n} elements need {want_words} payload words, found {}",
+            payload.len()
+        );
+    }
+    out.clear();
+    out.reserve(n);
+    match codec {
+        DeltaCodec::Bf16 => {
+            for i in 0..n {
+                let w = payload[i / 2].to_bits();
+                out.push(bf16_to_f32(((w >> (16 * (i % 2))) & 0xFFFF) as u16));
+            }
+        }
+        DeltaCodec::Int8 => {
+            let scale = words[2];
+            for i in 0..n {
+                let w = payload[i / 4].to_bits();
+                let q = ((w >> (8 * (i % 4))) & 0xFF) as u8 as i8;
+                out.push(q as f32 * scale);
+            }
+        }
+        DeltaCodec::F32 => unreachable!(),
+    }
+    Ok(())
+}
+
+/// Decode into a fresh vector (tests, one-shot callers).
+pub fn decode_delta(codec: DeltaCodec, words: &[f32]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    decode_delta_into(codec, words, &mut out)?;
+    Ok(out)
 }
 
 #[derive(Debug, Clone)]
@@ -972,6 +1144,130 @@ mod tests {
         let empty = tmpdir().join("map-empty.dpc");
         std::fs::write(&empty, b"").unwrap();
         assert!(SectionReader::open_mapped(&empty).is_err());
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn bf16_codec_roundtrip_error_bound() {
+        let mut rng = crate::util::rng::Rng::new(0xB16);
+        let xs: Vec<f32> = (0..4097).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        let (words, residual) = encode_delta_feedback(DeltaCodec::Bf16, &xs);
+        // ~2x wire cut (header amortizes away)
+        assert!(words.len() <= xs.len() / 2 + 4, "bf16 wire too large: {}", words.len());
+        let back = decode_delta(DeltaCodec::Bf16, &words).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for ((&x, &d), &r) in xs.iter().zip(&back).zip(&residual) {
+            // RNE to 8 significant bits: error at most half a bf16 ulp
+            assert!(
+                (x - d).abs() <= x.abs() / 256.0 + f32::MIN_POSITIVE,
+                "bf16 error out of bounds: {x} -> {d}"
+            );
+            assert_eq!(
+                (d + r).to_bits(),
+                x.to_bits(),
+                "error feedback must reconstruct exactly: {x} -> {d} + {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_codec_roundtrip_error_bound_and_wire_size() {
+        let mut rng = crate::util::rng::Rng::new(0x1A8);
+        let xs: Vec<f32> = (0..10_000).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+        let (words, residual) = encode_delta_feedback(DeltaCodec::Int8, &xs);
+        let absmax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let scale = absmax / 127.0;
+        let back = decode_delta(DeltaCodec::Int8, &words).unwrap();
+        assert_eq!(back.len(), xs.len());
+        for ((&x, &d), &r) in xs.iter().zip(&back).zip(&residual) {
+            assert!(
+                (x - d).abs() <= scale * 0.5001 + f32::MIN_POSITIVE,
+                "int8 error out of bounds: {x} -> {d} (scale {scale})"
+            );
+            assert_eq!(
+                (d + r).to_bits(),
+                x.to_bits(),
+                "error feedback must reconstruct exactly: {x} -> {d} + {r}"
+            );
+        }
+        // the acceptance bar: >= 3.5x fewer wire bytes than raw f32
+        let ratio = xs.len() as f64 / words.len() as f64;
+        assert!(ratio >= 3.5, "int8 wire cut only {ratio:.2}x");
+    }
+
+    #[test]
+    fn error_feedback_reconstructs_exactly_over_a_phase_pair() {
+        // Over two phases, what was shipped plus what is still carried
+        // must equal what the worker computed, bit for bit: the codec
+        // defers information, it never destroys it.
+        for codec in [DeltaCodec::F32, DeltaCodec::Bf16, DeltaCodec::Int8] {
+            let mut rng = crate::util::rng::Rng::new(0xFEED);
+            let exact1: Vec<f32> = (0..1001).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+            let exact2: Vec<f32> = (0..1001).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+            let (w1, r1) = encode_delta_feedback(codec, &exact1);
+            let d1 = decode_delta(codec, &w1).unwrap();
+            for i in 0..exact1.len() {
+                assert_eq!((d1[i] + r1[i]).to_bits(), exact1[i].to_bits(), "{codec} phase 1");
+            }
+            // phase 2's delta carries phase 1's residual
+            let total2: Vec<f32> = exact2.iter().zip(&r1).map(|(&e, &r)| e + r).collect();
+            let (w2, r2) = encode_delta_feedback(codec, &total2);
+            let d2 = decode_delta(codec, &w2).unwrap();
+            for i in 0..total2.len() {
+                assert_eq!((d2[i] + r2[i]).to_bits(), total2[i].to_bits(), "{codec} phase 2");
+            }
+            if codec == DeltaCodec::F32 {
+                assert!(r1.iter().all(|&r| r == 0.0), "f32 codec is exact");
+                assert_eq!(bits(&w1), bits(&exact1), "f32 codec is the identity");
+            }
+        }
+    }
+
+    #[test]
+    fn dpc2_rejects_corrupted_quantized_section() {
+        let p = tmpdir().join("qcorrupt.dpc");
+        let mut rng = crate::util::rng::Rng::new(0xC0);
+        let xs: Vec<f32> = (0..513).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+        let words = encode_delta(DeltaCodec::Int8, &xs);
+        save_sections(&p, &[("delta:L0E0", &words)]).unwrap();
+        // the file roundtrip is bit-exact on the wire words
+        let mut r = SectionReader::open(&p).unwrap();
+        let raw = r.read("delta:L0E0").unwrap();
+        assert_eq!(bits(&raw), bits(&words));
+        assert_eq!(
+            bits(&decode_delta(DeltaCodec::Int8, &raw).unwrap()),
+            bits(&decode_delta(DeltaCodec::Int8, &words).unwrap())
+        );
+        // flip one quantized payload byte: the ordinary DPC2 section
+        // checksum must reject it before any decode happens
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut r = SectionReader::open(&p).unwrap();
+        let e = format!("{:#}", r.read("delta:L0E0").unwrap_err());
+        assert!(e.contains("checksum mismatch (torn write?)"), "wrong error: {e}");
+    }
+
+    #[test]
+    fn decode_rejects_codec_mismatch() {
+        let xs = vec![0.5f32; 9];
+        let w8 = encode_delta(DeltaCodec::Int8, &xs);
+        let wb = encode_delta(DeltaCodec::Bf16, &xs);
+        let e = format!("{:#}", decode_delta(DeltaCodec::Bf16, &w8).unwrap_err());
+        assert!(e.contains("delta codec mismatch"), "wrong error: {e}");
+        assert!(decode_delta(DeltaCodec::Int8, &wb).is_err());
+        // raw f32 words are not a quantized section
+        assert!(decode_delta(DeltaCodec::Int8, &xs).is_err());
+        // truncated payload is caught by the length check
+        let mut short = w8.clone();
+        short.pop();
+        assert!(decode_delta(DeltaCodec::Int8, &short).is_err());
+        // F32 decode is the identity
+        assert_eq!(decode_delta(DeltaCodec::F32, &xs).unwrap(), xs);
     }
 
     #[test]

@@ -329,6 +329,45 @@ impl Topology {
         (ck, modules)
     }
 
+    /// One module's `before - after` delta into a reused buffer — the
+    /// single-module counterpart of [`Topology::split_delta`], used by
+    /// the streaming worker to publish a group without computing the
+    /// remaining modules' deltas yet.
+    pub fn module_delta_into(&self, m: ModuleId, before: &[f32], after: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(before.len(), after.len());
+        let lv = &self.levels[m.level];
+        out.clear();
+        out.reserve(lv.size);
+        for r in &lv.segments {
+            out.extend(
+                before[r.clone()]
+                    .iter()
+                    .zip(&after[r.clone()])
+                    .map(|(b, a)| b - a),
+            );
+        }
+    }
+
+    /// Split a path's traversed modules into `groups` contiguous
+    /// level-order chunks for staggered publication: group `g` publishes
+    /// as soon as inner-step boundary `g` passes. `groups` is clamped to
+    /// `[1, modules]`; when modules don't divide evenly the extra modules
+    /// go to the EARLIER groups, so later (still-training) groups stay
+    /// small and the tail publish is cheap.
+    pub fn publish_groups(&self, path: usize, groups: usize) -> Vec<Vec<ModuleId>> {
+        let mods = self.modules_of_path(path);
+        let g = groups.clamp(1, mods.len());
+        let base = mods.len() / g;
+        let extra = mods.len() % g;
+        let mut out = Vec::with_capacity(g);
+        let mut it = mods.into_iter();
+        for i in 0..g {
+            let take = base + usize::from(i < extra);
+            out.push(it.by_ref().take(take).collect());
+        }
+        out
+    }
+
     /// Scatter module data back into a flat vector.
     pub fn scatter(&self, level: usize, data: &[f32], theta: &mut [f32]) {
         let lv = &self.levels[level];
@@ -422,6 +461,43 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn publish_groups_partition_modules_in_order() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        for path in 0..t.paths {
+            let mods = t.modules_of_path(path);
+            for groups in [0, 1, 2, mods.len(), mods.len() + 3] {
+                let gs = t.publish_groups(path, groups);
+                assert_eq!(gs.len(), groups.clamp(1, mods.len()));
+                assert!(gs.iter().all(|g| !g.is_empty()));
+                // concatenation == modules_of_path, same order
+                let flat: Vec<ModuleId> = gs.concat();
+                assert_eq!(flat, mods);
+                // front-loaded: group sizes are non-increasing
+                for w in gs.windows(2) {
+                    assert!(w[0].len() >= w[1].len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn module_delta_into_matches_split_delta() {
+        let m = manifest();
+        let t = Topology::build(&m, &TopologySpec::grid(vec![2, 2]));
+        let before: Vec<f32> = (0..m.total_params).map(|i| (i % 13) as f32 * 0.1).collect();
+        let after: Vec<f32> = before.iter().map(|v| v * 0.99 + 0.01).collect();
+        for path in 0..t.paths {
+            let whole = t.split_delta(path, &before, &after);
+            let mut buf = Vec::new();
+            for (mid, delta) in whole {
+                t.module_delta_into(mid, &before, &after, &mut buf);
+                assert_eq!(buf, delta, "module {mid} delta mismatch");
+            }
+        }
     }
 
     #[test]

@@ -16,9 +16,12 @@
 //! scenario is skipped.
 
 use dipaco::chaos::corruptor::CorruptMode;
-use dipaco::chaos::oracle::{run_scenario, run_scenario_vs, ChaosReport, Verdict};
+use dipaco::chaos::oracle::{
+    run_scenario, run_scenario_vs, run_scenario_vs_tol, ChaosReport, Verdict,
+};
 use dipaco::chaos::plan::{Fault, FaultPlan};
 use dipaco::chaos::sim::SimSpec;
+use dipaco::config::DeltaCodec;
 
 fn assert_converged(r: &ChaosReport) {
     assert!(
@@ -165,6 +168,79 @@ fn chaos_reordered_publication() {
         "reorder resolved by dependency, not by deadline: {:?}",
         r.fired
     );
+}
+
+// ---- streaming outer sync: staggered publication, late carry, codecs ----
+
+#[test]
+fn chaos_streaming_staggered_f32_matches_whole_path_publication() {
+    // Staggered per-module-group publication with the exact f32 codec is
+    // pure plumbing: the same contributions reach the same modules and
+    // the executor reduces them in canonical order, so the result must be
+    // bit-identical to whole-path publication of the same seeded run —
+    // even with stragglers shuffling group-row arrival order.
+    let mut faulted = SimSpec::new(21);
+    faulted.publish_groups = 2;
+    let reference = SimSpec::new(21); // whole-path rows, no residual chain
+    let plan = FaultPlan::new(vec![
+        Fault::Straggle { phase: 0, path: 1, delay_ms: 90 },
+        Fault::Straggle { phase: 1, path: 3, delay_ms: 50 },
+    ]);
+    let r = run_scenario_vs("streaming-staggered-f32", &faulted, &reference, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.phases_run, 3);
+    assert_eq!(r.requeues, 0, "stragglers stayed within their leases");
+}
+
+#[test]
+fn chaos_late_straggler_carries_into_next_phase() {
+    // A path declared late in phase 1: its modules apply at reduced
+    // quorum, its contribution merges into phase 2's accumulation. Both
+    // runs share the declaration (the carry is part of the recipe); the
+    // faulted run additionally straggles that very path, which must not
+    // change a single byte.
+    let mut faulted = SimSpec::new(22);
+    faulted.declared_late = vec![(1, 2)];
+    let mut reference = SimSpec::new(22);
+    reference.declared_late = vec![(1, 2)];
+    let plan = FaultPlan::new(vec![Fault::Straggle { phase: 1, path: 2, delay_ms: 120 }]);
+    let r = run_scenario_vs("late-straggler-carry", &faulted, &reference, &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.phases_run, 3);
+    assert_eq!(r.completed, 12, "the late path's task still completes");
+}
+
+#[test]
+fn chaos_streaming_int8_bounded_divergence() {
+    // Int8-quantized deltas with error feedback vs the exact-f32 run of
+    // the same seed: bitwise identity is off the table by construction,
+    // but the residual chain keeps the drift bounded — the oracle demands
+    // ConvergedBounded within a small tolerance, and a nonzero gap
+    // (proof the lossy codec actually engaged).
+    let mut faulted = SimSpec::new(23);
+    faulted.codec = DeltaCodec::Int8;
+    faulted.publish_groups = 2;
+    let reference = SimSpec::new(23);
+    let r = run_scenario_vs_tol(
+        "streaming-int8-bounded",
+        &faulted,
+        &reference,
+        &FaultPlan::none(),
+        Some(0.05),
+    )
+    .unwrap();
+    match &r.verdict {
+        Verdict::ConvergedBounded { max_abs } => {
+            assert!(*max_abs > 0.0, "int8 quantization should move at least one bit");
+            assert!(*max_abs <= 0.05, "drift exceeded tolerance: {max_abs}");
+        }
+        v => panic!(
+            "expected bounded convergence, got {v:?}\nreport: {}",
+            r.to_json().to_string_pretty()
+        ),
+    }
+    assert!(r.is_pass());
+    assert_eq!(r.phases_run, 3);
 }
 
 // ---- checkpoint-plane faults: must abort loudly, never average garbage ----
