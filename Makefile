@@ -7,7 +7,7 @@
 PYTHON ?= python3
 PRESETS ?= test path large
 
-.PHONY: artifacts build test bench bench-ckpt bench-serve bench-train bench-assembly bench-outer bench-stream bench-all chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
+.PHONY: artifacts build test bench bench-ckpt bench-serve bench-train bench-assembly bench-outer bench-stream bench-transport bench-all chaos chaos-serve chaos-sweep chaos-serve-sweep clippy fmt
 
 artifacts:
 	@for p in $(PRESETS); do \
@@ -53,9 +53,14 @@ bench-outer:
 bench-stream:
 	cargo bench --bench bench_stream
 
+# Section exchange plane: push throughput + p50/p99 per-section push
+# latency + executor read-back, local filesystem vs TCP loopback.
+bench-transport:
+	cargo bench --bench bench_transport
+
 # Every bench, then merge the per-bench BENCH_*.json baselines into
 # results/bench/BENCH_summary.json.
-bench-all: bench-train bench-ckpt bench-assembly bench-serve bench-outer bench-stream
+bench-all: bench-train bench-ckpt bench-assembly bench-serve bench-outer bench-stream bench-transport
 	cargo run --release -- bench-summary
 
 # Chaos harness (DESIGN.md "Failure model"): named fault-injection
@@ -71,8 +76,10 @@ chaos-serve:
 	cargo test -q --test integration_serve_chaos
 
 # Weekly seed sweep: random fault plans, one ChaosReport JSON per seed
-# under results/chaos/. DIPACO_CHAOS_SEEDS / DIPACO_CHAOS_SEED0 override
-# the count and the first seed.
+# under results/chaos/ — includes the transport-plane half (random
+# drop/delay/duplicate/truncate against the TCP exchange, report_net_*
+# files). DIPACO_CHAOS_SEEDS / DIPACO_CHAOS_SEED0 override the count and
+# the first seed.
 chaos-sweep:
 	mkdir -p results/chaos
 	cargo test -q --test integration_chaos -- --ignored --nocapture

@@ -27,7 +27,7 @@ fn task(i: u64) -> Task {
 fn drive(n_tasks: u64, n_workers: usize, fail_p: f64) {
     let q = Arc::new(TaskQueue::new(Duration::from_millis(10)));
     for i in 0..n_tasks {
-        q.push(task(i));
+        q.push(task(i)).expect("bench queue is open");
     }
     std::thread::scope(|s| {
         for w in 0..n_workers {
@@ -69,7 +69,7 @@ fn main() {
     // queue-state checkpoint cost (paper: server checkpoints its queue)
     let q = TaskQueue::new(Duration::from_secs(10));
     for i in 0..1000 {
-        q.push(task(i));
+        q.push(task(i)).expect("bench queue is open");
     }
     let r = Bencher::new("checkpoint 1k-task queue state").runs(10, 50).run(|| {
         let state = q.checkpoint_state();

@@ -1,0 +1,201 @@
+//! Section exchange plane bench (DESIGN.md "Section exchange plane"):
+//! the same per-module delta sections pushed through the local
+//! (shared-filesystem) plane and through the TCP loopback plane.
+//!
+//! 1. **Push throughput** — sections/s through `SectionTransport::publish`
+//!    (one section per push so each sample is one framed round trip);
+//! 2. **Push latency** — p50/p99 per section. Local publication is the
+//!    checkpoint rename (a no-op at publish time), so its latency floor
+//!    is what the TCP plane's connect + frame + ack overhead is judged
+//!    against;
+//! 3. **Read-back throughput** — sections/s through `open` + `read_into`,
+//!    mmap'd DPC2 vs the executor-side section store, with a bitwise
+//!    roundtrip check on every section.
+//!
+//! CSV lands in `results/bench/bench_transport.csv`, baselines in
+//! `results/bench/BENCH_transport.json` (merged by `make bench-all`).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use dipaco::config::{TransportConfig, TransportMode};
+use dipaco::params::checkpoint::Checkpoint;
+use dipaco::topology::ModuleId;
+use dipaco::transport::tcp::TcpExchange;
+use dipaco::transport::{local::LocalTransport, PublishCtx, SectionTransport};
+use dipaco::util::json::Json;
+use dipaco::util::rng::Rng;
+
+const LEVELS: usize = 8;
+const EXPERTS: usize = 2;
+const FLOATS_PER_SECTION: usize = 4096; // 16 KiB payload per section
+const FILES: usize = 30;
+
+fn modules() -> Vec<ModuleId> {
+    let mut out = Vec::new();
+    for level in 0..LEVELS {
+        for expert in 0..EXPERTS {
+            out.push(ModuleId { level, expert });
+        }
+    }
+    out
+}
+
+/// Round-robin module shards for `executors` endpoints (what
+/// `shard_modules` does, without needing a full Topology here).
+fn shards(mods: &[ModuleId], executors: usize) -> Vec<Vec<ModuleId>> {
+    let mut out = vec![Vec::new(); executors];
+    for (i, &m) in mods.iter().enumerate() {
+        out[i % executors].push(m);
+    }
+    out
+}
+
+/// Write one checkpoint per "path publish": every module's delta section,
+/// deterministic in `tag` so the roundtrip check is exact.
+fn write_ckpt(dir: &std::path::Path, tag: usize, mods: &[ModuleId]) -> (PathBuf, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(0xBE7C).fork(tag as u64);
+    let mut ck = Checkpoint::new();
+    let mut data = Vec::with_capacity(mods.len());
+    for m in mods {
+        let d: Vec<f32> = (0..FLOATS_PER_SECTION)
+            .map(|_| rng.normal_f32(0.0, 0.1))
+            .collect();
+        ck = ck.with(&m.delta_section(), d.clone());
+        data.push(d);
+    }
+    let file = dir.join(format!("push{tag}.dpc"));
+    ck.save(&file).unwrap();
+    (file, data)
+}
+
+struct PlaneResult {
+    push_sections_per_s: f64,
+    push_p50_us: f64,
+    push_p99_us: f64,
+    read_sections_per_s: f64,
+}
+
+fn percentile_us(sorted: &[Duration], p: usize) -> f64 {
+    let idx = (sorted.len() * p / 100).min(sorted.len() - 1);
+    sorted[idx].as_secs_f64() * 1e6
+}
+
+fn bench_plane(
+    name: &str,
+    transport: &dyn SectionTransport,
+    files: &[(PathBuf, Vec<Vec<f32>>)],
+    mods: &[ModuleId],
+) -> PlaneResult {
+    // ---- push: one section per publish call, so every latency sample is
+    // one full section round trip through the plane
+    let mut lat: Vec<Duration> = Vec::with_capacity(files.len() * mods.len());
+    let t_all = Instant::now();
+    for (path_id, (file, _)) in files.iter().enumerate() {
+        let ctx = PublishCtx {
+            phase: 0,
+            path: path_id,
+            kind: "path".to_string(),
+        };
+        for &m in mods {
+            let t0 = Instant::now();
+            transport.publish(&ctx, file, &[m]).unwrap();
+            lat.push(t0.elapsed());
+        }
+    }
+    let push_wall = t_all.elapsed().as_secs_f64();
+    let pushes = lat.len();
+    lat.sort();
+
+    // ---- read-back: executor side, with a bitwise roundtrip check
+    let mut buf: Vec<f32> = Vec::new();
+    let t_read = Instant::now();
+    for (file, data) in files {
+        let mut src = transport.open(file).unwrap();
+        for (m, want) in mods.iter().zip(data) {
+            src.read_into(&m.delta_section(), &mut buf).unwrap();
+            assert_eq!(&buf, want, "{name}: section {m} did not roundtrip");
+        }
+    }
+    let read_wall = t_read.elapsed().as_secs_f64();
+
+    let r = PlaneResult {
+        push_sections_per_s: pushes as f64 / push_wall.max(1e-12),
+        push_p50_us: percentile_us(&lat, 50),
+        push_p99_us: percentile_us(&lat, 99),
+        read_sections_per_s: (files.len() * mods.len()) as f64 / read_wall.max(1e-12),
+    };
+    println!(
+        "{name:>5}: push {:>9.0} sections/s  p50 {:>7.1} us  p99 {:>7.1} us  \
+         read {:>9.0} sections/s",
+        r.push_sections_per_s, r.push_p50_us, r.push_p99_us, r.read_sections_per_s
+    );
+    r
+}
+
+fn main() {
+    println!(
+        "section exchange plane bench: {} files x {} sections x {} KiB\n",
+        FILES,
+        LEVELS * EXPERTS,
+        FLOATS_PER_SECTION * 4 / 1024
+    );
+    let dir = std::env::temp_dir().join(format!("dipaco-bench-transport-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mods = modules();
+    let files: Vec<(PathBuf, Vec<Vec<f32>>)> =
+        (0..FILES).map(|i| write_ckpt(&dir, i, &mods)).collect();
+
+    let local = bench_plane("local", &LocalTransport, &files, &mods);
+
+    let tcp_cfg = TransportConfig {
+        mode: TransportMode::Tcp,
+        ..Default::default()
+    };
+    let exchange = TcpExchange::start(&shards(&mods, 2), tcp_cfg, None).unwrap();
+    let tcp = bench_plane("tcp", exchange.as_ref(), &files, &mods);
+    let store = exchange.store_stats();
+    assert_eq!(
+        store.puts as usize,
+        FILES * mods.len(),
+        "every pushed section must be accepted exactly once"
+    );
+    assert_eq!(store.nacks, 0, "loopback pushes must not nack");
+
+    let overhead = tcp.push_p99_us / local.push_p99_us.max(1e-9);
+    println!(
+        "\ntcp loopback p99 push overhead vs local publish: {overhead:.1}x \
+         ({} resends)",
+        exchange.resends()
+    );
+
+    let bench_dir = dipaco::metrics::results_dir().join("bench");
+    std::fs::create_dir_all(&bench_dir).unwrap();
+    let mut csv = vec!["plane,metric,value".to_string()];
+    for (plane, r) in [("local", &local), ("tcp", &tcp)] {
+        csv.push(format!("{plane},push_sections_per_s,{:.3}", r.push_sections_per_s));
+        csv.push(format!("{plane},push_p50_us,{:.3}", r.push_p50_us));
+        csv.push(format!("{plane},push_p99_us,{:.3}", r.push_p99_us));
+        csv.push(format!("{plane},read_sections_per_s,{:.3}", r.read_sections_per_s));
+    }
+    let out = bench_dir.join("bench_transport.csv");
+    std::fs::write(&out, csv.join("\n")).unwrap();
+    println!("csv: {}", out.display());
+
+    let summary: Vec<(&str, Json)> = vec![
+        ("push_sections_per_s_local", Json::num(local.push_sections_per_s)),
+        ("push_p50_us_local", Json::num(local.push_p50_us)),
+        ("push_p99_us_local", Json::num(local.push_p99_us)),
+        ("read_sections_per_s_local", Json::num(local.read_sections_per_s)),
+        ("push_sections_per_s_tcp", Json::num(tcp.push_sections_per_s)),
+        ("push_p50_us_tcp", Json::num(tcp.push_p50_us)),
+        ("push_p99_us_tcp", Json::num(tcp.push_p99_us)),
+        ("read_sections_per_s_tcp", Json::num(tcp.read_sections_per_s)),
+        ("tcp_p99_overhead_x", Json::num(overhead)),
+    ];
+    let json_out = bench_dir.join("BENCH_transport.json");
+    dipaco::metrics::write_summary(&json_out, summary).unwrap();
+    println!("summary: {}", json_out.display());
+    let _ = std::fs::remove_dir_all(&dir);
+}

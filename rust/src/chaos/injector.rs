@@ -32,6 +32,25 @@ use crate::chaos::corruptor;
 use crate::chaos::plan::{Fault, FaultPlan, ServeFault, ServeFaultPlan};
 use crate::serve::server::PathExecutor;
 
+/// What the transport client should do with the section frame it is
+/// about to send (see [`crate::transport::tcp`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetAction {
+    /// Send clean.
+    Deliver,
+    /// The frame is lost in flight: the client must treat the attempt as
+    /// failed (without the server ever seeing it) and retry.
+    Drop,
+    /// The frame is held this long in flight before delivery.
+    Delay(Duration),
+    /// The frame is delivered twice (a retransmit race); the server's
+    /// idempotency dedup must keep a single accumulation.
+    Duplicate,
+    /// The frame's payload tail is torn in flight (checksum kept from the
+    /// clean bytes); the server must nack and the client re-send.
+    Truncate,
+}
+
 /// What the worker should do with the task it just leased.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskAction {
@@ -127,6 +146,30 @@ impl FaultInjector {
                 let (g2, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
                 g = g2;
             }
+        }
+    }
+
+    /// Consult (and consume) any transport fault for `(phase, path)`.
+    /// Called by the TCP client once per section frame; the first frame
+    /// of a faulted publish takes the hit, everything after runs clean —
+    /// the consumed-once shape every other hook follows.
+    pub fn on_net_send(&self, phase: usize, path: usize) -> NetAction {
+        let mut g = self.state.lock().unwrap();
+        let Some(idx) = g
+            .pending
+            .iter()
+            .position(|f| f.net_target() == Some((phase, path)))
+        else {
+            return NetAction::Deliver;
+        };
+        let fault = g.pending.remove(idx);
+        g.fired.push(fault.describe());
+        match fault {
+            Fault::NetDrop { .. } => NetAction::Drop,
+            Fault::NetDelay { delay_ms, .. } => NetAction::Delay(Duration::from_millis(delay_ms)),
+            Fault::NetDuplicate { .. } => NetAction::Duplicate,
+            Fault::NetTruncate { .. } => NetAction::Truncate,
+            _ => unreachable!("net_target filtered to transport faults"),
         }
     }
 
@@ -354,6 +397,36 @@ mod tests {
             }
         );
         assert_eq!(inj.fired_events().len(), 2);
+        assert!(inj.unfired().is_empty());
+    }
+
+    #[test]
+    fn net_faults_fire_once_and_skip_other_hooks() {
+        let plan = FaultPlan::new(vec![
+            Fault::NetDrop { phase: 0, path: 1 },
+            Fault::NetDelay {
+                phase: 1,
+                path: 0,
+                delay_ms: 15,
+            },
+            Fault::NetDuplicate { phase: 1, path: 2 },
+            Fault::NetTruncate { phase: 2, path: 0 },
+        ]);
+        let inj = FaultInjector::new(&plan);
+        // net faults never strike the task-start hook
+        assert_eq!(inj.on_task_start(0, 1), TaskAction::Run { delay: None });
+        // untargeted send delivers clean
+        assert_eq!(inj.on_net_send(0, 0), NetAction::Deliver);
+        // first send takes the hit, the retry/next frame runs clean
+        assert_eq!(inj.on_net_send(0, 1), NetAction::Drop);
+        assert_eq!(inj.on_net_send(0, 1), NetAction::Deliver);
+        assert_eq!(
+            inj.on_net_send(1, 0),
+            NetAction::Delay(Duration::from_millis(15))
+        );
+        assert_eq!(inj.on_net_send(1, 2), NetAction::Duplicate);
+        assert_eq!(inj.on_net_send(2, 0), NetAction::Truncate);
+        assert_eq!(inj.fired_events().len(), 4);
         assert!(inj.unfired().is_empty());
     }
 

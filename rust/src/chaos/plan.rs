@@ -63,6 +63,24 @@ pub enum Fault {
         path: usize,
         mode: CorruptMode,
     },
+    /// Transport plane: the first section frame of this path's publish is
+    /// lost in flight; the client's capped-backoff retry must re-send it.
+    NetDrop { phase: usize, path: usize },
+    /// Transport plane: the first section frame of this path's publish is
+    /// held `delay_ms` in flight before delivery.
+    NetDelay {
+        phase: usize,
+        path: usize,
+        delay_ms: u64,
+    },
+    /// Transport plane: the first section frame of this path's publish is
+    /// delivered twice; the server's idempotency-key dedup must keep a
+    /// single accumulation.
+    NetDuplicate { phase: usize, path: usize },
+    /// Transport plane: the first section frame of this path's publish
+    /// arrives with a torn payload tail; the server's fletcher64 check
+    /// must nack it and the client must re-send a clean copy.
+    NetTruncate { phase: usize, path: usize },
 }
 
 impl Fault {
@@ -96,6 +114,20 @@ impl Fault {
             Fault::Corrupt { phase, path, mode } => {
                 format!("phase {phase}: corrupt checkpoint of path {path} ({mode})")
             }
+            Fault::NetDrop { phase, path } => {
+                format!("phase {phase}: drop section frame of path {path} in flight")
+            }
+            Fault::NetDelay {
+                phase,
+                path,
+                delay_ms,
+            } => format!("phase {phase}: delay section frame of path {path} {delay_ms}ms in flight"),
+            Fault::NetDuplicate { phase, path } => {
+                format!("phase {phase}: duplicate section frame of path {path} in flight")
+            }
+            Fault::NetTruncate { phase, path } => {
+                format!("phase {phase}: truncate section frame of path {path} in flight")
+            }
         }
     }
 
@@ -107,6 +139,18 @@ impl Fault {
             | Fault::Preempt { phase, path }
             | Fault::ExpireLease { phase, path, .. }
             | Fault::Straggle { phase, path, .. } => Some((phase, path)),
+            _ => None,
+        }
+    }
+
+    /// `(phase, path)` whose *section send* this fault strikes (transport
+    /// plane); `None` for every worker/file-plane fault.
+    pub fn net_target(&self) -> Option<(usize, usize)> {
+        match *self {
+            Fault::NetDrop { phase, path }
+            | Fault::NetDelay { phase, path, .. }
+            | Fault::NetDuplicate { phase, path }
+            | Fault::NetTruncate { phase, path } => Some((phase, path)),
             _ => None,
         }
     }
@@ -200,6 +244,40 @@ impl FaultPlan {
                     faults.push(Fault::ReorderPublish { phase, first, then });
                 }
             }
+        }
+        FaultPlan { faults }
+    }
+
+    /// Seeded random mix of *transport-plane* faults (the weekly sweep's
+    /// network leg): drop/delay/duplicate/truncate a section frame in
+    /// flight, at most one per `(phase, path)`. Deliberately separate
+    /// from [`FaultPlan::random`]: the timing sweep's invariants (and its
+    /// tests) promise worker/queue faults only, and every net fault here
+    /// is convergence-preserving by construction — the client retries,
+    /// the server dedups, so the oracle still demands ConvergedIdentical.
+    pub fn random_net(seed: u64, phases: usize, paths: usize, events: usize) -> FaultPlan {
+        assert!(phases >= 1 && paths >= 1);
+        let mut rng = Rng::new(seed).fork(0x7E75);
+        let mut faults = Vec::new();
+        let mut used: Vec<Vec<usize>> = vec![Vec::new(); phases];
+        for _ in 0..events {
+            let phase = rng.gen_range(phases);
+            let free: Vec<usize> = (0..paths).filter(|p| !used[phase].contains(p)).collect();
+            if free.is_empty() {
+                continue;
+            }
+            let path = *rng.choose(&free);
+            used[phase].push(path);
+            faults.push(match rng.gen_range(4) {
+                0 => Fault::NetDrop { phase, path },
+                1 => Fault::NetDelay {
+                    phase,
+                    path,
+                    delay_ms: 10 + rng.gen_range(31) as u64,
+                },
+                2 => Fault::NetDuplicate { phase, path },
+                _ => Fault::NetTruncate { phase, path },
+            });
         }
         FaultPlan { faults }
     }
@@ -393,6 +471,30 @@ mod tests {
                 }
             }
             assert!(reorders.iter().all(|&r| r <= 1));
+        }
+    }
+
+    #[test]
+    fn random_net_plans_draw_only_in_bounds_transport_faults() {
+        let a = FaultPlan::random_net(42, 2, 3, 5);
+        assert_eq!(a, FaultPlan::random_net(42, 2, 3, 5), "seed-deterministic");
+        assert!(!a.faults.is_empty());
+        for seed in 0..50 {
+            let plan = FaultPlan::random_net(seed, 2, 3, 5);
+            assert!(!plan.expects_abort(), "net faults all recover");
+            let mut hit: Vec<(usize, usize)> = Vec::new();
+            for f in &plan.faults {
+                let t = f
+                    .net_target()
+                    .unwrap_or_else(|| panic!("net plan drew a non-transport fault: {f:?}"));
+                assert_eq!(f.task_start_target(), None, "net faults skip task-start");
+                assert!(t.0 < 2 && t.1 < 3, "out of bounds: {t:?}");
+                assert!(!hit.contains(&t), "two faults on {t:?} (seed {seed})");
+                hit.push(t);
+                if let Fault::NetDelay { delay_ms, .. } = *f {
+                    assert!((10..=40).contains(&delay_ms));
+                }
+            }
         }
     }
 

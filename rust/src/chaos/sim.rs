@@ -41,6 +41,7 @@ use crate::optim::Nesterov;
 use crate::params::checkpoint::{self, Checkpoint};
 use crate::params::manifest::Manifest;
 use crate::topology::{ModuleId, ModuleStore, Topology};
+use crate::transport::SectionTransport;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -71,6 +72,10 @@ pub struct SimSpec {
     /// `(phase, path)` pairs declared late up front: executors skip their
     /// rows in-phase and they merge into the NEXT phase's accumulation.
     pub declared_late: Vec<(usize, usize)>,
+    /// Route section publication over the TCP exchange plane (loopback)
+    /// instead of the shared filesystem. The oracle's bit-identical
+    /// verdicts must hold either way.
+    pub tcp: bool,
 }
 
 impl SimSpec {
@@ -88,6 +93,7 @@ impl SimSpec {
             publish_groups: 0,
             grace_ms: 0,
             declared_late: Vec::new(),
+            tcp: false,
         }
     }
 }
@@ -168,10 +174,12 @@ pub struct SimOutcome {
     pub unfired: Vec<String>,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn sim_run_train(
     db: &CheckpointDb,
     topo: &Topology,
     injector: &FaultInjector,
+    transport: Option<&crate::transport::tcp::TcpExchange>,
     seed: u64,
     codec: DeltaCodec,
     publish_groups: usize,
@@ -258,6 +266,20 @@ fn sim_run_train(
         if last {
             injector.corrupt_after_write(t.phase, t.path, &file)?;
         }
+        // Same ship-before-row ordering as the real worker: the exchange
+        // plane serves the sections before the DB row announces them.
+        if let Some(tx) = transport {
+            tx.publish(
+                &crate::transport::PublishCtx {
+                    phase: t.phase,
+                    path: t.path,
+                    kind: kind.clone(),
+                },
+                &file,
+                &modules,
+            )
+            .with_context(|| format!("sim publishing sections of {}", file.display()))?;
+        }
         db.insert(CkptRow {
             rowid: 0,
             phase: t.phase,
@@ -288,6 +310,7 @@ fn sim_worker_loop(
     db: &CheckpointDb,
     topo: &Topology,
     injector: &FaultInjector,
+    transport: Option<&crate::transport::tcp::TcpExchange>,
     shutdown: &AtomicBool,
     seed: u64,
     codec: DeltaCodec,
@@ -318,7 +341,7 @@ fn sim_worker_loop(
                 }
             }
         }
-        match sim_run_train(db, topo, injector, seed, codec, publish_groups, &t) {
+        match sim_run_train(db, topo, injector, transport, seed, codec, publish_groups, &t) {
             Ok(()) => {
                 queue.complete(lease);
             }
@@ -343,6 +366,35 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
     let injector = Arc::new(FaultInjector::new(plan));
     let shutdown = Arc::new(AtomicBool::new(false));
 
+    // One TCP exchange for the whole run, sharded over the WIDEST
+    // executor count the schedule ever uses. Per-phase re-sharding stays
+    // correct because readers consult the union of every endpoint's
+    // store, so a fixed module→server route can never hide a section
+    // from a re-sharded executor.
+    let transport: Option<Arc<crate::transport::tcp::TcpExchange>> = if spec.tcp {
+        let net_execs = spec
+            .executors_per_phase
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let net_shards = shard_modules(&topo, net_execs);
+        Some(
+            crate::transport::tcp::TcpExchange::start(
+                &net_shards,
+                crate::config::TransportConfig {
+                    mode: crate::config::TransportMode::Tcp,
+                    ..Default::default()
+                },
+                Some(Arc::clone(&injector)),
+            )
+            .context("starting sim TCP section exchange plane")?,
+        )
+    } else {
+        None
+    };
+
     // Sim workers live for the whole run (they idle-poll between phases).
     let mut workers = Vec::new();
     for w in 0..spec.workers.max(1) {
@@ -350,6 +402,7 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
         let db = Arc::clone(&db);
         let topo = Arc::clone(&topo);
         let injector = Arc::clone(&injector);
+        let transport = transport.clone();
         let shutdown = Arc::clone(&shutdown);
         let seed = spec.seed;
         let codec = spec.codec;
@@ -364,6 +417,7 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
                         &db,
                         &topo,
                         &injector,
+                        transport.as_deref(),
                         &shutdown,
                         seed,
                         codec,
@@ -435,7 +489,9 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
                 }));
             }
         }
-        queue.push_all(tasks);
+        queue
+            .push_all(tasks)
+            .expect("sim queue stays open until the run shuts down");
         let cfg = OuterConfig {
             diloco: diloco.clone(),
             shard_sizes: vec![1; topo.paths],
@@ -443,6 +499,9 @@ pub fn run_sim(spec: &SimSpec, plan: &FaultPlan, rundir: &Path) -> Result<SimOut
             grace: (spec.grace_ms > 0).then(|| Duration::from_millis(spec.grace_ms)),
             declared_late: spec.declared_late.clone(),
             carry_in: std::mem::take(&mut carry),
+            transport: transport
+                .clone()
+                .map(|t| t as Arc<dyn crate::transport::SectionTransport>),
             ..Default::default()
         };
         let res = run_phase_outer(&topo, &store, &mut opts, &shards, &cfg, t, &db, &done_tx);

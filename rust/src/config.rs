@@ -555,6 +555,117 @@ impl std::fmt::Display for DeltaCodec {
     }
 }
 
+/// Which section exchange plane workers publish through and executors
+/// read from ([`crate::transport`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportMode {
+    /// Shared filesystem: the checkpoint's atomic rename IS the publish;
+    /// executors map the DPC2 file. Byte-identical to the pre-transport
+    /// behavior.
+    #[default]
+    Local,
+    /// Framed TCP streams: each `delta:` section is pushed to its owning
+    /// executor's endpoint (loopback rendezvous registry for now).
+    Tcp,
+}
+
+impl TransportMode {
+    pub fn parse(s: &str) -> Option<TransportMode> {
+        match s {
+            "local" => Some(TransportMode::Local),
+            "tcp" => Some(TransportMode::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportMode::Local => "local",
+            TransportMode::Tcp => "tcp",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Section exchange plane settings ([`crate::transport`]): framing is
+/// fixed (length-prefixed, fletcher64-verified); these knobs govern the
+/// client's failure behavior over a poorly connected network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransportConfig {
+    pub mode: TransportMode,
+    /// TCP connect timeout per attempt, ms.
+    pub connect_timeout_ms: u64,
+    /// Socket read/write timeout while awaiting an ack, ms.
+    pub read_timeout_ms: u64,
+    /// Re-send attempts per section after the first (a nacked or timed-out
+    /// frame is retried with capped exponential backoff).
+    pub retries: u32,
+    /// First retry backoff, ms (doubles per attempt).
+    pub backoff_ms: u64,
+    /// Exponential backoff cap, ms.
+    pub backoff_cap_ms: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            mode: TransportMode::Local,
+            connect_timeout_ms: 1000,
+            read_timeout_ms: 2000,
+            retries: 4,
+            backoff_ms: 10,
+            backoff_cap_ms: 250,
+        }
+    }
+}
+
+impl TransportConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode.as_str())),
+            (
+                "connect_timeout_ms",
+                Json::num(self.connect_timeout_ms as f64),
+            ),
+            ("read_timeout_ms", Json::num(self.read_timeout_ms as f64)),
+            ("retries", Json::num(self.retries as f64)),
+            ("backoff_ms", Json::num(self.backoff_ms as f64)),
+            ("backoff_cap_ms", Json::num(self.backoff_cap_ms as f64)),
+        ])
+    }
+
+    pub fn from_json(v: Option<&Json>) -> Self {
+        let d = TransportConfig::default();
+        let v = match v {
+            Some(v) => v,
+            None => return d,
+        };
+        let get = |k: &str, dv: u64| {
+            v.get(k)
+                .and_then(|x| x.as_usize())
+                .map(|x| x as u64)
+                .unwrap_or(dv)
+        };
+        TransportConfig {
+            mode: v
+                .get("mode")
+                .and_then(|x| x.as_str())
+                .and_then(TransportMode::parse)
+                .unwrap_or(d.mode),
+            connect_timeout_ms: get("connect_timeout_ms", d.connect_timeout_ms).max(1),
+            read_timeout_ms: get("read_timeout_ms", d.read_timeout_ms).max(1),
+            retries: get("retries", d.retries as u64) as u32,
+            backoff_ms: get("backoff_ms", d.backoff_ms),
+            backoff_cap_ms: get("backoff_cap_ms", d.backoff_cap_ms).max(1),
+        }
+    }
+}
+
 /// Coordinator runtime settings (paper §3).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
@@ -586,6 +697,8 @@ pub struct RunConfig {
     /// the outer update without them (their deltas merge into the next
     /// phase). 0 = off: the outer update gates on every path.
     pub straggler_grace_ms: u64,
+    /// Section exchange plane (local filesystem vs TCP rendezvous).
+    pub transport: TransportConfig,
     pub seed: u64,
 }
 
@@ -602,6 +715,7 @@ impl Default for RunConfig {
             delta_codec: DeltaCodec::F32,
             publish_groups: 0,
             straggler_grace_ms: 0,
+            transport: TransportConfig::default(),
             seed: 7,
         }
     }
@@ -688,6 +802,25 @@ mod tests {
             ServeConfig::from_json(&Json::parse(r#"{"breaker":{"window":64}}"#).unwrap()).unwrap();
         assert_eq!(partial.breaker.window, 64);
         assert_eq!(partial.breaker.probes, BreakerConfig::default().probes);
+    }
+
+    #[test]
+    fn transport_config_json_roundtrip() {
+        let t = TransportConfig {
+            mode: TransportMode::Tcp,
+            connect_timeout_ms: 123,
+            read_timeout_ms: 456,
+            retries: 7,
+            backoff_ms: 3,
+            backoff_cap_ms: 99,
+        };
+        let t2 = TransportConfig::from_json(Some(&Json::parse(&t.to_json().to_string()).unwrap()));
+        assert_eq!(t, t2);
+        assert_eq!(TransportConfig::from_json(None), TransportConfig::default());
+        let partial = TransportConfig::from_json(Some(&Json::parse(r#"{"mode":"tcp"}"#).unwrap()));
+        assert_eq!(partial.mode, TransportMode::Tcp);
+        assert_eq!(partial.retries, TransportConfig::default().retries);
+        assert_eq!(TransportMode::parse("carrier-pigeon"), None);
     }
 
     #[test]

@@ -5,17 +5,59 @@
 //! Here: a thread that each tick (a) reclaims expired task leases and
 //! (b) compares live worker heartbeats against the pool's target size,
 //! respawning replacements for crashed workers.
+//!
+//! The tick wait is a condvar park, not a `thread::sleep`: `stop()`
+//! interrupts it immediately, so coordinator teardown no longer pays up
+//! to a full tick per monitor (the old sleep made a 30 s tick a 30 s
+//! shutdown stall).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::coordinator::worker::WorkerPool;
 use crate::info;
 
+/// Interruptible stop flag: `wait_tick` parks on the condvar for up to
+/// one tick; `raise` flips the flag and wakes every parked waiter now.
+struct StopSignal {
+    stopped: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl StopSignal {
+    fn new() -> Self {
+        StopSignal {
+            stopped: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Park for up to `tick` or until `raise()`. Returns true when it is
+    /// time to stop.
+    fn wait_tick(&self, tick: Duration) -> bool {
+        let mut stopped = self.stopped.lock().unwrap();
+        let deadline = std::time::Instant::now() + tick;
+        while !*stopped {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self.cv.wait_timeout(stopped, deadline - now).unwrap();
+            stopped = g;
+        }
+        true
+    }
+
+    fn raise(&self) {
+        *self.stopped.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
 pub struct Monitor {
-    stop: Arc<AtomicBool>,
+    stop: Arc<StopSignal>,
     handle: Option<JoinHandle<()>>,
     pub respawns: Arc<AtomicU64>,
     pub reclaims: Arc<AtomicU64>,
@@ -23,7 +65,7 @@ pub struct Monitor {
 
 impl Monitor {
     pub fn start(pool: Arc<WorkerPool>, tick: Duration) -> Monitor {
-        let stop = Arc::new(AtomicBool::new(false));
+        let stop = Arc::new(StopSignal::new());
         let respawns = Arc::new(AtomicU64::new(0));
         let reclaims = Arc::new(AtomicU64::new(0));
         let stop2 = Arc::clone(&stop);
@@ -32,11 +74,7 @@ impl Monitor {
         let handle = std::thread::Builder::new()
             .name("monitor".into())
             .spawn(move || {
-                while !stop2.load(Ordering::Relaxed) {
-                    std::thread::sleep(tick);
-                    if stop2.load(Ordering::Relaxed) {
-                        break;
-                    }
+                while !stop2.wait_tick(tick) {
                     let ctx = pool.ctx();
                     // (a) requeue tasks whose workers died holding a lease
                     let n = ctx.queue.reclaim_expired();
@@ -75,7 +113,7 @@ impl Monitor {
     }
 
     pub fn stop(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.stop.raise();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -84,9 +122,57 @@ impl Monitor {
 
 impl Drop for Monitor {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
+        self.stop.raise();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn stop_interrupts_tick_wait_immediately() {
+        // Regression (ISSUE 10): the monitor loop used to start with
+        // std::thread::sleep(tick), so stop() blocked on join for up to
+        // a full tick. With the condvar park, stop latency must be tiny
+        // even against a tick far longer than any acceptable shutdown.
+        let sig = Arc::new(StopSignal::new());
+        let sig2 = Arc::clone(&sig);
+        let parked = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            assert!(sig2.wait_tick(Duration::from_secs(30)), "raise must win");
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        sig.raise();
+        let waited = parked.join().unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(250),
+            "stop latency {:?} not << tick",
+            t0.elapsed()
+        );
+        assert!(waited < Duration::from_secs(1), "parked thread waited {waited:?}");
+    }
+
+    #[test]
+    fn wait_tick_times_out_when_not_stopped() {
+        let sig = StopSignal::new();
+        let t0 = Instant::now();
+        assert!(!sig.wait_tick(Duration::from_millis(20)));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn raise_before_wait_returns_immediately() {
+        let sig = StopSignal::new();
+        sig.raise();
+        let t0 = Instant::now();
+        assert!(sig.wait_tick(Duration::from_secs(30)));
+        assert!(t0.elapsed() < Duration::from_millis(100));
     }
 }

@@ -39,7 +39,7 @@ use anyhow::{Context, Result};
 use crate::config::{DeltaCodec, DilocoConfig};
 use crate::coordinator::db::{CheckpointDb, CkptRow};
 use crate::optim::{rescale_factor, Nesterov, OuterAccumulator};
-use crate::params::checkpoint::{decode_delta_into, Checkpoint, SectionReader};
+use crate::params::checkpoint::{decode_delta_into, Checkpoint};
 use crate::topology::{ModuleId, ModuleStore, Topology};
 use crate::util::pool::{Pool, PooledBuf};
 
@@ -130,6 +130,10 @@ pub struct OuterConfig {
     /// Contributions carried over from the previous phase's stragglers;
     /// each joins its module's quorum as one extra expected contribution.
     pub carry_in: Vec<LateContrib>,
+    /// Section exchange plane executors read through. `None` = the local
+    /// shared-filesystem plane (map the DPC2 file), byte-identical to
+    /// the pre-transport behavior.
+    pub transport: Option<Arc<dyn crate::transport::SectionTransport>>,
 }
 
 impl OuterConfig {
@@ -383,9 +387,11 @@ pub fn executor_loop(
             continue; // nothing of ours in this checkpoint — no file I/O
         }
         let w = cfg.weight_of(row.path_id);
-        // Zero-copy open: sections are checksummed and decoded straight
-        // from the mapped file image (buffered fallback inside).
-        let mut reader = SectionReader::open_mapped(&row.file)
+        // Open through the exchange plane. Local = zero-copy map of the
+        // DPC2 file (sections checksummed and decoded straight from the
+        // image, buffered fallback inside); TCP = the sections this
+        // file's publish pushed to the executors' stores.
+        let mut reader = crate::transport::open_source(cfg.transport.as_deref(), &row.file)
             .with_context(|| format!("executor opening {}", row.file.display()))?;
         // A legacy DPC1 fallback reads the whole file at open; count it
         // immediately so no later exit path can lose it. (DPC2 backends
@@ -513,7 +519,7 @@ pub fn collect_late_contribs(
             .with_context(|| {
                 format!("late path {p}: no published row carries module {m} (phase {phase})")
             })?;
-        let mut reader = SectionReader::open_mapped(&row.file)
+        let mut reader = crate::transport::open_source(cfg.transport.as_deref(), &row.file)
             .with_context(|| format!("late-merge opening {}", row.file.display()))?;
         cfg.io
             .payload_bytes_read

@@ -70,6 +70,10 @@ pub struct DipacoRun {
     queue: Arc<TaskQueue>,
     pub db: Arc<CheckpointDb>,
     pool: Arc<WorkerPool>,
+    /// Section exchange plane shared by publishers (workers) and readers
+    /// (outer executors): local filesystem by default, the TCP plane when
+    /// `run.transport.mode` asks for it.
+    transport: Arc<dyn crate::transport::SectionTransport>,
     outer_opts: Vec<Nesterov>,
     executor_shards: Vec<Vec<crate::topology::ModuleId>>,
     next_task_id: u64,
@@ -115,7 +119,22 @@ impl DipacoRun {
             run.lease_ms,
         )));
         let db = Arc::new(CheckpointDb::new());
-        let ctx = WorkerCtx::new(
+        let executor_shards = shard_modules(&topo, run.outer_executors);
+        // The exchange plane is built from the SAME shard list the
+        // executors run over, so rendezvous ownership and executor
+        // accumulation cannot drift apart.
+        let transport: Arc<dyn crate::transport::SectionTransport> = match run.transport.mode {
+            crate::config::TransportMode::Local => {
+                Arc::new(crate::transport::local::LocalTransport)
+            }
+            crate::config::TransportMode::Tcp => crate::transport::tcp::TcpExchange::start(
+                &executor_shards,
+                run.transport.clone(),
+                None,
+            )
+            .context("starting TCP section exchange plane")?,
+        };
+        let mut ctx = WorkerCtx::new(
             Arc::clone(&engine),
             Arc::clone(&queue),
             Arc::clone(&db),
@@ -126,8 +145,10 @@ impl DipacoRun {
             run.clone(),
             early_stop,
         );
+        Arc::get_mut(&mut ctx)
+            .expect("worker ctx is unshared before spawn")
+            .transport = Arc::clone(&transport);
         let pool = WorkerPool::spawn(ctx, run.workers, run.backup_workers);
-        let executor_shards = shard_modules(&topo, run.outer_executors);
         let outer_opts = (0..executor_shards.len())
             .map(|_| Nesterov::new(diloco.outer_lr, diloco.outer_momentum))
             .collect();
@@ -144,6 +165,7 @@ impl DipacoRun {
             queue,
             db,
             pool,
+            transport,
             outer_opts,
             executor_shards,
             next_task_id: 1,
@@ -215,7 +237,11 @@ impl DipacoRun {
             }));
             self.next_task_id += 1;
         }
-        self.queue.push_all(tasks);
+        // A closed queue here means shutdown raced phase start; surface
+        // it as a typed error instead of silently dropping the phase.
+        self.queue
+            .push_all(tasks)
+            .with_context(|| format!("phase {phase}: task queue closed (shutdown in progress)"))?;
 
         // ---- outer executors consume per-module delta sections online ----
         let outer_t0 = Instant::now();
@@ -229,6 +255,7 @@ impl DipacoRun {
                 .then(|| std::time::Duration::from_millis(self.run.straggler_grace_ms)),
             declared_late: Vec::new(), // production lateness is timing-based
             carry_in: std::mem::take(&mut self.pending_carry),
+            transport: Some(Arc::clone(&self.transport)),
         };
         let (done_tx, _done_rx) = channel();
         let report = run_phase_outer(

@@ -12,10 +12,22 @@
 //! possible to recover from server failures or preemptions").
 //!
 //! Delivery guarantee: at-least-once handout, exactly-once *retirement* —
-//! `complete()` on an expired/reassigned lease generation is rejected, so
-//! a resurrected zombie worker cannot double-retire a task. (Effects of
+//! `complete()`/`ack()` on an expired/reassigned lease generation is
+//! rejected (and counted in [`QueueStats::stale_completes`]), so a
+//! resurrected zombie worker cannot double-retire a task. (Effects of
 //! zombie side-work are idempotent: checkpoint writes are atomic renames
 //! keyed by task, and the DB dedups by (phase, path).)
+//!
+//! Multi-host semantics (the ARW orchestrator `Queue` shape, ROADMAP
+//! item 2): consumers may `nack` a lease with an optional `retry_after`
+//! backoff — the task is not re-leasable before the delay elapses;
+//! producers may attach a client-supplied **idempotency key**
+//! ([`TaskQueue::push_idem`]) so a redelivered publish enqueues exactly
+//! once; and tasks are split across **priority lanes** — eval/carry
+//! work rides the express lane and can never starve behind a phase's
+//! train backlog. Closing the queue is a typed condition, not a panic:
+//! `push`/`push_all` return [`QueueClosed`] and publishers treat it as a
+//! clean drain.
 //!
 //! Poison-task containment: with [`TaskQueue::with_max_attempts`] a task
 //! that keeps failing is moved to a terminal *dead-letter* list after its
@@ -24,7 +36,7 @@
 //! spinning on a task that can never retire. The default (`new`) keeps
 //! the paper's retry-forever behavior.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -37,6 +49,21 @@ pub struct LeaseId {
     pub generation: u64,
 }
 
+/// Typed rejection for a publish that races [`TaskQueue::close`].
+/// Callers treat it as a clean drain (shutdown is in progress; the work
+/// is intentionally dropped) — before this existed, the race was an
+/// `assert!` that panicked the whole coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueueClosed;
+
+impl std::fmt::Display for QueueClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("queue closed")
+    }
+}
+
+impl std::error::Error for QueueClosed {}
+
 #[derive(Debug)]
 struct InFlight {
     task: Task,
@@ -46,16 +73,31 @@ struct InFlight {
     worker: String,
 }
 
+/// A queued task plus its earliest re-lease time (set by
+/// `nack(.., retry_after)`); `None` = leasable immediately.
+#[derive(Debug)]
+struct Pending {
+    task: Task,
+    not_before: Option<Instant>,
+}
+
 #[derive(Debug, Default)]
 struct Inner {
-    pending: VecDeque<Task>,
+    /// Express lane: eval/carry tasks, always drained before `bulk`.
+    express: VecDeque<Pending>,
+    /// Bulk lane: the phase's train backlog.
+    bulk: VecDeque<Pending>,
     in_flight: HashMap<u64, InFlight>,
     generations: HashMap<u64, u64>,
+    /// Client-supplied idempotency keys already accepted (push_idem).
+    idem_seen: HashSet<String>,
     dead: Vec<Task>,
     completed: u64,
     requeues: u64,
     reclaimed: u64,
     buried: u64,
+    stale_completes: u64,
+    idem_dropped: u64,
     closed: bool,
 }
 
@@ -80,6 +122,14 @@ pub struct QueueStats {
     /// Cumulative tasks moved to the terminal dead-letter list after
     /// exhausting `max_attempts`. Survives checkpoints.
     pub buried: u64,
+    /// Cumulative `complete()`/`fail()`/`nack()` calls rejected because
+    /// the lease generation was stale (zombie double-retire attempts).
+    /// Previously these returned `false` with no trace. Survives
+    /// checkpoints.
+    pub stale_completes: u64,
+    /// Cumulative pushes dropped by idempotency-key dedup (redelivered
+    /// publishes). Survives checkpoints.
+    pub idem_dropped: u64,
 }
 
 impl TaskQueue {
@@ -99,22 +149,83 @@ impl TaskQueue {
         }
     }
 
-    pub fn push(&self, task: Task) {
-        let mut g = self.inner.lock().unwrap();
-        assert!(!g.closed, "queue closed");
-        g.pending.push_back(task);
-        drop(g);
-        self.cv.notify_one();
+    /// Route a task to its lane: eval (and any future carry/control work)
+    /// rides express; train work rides bulk.
+    fn enqueue_locked(g: &mut Inner, task: Task, not_before: Option<Instant>) {
+        let entry = Pending { task, not_before };
+        match &entry.task {
+            Task::Eval(_) => g.express.push_back(entry),
+            Task::Train(_) => g.bulk.push_back(entry),
+        }
     }
 
-    pub fn push_all<I: IntoIterator<Item = Task>>(&self, tasks: I) {
+    pub fn push(&self, task: Task) -> Result<(), QueueClosed> {
         let mut g = self.inner.lock().unwrap();
-        assert!(!g.closed, "queue closed");
+        if g.closed {
+            return Err(QueueClosed);
+        }
+        Self::enqueue_locked(&mut g, task, None);
+        drop(g);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn push_all<I: IntoIterator<Item = Task>>(&self, tasks: I) -> Result<(), QueueClosed> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueClosed);
+        }
         for t in tasks {
-            g.pending.push_back(t);
+            Self::enqueue_locked(&mut g, t, None);
         }
         drop(g);
         self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Push with a client-supplied idempotency key: a redelivered publish
+    /// (same key) is dropped instead of double-enqueueing. Returns
+    /// `Ok(true)` if the task was enqueued, `Ok(false)` if the key was
+    /// already seen. Keys survive queue checkpoints, so dedup holds
+    /// across a server restart too.
+    pub fn push_idem(&self, task: Task, idem_key: &str) -> Result<bool, QueueClosed> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(QueueClosed);
+        }
+        if !g.idem_seen.insert(idem_key.to_string()) {
+            g.idem_dropped += 1;
+            return Ok(false);
+        }
+        Self::enqueue_locked(&mut g, task, None);
+        drop(g);
+        self.cv.notify_one();
+        Ok(true)
+    }
+
+    /// Pop the first *ready* entry, express lane first. A delayed entry
+    /// (nack backoff still running) is skipped without blocking ready
+    /// entries behind it; once the queue is closed, delays are void (the
+    /// drain must finish).
+    fn pop_ready_locked(g: &mut Inner, now: Instant) -> Option<Task> {
+        let closed = g.closed;
+        let pop = |lane: &mut VecDeque<Pending>| -> Option<Task> {
+            let i = lane
+                .iter()
+                .position(|p| closed || p.not_before.map_or(true, |t| t <= now))?;
+            lane.remove(i).map(|p| p.task)
+        };
+        pop(&mut g.express).or_else(|| pop(&mut g.bulk))
+    }
+
+    /// Earliest `not_before` across both lanes (wake-up hint while every
+    /// pending entry is still delayed).
+    fn next_ready_locked(g: &Inner) -> Option<Instant> {
+        g.express
+            .iter()
+            .chain(g.bulk.iter())
+            .filter_map(|p| p.not_before)
+            .min()
     }
 
     /// Blocking lease with timeout. Reclaims expired leases opportunistically.
@@ -124,7 +235,8 @@ impl TaskQueue {
         let mut g = self.inner.lock().unwrap();
         loop {
             Self::reclaim_locked(&mut g, self.max_attempts);
-            if let Some(task) = g.pending.pop_front() {
+            let now = Instant::now();
+            if let Some(task) = Self::pop_ready_locked(&mut g, now) {
                 let task_id = task.id();
                 let generation = g.generations.entry(task_id).or_insert(0);
                 *generation += 1;
@@ -143,15 +255,20 @@ impl TaskQueue {
             if g.closed {
                 return None;
             }
-            let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            // Wake early enough to reclaim the next expiring lease.
+            // Wake early enough to reclaim the next expiring lease or
+            // redeliver the next nack-delayed task.
             let mut wait = deadline - now;
             if let Some(next_exp) = g.in_flight.values().map(|f| f.deadline).min() {
                 let until_exp = next_exp.saturating_duration_since(now) + Duration::from_millis(1);
                 wait = wait.min(until_exp);
+            }
+            if let Some(next_ready) = Self::next_ready_locked(&g) {
+                let until_ready =
+                    next_ready.saturating_duration_since(now) + Duration::from_millis(1);
+                wait = wait.min(until_ready);
             }
             let (g2, _) = self.cv.wait_timeout(g, wait).unwrap();
             g = g2;
@@ -170,37 +287,57 @@ impl TaskQueue {
                 self.cv.notify_all();
                 true
             }
-            _ => false,
+            _ => {
+                g.stale_completes += 1;
+                false
+            }
         }
+    }
+
+    /// ARW-queue alias for [`Self::complete`]: acknowledge and retire.
+    pub fn ack(&self, lease: LeaseId) -> bool {
+        self.complete(lease)
     }
 
     /// Explicitly fail a lease (graceful preemption): requeue immediately
     /// (or dead-letter once the task's attempts are exhausted).
     pub fn fail(&self, lease: LeaseId) -> bool {
+        self.nack(lease, None)
+    }
+
+    /// Negative-acknowledge a lease: the task returns to its lane —
+    /// immediately, or not before `retry_after` elapses (the redelivery
+    /// backoff a failing consumer asks for). Counts as an attempt exactly
+    /// like `fail`; a stale generation is rejected (false) and counted.
+    pub fn nack(&self, lease: LeaseId, retry_after: Option<Duration>) -> bool {
         let mut g = self.inner.lock().unwrap();
         match g.in_flight.get(&lease.task_id) {
             Some(f) if f.generation == lease.generation => {
                 let f = g.in_flight.remove(&lease.task_id).unwrap();
-                Self::requeue_or_bury(&mut g, self.max_attempts, f);
+                let not_before = retry_after.map(|d| Instant::now() + d);
+                Self::requeue_or_bury(&mut g, self.max_attempts, f, not_before);
                 drop(g);
                 // notify_all: a burial may be exactly what lets a
                 // wait_idle() parked on the condvar return
                 self.cv.notify_all();
                 true
             }
-            _ => false,
+            _ => {
+                g.stale_completes += 1;
+                false
+            }
         }
     }
 
     /// Requeue a failed/expired lease — unless the task has used up
     /// `max_attempts` leases (generation counts handouts), in which case
     /// it moves to the terminal dead-letter list.
-    fn requeue_or_bury(g: &mut Inner, max_attempts: u64, f: InFlight) {
+    fn requeue_or_bury(g: &mut Inner, max_attempts: u64, f: InFlight, not_before: Option<Instant>) {
         if max_attempts > 0 && f.generation >= max_attempts {
             g.dead.push(f.task);
             g.buried += 1;
         } else {
-            g.pending.push_back(f.task);
+            Self::enqueue_locked(g, f.task, not_before);
             g.requeues += 1;
         }
     }
@@ -216,7 +353,7 @@ impl TaskQueue {
         for id in expired {
             let f = g.in_flight.remove(&id).unwrap();
             g.reclaimed += 1;
-            Self::requeue_or_bury(g, max_attempts, f);
+            Self::requeue_or_bury(g, max_attempts, f, None);
         }
     }
 
@@ -234,7 +371,8 @@ impl TaskQueue {
         n
     }
 
-    /// Close the queue: workers drain what's left then get None.
+    /// Close the queue: workers drain what's left then get None; further
+    /// pushes return [`QueueClosed`].
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.cv.notify_all();
@@ -242,7 +380,7 @@ impl TaskQueue {
 
     pub fn is_idle(&self) -> bool {
         let g = self.inner.lock().unwrap();
-        g.pending.is_empty() && g.in_flight.is_empty()
+        g.express.is_empty() && g.bulk.is_empty() && g.in_flight.is_empty()
     }
 
     /// Block until every pushed task has been retired (completed or
@@ -253,7 +391,7 @@ impl TaskQueue {
         let mut g = self.inner.lock().unwrap();
         loop {
             Self::reclaim_locked(&mut g, self.max_attempts);
-            if g.pending.is_empty() && g.in_flight.is_empty() {
+            if g.express.is_empty() && g.bulk.is_empty() && g.in_flight.is_empty() {
                 return;
             }
             let mut wait = poll;
@@ -269,13 +407,15 @@ impl TaskQueue {
     pub fn stats(&self) -> QueueStats {
         let g = self.inner.lock().unwrap();
         QueueStats {
-            pending: g.pending.len(),
+            pending: g.express.len() + g.bulk.len(),
             in_flight: g.in_flight.len(),
             completed: g.completed,
             requeues: g.requeues,
             dead: g.dead.len(),
             reclaimed: g.reclaimed,
             buried: g.buried,
+            stale_completes: g.stale_completes,
+            idem_dropped: g.idem_dropped,
         }
     }
 
@@ -286,6 +426,9 @@ impl TaskQueue {
 
     /// Queue-state checkpoint (paper §3.1). Tasks only, not leases —
     /// leases are lost on server failure and the tasks return to pending.
+    /// Nack backoffs are advisory and likewise not persisted (a restored
+    /// task is immediately leasable, like a reclaimed one). Lanes are
+    /// re-derived from task kind on restore.
     pub fn checkpoint_state(&self) -> Json {
         let g = self.inner.lock().unwrap();
         let encode = |t: &Task| -> Json {
@@ -323,7 +466,12 @@ impl TaskQueue {
         Json::obj(vec![
             (
                 "pending",
-                Json::arr(g.pending.iter().map(encode)),
+                Json::arr(
+                    g.express
+                        .iter()
+                        .chain(g.bulk.iter())
+                        .map(|p| encode(&p.task)),
+                ),
             ),
             (
                 "in_flight",
@@ -334,6 +482,15 @@ impl TaskQueue {
             ("max_attempts", Json::num(self.max_attempts as f64)),
             ("reclaimed", Json::num(g.reclaimed as f64)),
             ("buried", Json::num(g.buried as f64)),
+            ("stale_completes", Json::num(g.stale_completes as f64)),
+            ("idem_dropped", Json::num(g.idem_dropped as f64)),
+            // accepted idempotency keys: without these a redelivered
+            // publish would double-enqueue across a server restart
+            ("idem", {
+                let mut keys: Vec<&String> = g.idem_seen.iter().collect();
+                keys.sort();
+                Json::arr(keys.into_iter().map(|k| Json::str(k.clone())))
+            }),
             // per-task attempt counts: without these a poison task's
             // dead-letter budget would reset on every server restart
             ("generations", {
@@ -396,7 +553,8 @@ impl TaskQueue {
         for key in ["pending", "in_flight"] {
             if let Some(arr) = state.get(key).and_then(|a| a.as_arr()) {
                 for j in arr {
-                    q.push(decode(j)?);
+                    q.push(decode(j)?)
+                        .expect("freshly restored queue is open");
                 }
             }
         }
@@ -417,6 +575,23 @@ impl TaskQueue {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(0) as u64;
             g.buried = state.get("buried").and_then(|v| v.as_usize()).unwrap_or(0) as u64;
+            g.stale_completes = state
+                .get("stale_completes")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0) as u64;
+            g.idem_dropped = state
+                .get("idem_dropped")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0) as u64;
+            // accepted idempotency keys survive the restart (dedup must
+            // hold across hosts AND across server incarnations)
+            if let Some(arr) = state.get("idem").and_then(|a| a.as_arr()) {
+                for k in arr {
+                    if let Some(s) = k.as_str() {
+                        g.idem_seen.insert(s.to_string());
+                    }
+                }
+            }
             // attempt counts survive the restart, so a poison task cannot
             // mint a fresh max_attempts budget by crashing the server;
             // pre-generations checkpoints restore with empty counts
@@ -437,7 +612,7 @@ impl TaskQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::task::TrainTask;
+    use crate::coordinator::task::{EvalTask, TrainTask};
 
     fn train_task(id: u64) -> Task {
         Task::Train(TrainTask {
@@ -453,11 +628,20 @@ mod tests {
         })
     }
 
+    fn eval_task(id: u64) -> Task {
+        Task::Eval(EvalTask {
+            id,
+            phase: 0,
+            path: id as usize,
+            ckpt: "e.dpc".into(),
+        })
+    }
+
     #[test]
     fn fifo_lease_complete() {
         let q = TaskQueue::new(Duration::from_secs(10));
-        q.push(train_task(1));
-        q.push(train_task(2));
+        q.push(train_task(1)).unwrap();
+        q.push(train_task(2)).unwrap();
         let (l1, t1) = q.lease("w0", Duration::from_millis(10)).unwrap();
         assert_eq!(t1.id(), 1);
         assert!(q.complete(l1));
@@ -471,7 +655,7 @@ mod tests {
     #[test]
     fn expired_lease_requeues() {
         let q = TaskQueue::new(Duration::from_millis(20));
-        q.push(train_task(1));
+        q.push(train_task(1)).unwrap();
         let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
         std::thread::sleep(Duration::from_millis(30));
         // another worker picks up the same task after expiry
@@ -484,12 +668,14 @@ mod tests {
         assert_eq!(q.stats().completed, 1);
         assert_eq!(q.stats().reclaimed, 1, "expiry recovery counts as a reclaim");
         assert_eq!(q.stats().buried, 0);
+        // the zombie's rejected retirement is observable, not silent
+        assert_eq!(q.stats().stale_completes, 1);
     }
 
     #[test]
     fn explicit_fail_requeues_immediately() {
         let q = TaskQueue::new(Duration::from_secs(10));
-        q.push(train_task(7));
+        q.push(train_task(7)).unwrap();
         let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
         assert!(q.fail(l));
         let (l2, t) = q.lease("w1", Duration::from_millis(10)).unwrap();
@@ -511,10 +697,131 @@ mod tests {
     }
 
     #[test]
+    fn push_after_close_is_typed_rejection_not_panic() {
+        // Regression (ISSUE 10): push/push_all used to assert!(!closed),
+        // panicking the whole coordinator when a late publish raced
+        // close(). Now the race is a typed Err the publisher drains on.
+        let q = std::sync::Arc::new(TaskQueue::new(Duration::from_secs(10)));
+        let q2 = std::sync::Arc::clone(&q);
+        // a publisher thread racing close(): pushes until rejected
+        let publisher = std::thread::spawn(move || {
+            let mut accepted = 0u64;
+            for i in 0.. {
+                match q2.push(train_task(i)) {
+                    Ok(()) => accepted += 1,
+                    Err(QueueClosed) => return accepted, // clean drain
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            unreachable!()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        let accepted = publisher.join().expect("publisher must not panic");
+        // everything accepted before the close is still drainable
+        let mut drained = 0u64;
+        while let Some((l, _)) = q.lease("w0", Duration::from_millis(5)) {
+            q.complete(l);
+            drained += 1;
+        }
+        assert_eq!(drained, accepted);
+        assert_eq!(q.push(train_task(9999)), Err(QueueClosed));
+        assert_eq!(q.push_all([train_task(9998)]), Err(QueueClosed));
+        assert_eq!(q.push_idem(train_task(9997), "k"), Err(QueueClosed));
+    }
+
+    #[test]
+    fn eval_lane_preempts_train_backlog() {
+        // Priority lanes: an eval task pushed behind a long train backlog
+        // is still the next task handed out.
+        let q = TaskQueue::new(Duration::from_secs(10));
+        for i in 0..8 {
+            q.push(train_task(i)).unwrap();
+        }
+        q.push(eval_task(100)).unwrap();
+        let (l, t) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        assert!(matches!(t, Task::Eval(_)), "express lane must go first");
+        assert_eq!(t.id(), 100);
+        assert!(q.complete(l));
+        // then the train backlog drains in FIFO order
+        let (_, t2) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        assert_eq!(t2.id(), 0);
+    }
+
+    #[test]
+    fn nack_with_retry_after_delays_redelivery() {
+        let q = TaskQueue::new(Duration::from_secs(10));
+        q.push(train_task(1)).unwrap();
+        let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        let t0 = Instant::now();
+        assert!(q.nack(l, Some(Duration::from_millis(80))));
+        // not re-leasable before the delay elapses ...
+        assert!(
+            q.lease("w1", Duration::from_millis(20)).is_none(),
+            "nacked task redelivered before its retry_after"
+        );
+        // ... but redelivered promptly once it does
+        let (l2, t) = q.lease("w1", Duration::from_millis(500)).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(80));
+        assert_eq!(t.id(), 1);
+        assert_eq!(l2.generation, 2, "nack counts as an attempt");
+        assert!(q.complete(l2));
+        assert_eq!(q.stats().requeues, 1);
+    }
+
+    #[test]
+    fn delayed_nack_does_not_block_ready_tasks_behind_it() {
+        let q = TaskQueue::new(Duration::from_secs(10));
+        q.push(train_task(1)).unwrap();
+        let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        assert!(q.nack(l, Some(Duration::from_millis(200))));
+        q.push(train_task(2)).unwrap();
+        // task 2 is ready and must not starve behind the delayed task 1
+        let (l2, t) = q.lease("w1", Duration::from_millis(20)).unwrap();
+        assert_eq!(t.id(), 2);
+        assert!(q.complete(l2));
+    }
+
+    #[test]
+    fn idempotency_key_dedups_redelivered_publish() {
+        let q = TaskQueue::new(Duration::from_secs(10));
+        assert_eq!(q.push_idem(eval_task(1), "eval:p0:path1"), Ok(true));
+        // a redelivered publish (retry after a lost ack) with the same key
+        assert_eq!(q.push_idem(eval_task(1), "eval:p0:path1"), Ok(false));
+        assert_eq!(q.stats().pending, 1, "duplicate must not double-enqueue");
+        assert_eq!(q.stats().idem_dropped, 1);
+        // dedup survives a checkpoint/restore cycle
+        let q2 = TaskQueue::restore(&q.checkpoint_state(), Duration::from_secs(10)).unwrap();
+        assert_eq!(q2.push_idem(eval_task(1), "eval:p0:path1"), Ok(false));
+        assert_eq!(q2.stats().pending, 1);
+        assert_eq!(q2.stats().idem_dropped, 2, "idem_dropped survives restore");
+        // a different key is independent work
+        assert_eq!(q2.push_idem(eval_task(2), "eval:p0:path2"), Ok(true));
+        assert_eq!(q2.stats().pending, 2);
+    }
+
+    #[test]
+    fn stale_retirements_are_counted() {
+        let q = TaskQueue::new(Duration::from_millis(20));
+        q.push(train_task(1)).unwrap();
+        let (zombie, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        let (live, _) = q.lease("w1", Duration::from_millis(100)).unwrap();
+        assert!(!q.complete(zombie));
+        assert!(!q.fail(zombie));
+        assert!(!q.nack(zombie, Some(Duration::from_millis(5))));
+        assert_eq!(q.stats().stale_completes, 3);
+        assert!(q.complete(live));
+        // counter survives checkpoint/restore
+        let q2 = TaskQueue::restore(&q.checkpoint_state(), Duration::from_millis(20)).unwrap();
+        assert_eq!(q2.stats().stale_completes, 3);
+    }
+
+    #[test]
     fn concurrent_workers_complete_everything_despite_failures() {
         let q = std::sync::Arc::new(TaskQueue::new(Duration::from_millis(30)));
         for i in 0..40 {
-            q.push(train_task(i));
+            q.push(train_task(i)).unwrap();
         }
         let done = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
         std::thread::scope(|s| {
@@ -544,7 +851,7 @@ mod tests {
     #[test]
     fn dead_letter_after_max_attempts_unblocks_wait_idle() {
         let q = std::sync::Arc::new(TaskQueue::with_max_attempts(Duration::from_secs(10), 2));
-        q.push(train_task(1));
+        q.push(train_task(1)).unwrap();
         std::thread::scope(|s| {
             let q2 = std::sync::Arc::clone(&q);
             // a worker that fails the task every time it is handed out
@@ -573,7 +880,7 @@ mod tests {
     #[test]
     fn expiry_buries_after_max_attempts_and_rejects_zombie() {
         let q = TaskQueue::with_max_attempts(Duration::from_millis(20), 1);
-        q.push(train_task(3));
+        q.push(train_task(3)).unwrap();
         let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
         std::thread::sleep(Duration::from_millis(30));
         assert_eq!(q.reclaim_expired(), 1);
@@ -586,13 +893,14 @@ mod tests {
         // zombie completion of a buried task is rejected
         assert!(!q.complete(l));
         assert_eq!(q.stats().completed, 0);
+        assert_eq!(q.stats().stale_completes, 1);
     }
 
     #[test]
     fn restore_redelivers_open_lease_exactly_once() {
         let q = TaskQueue::new(Duration::from_secs(30));
-        q.push(train_task(1));
-        q.push(train_task(2));
+        q.push(train_task(1)).unwrap();
+        q.push(train_task(2)).unwrap();
         let (lease, leased) = q.lease("w0", Duration::from_millis(10)).unwrap();
         assert_eq!(leased.id(), 1);
         // checkpoint taken while the lease is open; server then "dies"
@@ -614,8 +922,8 @@ mod tests {
     #[test]
     fn restore_preserves_dead_letter_state() {
         let q = TaskQueue::with_max_attempts(Duration::from_secs(5), 1);
-        q.push(train_task(1));
-        q.push(train_task(2));
+        q.push(train_task(1)).unwrap();
+        q.push(train_task(2)).unwrap();
         let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
         q.fail(l); // attempt 1 of max 1 -> buried
         let state = q.checkpoint_state();
@@ -632,7 +940,7 @@ mod tests {
     #[test]
     fn restore_preserves_cumulative_fault_counters() {
         let q = TaskQueue::with_max_attempts(Duration::from_millis(20), 1);
-        q.push(train_task(1));
+        q.push(train_task(1)).unwrap();
         let _ = q.lease("w0", Duration::from_millis(10)).unwrap();
         std::thread::sleep(Duration::from_millis(30));
         assert_eq!(q.reclaim_expired(), 1); // reclaim #1, and burial #1
@@ -648,6 +956,8 @@ mod tests {
         let q3 = TaskQueue::restore(&old, Duration::from_secs(5)).unwrap();
         assert_eq!(q3.stats().reclaimed, 0);
         assert_eq!(q3.stats().buried, 0);
+        assert_eq!(q3.stats().stale_completes, 0);
+        assert_eq!(q3.stats().idem_dropped, 0);
     }
 
     #[test]
@@ -673,7 +983,7 @@ mod tests {
         // map, so a poison task got a fresh max_attempts budget on every
         // server restart and could churn forever.
         let q = TaskQueue::with_max_attempts(Duration::from_secs(5), 2);
-        q.push(train_task(1));
+        q.push(train_task(1)).unwrap();
         let (l, _) = q.lease("w0", Duration::from_millis(10)).unwrap();
         q.fail(l); // attempt 1 of 2: requeued
         let state = q.checkpoint_state();
@@ -697,7 +1007,7 @@ mod tests {
     fn checkpoint_restore_preserves_tasks() {
         let q = TaskQueue::new(Duration::from_secs(5));
         for i in 0..5 {
-            q.push(train_task(i));
+            q.push(train_task(i)).unwrap();
         }
         let _ = q.lease("w0", Duration::from_millis(10)).unwrap(); // one in flight
         let state = q.checkpoint_state();

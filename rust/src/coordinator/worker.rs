@@ -68,6 +68,10 @@ pub struct WorkerCtx {
     /// production. Consulted at task start, around checkpoint
     /// publication, and after the DPC2 file is written.
     pub chaos: Option<Arc<crate::chaos::injector::FaultInjector>>,
+    /// Section exchange plane this worker publishes through after each
+    /// checkpoint save (local filesystem by default; the phase driver
+    /// swaps in the TCP exchange when the run asks for it).
+    pub transport: Arc<dyn crate::transport::SectionTransport>,
     pub shutting_down: AtomicBool,
     next_eval_id: AtomicU64,
 }
@@ -99,6 +103,7 @@ impl WorkerCtx {
             heartbeats: Mutex::new(HashMap::new()),
             crash_prob: 0.0,
             chaos: None,
+            transport: Arc::new(crate::transport::local::LocalTransport),
             shutting_down: AtomicBool::new(false),
             next_eval_id: AtomicU64::new(1 << 32),
         })
@@ -187,11 +192,29 @@ pub fn worker_loop(ctx: Arc<WorkerCtx>, name: String, backup: bool) {
         };
         match res {
             Ok(()) => {
-                ctx.queue.complete(lease);
+                // A false return is a zombie double-retire: the lease
+                // expired, the task was reassigned, and this worker's
+                // result arrived too late to count. It used to vanish
+                // silently; now it is counted (QueueStats.stale_completes)
+                // and logged.
+                if !ctx.queue.complete(lease) {
+                    crate::warn_!(
+                        "worker",
+                        "{name} completed {} on a stale lease (task was reassigned); \
+                         result dropped",
+                        task.describe()
+                    );
+                }
             }
             Err(e) => {
                 crate::warn_!("worker", "{name} failed {}: {e:#}", task.describe());
-                ctx.queue.fail(lease);
+                if !ctx.queue.fail(lease) {
+                    crate::warn_!(
+                        "worker",
+                        "{name} failed {} on a stale lease (task was reassigned)",
+                        task.describe()
+                    );
+                }
             }
         }
         if ctx.crash_prob > 0.0 && rng.f64() < ctx.crash_prob {
@@ -381,12 +404,35 @@ fn run_train(ctx: &WorkerCtx, t: &TrainTask) -> Result<()> {
     }
     if let Some(ckpt) = eval_ckpt {
         let id = ctx.next_eval_id.fetch_add(1, Ordering::Relaxed);
-        ctx.queue.push(Task::Eval(EvalTask {
-            id,
-            phase: t.phase,
-            path: t.path,
-            ckpt,
-        }));
+        // One eval per (phase, path), no matter how many times a zombie
+        // re-execution of this train task reaches this line: the
+        // idempotency key dedups redelivered publishes. And a closed
+        // queue means shutdown is draining — dropping the eval is the
+        // clean exit (it used to assert and take the coordinator down).
+        let idem = format!("eval:p{}:path{}", t.phase, t.path);
+        match ctx.queue.push_idem(
+            Task::Eval(EvalTask {
+                id,
+                phase: t.phase,
+                path: t.path,
+                ckpt,
+            }),
+            &idem,
+        ) {
+            Ok(true) => {}
+            Ok(false) => crate::debug!(
+                "worker",
+                "eval for phase {} path {} already enqueued (deduped by key {idem})",
+                t.phase,
+                t.path
+            ),
+            Err(_closed) => crate::debug!(
+                "worker",
+                "queue closed; dropping eval for phase {} path {} (clean shutdown drain)",
+                t.phase,
+                t.path
+            ),
+        }
     }
     Ok(())
 }
@@ -481,6 +527,26 @@ fn publish_group(
             inj.corrupt_after_write(t.phase, t.path, &file)?;
         }
     }
+    // Ship the group's sections through the exchange plane BEFORE the DB
+    // row exists, so a row never references sections the plane cannot
+    // serve. Local transport is a no-op (the save's rename published).
+    ctx.transport
+        .publish(
+            &crate::transport::PublishCtx {
+                phase: t.phase,
+                path: t.path,
+                kind: kind.clone(),
+            },
+            &file,
+            &modules,
+        )
+        .with_context(|| {
+            format!(
+                "publishing sections of {} for path {}",
+                file.display(),
+                t.path
+            )
+        })?;
     ctx.db.insert(CkptRow {
         rowid: 0,
         phase: t.phase,

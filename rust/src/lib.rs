@@ -25,9 +25,17 @@
 //!   norm rescaling and shard-size loss reweighing (paper §2.7).
 //! * [`runtime`] — PJRT engine loading `artifacts/*.hlo.txt`.
 //! * [`coordinator`] — the paper's §3 infrastructure: fault-tolerant task
-//!   queue, worker pool (+ backup pool, preemption injection), checkpoint
-//!   DB, sharded outer-optimization executors with online averaging,
-//!   health monitor, phase orchestration of Algorithm 1.
+//!   queue (ack/nack leases, retry-after delays, idempotency keys,
+//!   priority lanes), worker pool (+ backup pool, preemption injection),
+//!   checkpoint DB, sharded outer-optimization executors with online
+//!   averaging, health monitor, phase orchestration of Algorithm 1.
+//! * [`transport`] — the section exchange plane (ROADMAP item 2): a
+//!   [`transport::SectionTransport`] trait over how published `delta:`
+//!   sections travel from workers to executors — the local
+//!   shared-filesystem plane (byte-identical to mapping the DPC2 file)
+//!   and a framed-TCP plane with fletcher64-verified length-prefixed
+//!   frames, a module-shard rendezvous registry, timeouts, and
+//!   capped-backoff retry.
 //! * [`chaos`] — fault-injection harness: seeded fault plans, an injector
 //!   threaded through worker/publication hooks, a DPC2 corruptor, an
 //!   engine-free coordinator simulation, and convergence-equivalence
@@ -95,6 +103,16 @@ pub mod coordinator {
     pub mod queue;
     pub mod task;
     pub mod worker;
+}
+
+pub mod transport {
+    pub mod frame;
+    pub mod local;
+    pub mod rendezvous;
+    pub mod tcp;
+
+    mod plane;
+    pub use plane::{open_source, PublishCtx, SectionSource, SectionTransport};
 }
 
 pub mod chaos {

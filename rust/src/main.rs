@@ -70,6 +70,12 @@ fn run() -> Result<()> {
                  --delta-codec C          delta wire codec: f32|bf16|int8 (default f32)\n\
                  --publish-groups N       staggered publication groups (default 0 = off)\n\
                  --grace-ms N             straggler grace window, ms (default 0 = off)\n\
+                 --transport M            section exchange plane: local|tcp (default local)\n\
+                 --net-connect-ms N       tcp connect timeout per attempt (default 1000)\n\
+                 --net-read-ms N          tcp ack read timeout (default 2000)\n\
+                 --net-retries N          re-sends per section after the first (default 4)\n\
+                 --net-backoff-ms N       first retry backoff, doubles per attempt (default 10)\n\
+                 --net-backoff-cap-ms N   retry backoff cap (default 250)\n\
                  \n\
                  serve options:\n\
                  --requests N             request stream size (default 96)\n\
@@ -197,6 +203,19 @@ fn train_cmd(args: &Args) -> Result<()> {
             },
             publish_groups: args.usize("publish-groups", 0),
             straggler_grace_ms: args.u64("grace-ms", 0),
+            transport: {
+                let s = args.get_or("transport", "local");
+                let mode = dipaco::config::TransportMode::parse(s)
+                    .with_context(|| format!("bad --transport {s:?} (local|tcp)"))?;
+                dipaco::config::TransportConfig {
+                    mode,
+                    connect_timeout_ms: args.u64("net-connect-ms", 1000),
+                    read_timeout_ms: args.u64("net-read-ms", 2000),
+                    retries: args.usize("net-retries", 4) as u32,
+                    backoff_ms: args.u64("net-backoff-ms", 10),
+                    backoff_cap_ms: args.u64("net-backoff-cap-ms", 250),
+                }
+            },
             seed: args.u64("seed", 7),
         },
         rundir: env.workdir.join(format!(

@@ -814,8 +814,9 @@ fn load_dpc1(buf: &[u8], path: &Path) -> Result<Checkpoint> {
 }
 
 /// Bulk f32 -> LE bytes: encodes through a stack block per 1024 floats
-/// instead of a 4-byte extend per element.
-fn write_f32s_le(out: &mut Vec<u8>, data: &[f32]) {
+/// instead of a 4-byte extend per element. Crate-visible: transport
+/// frames carry section payloads in exactly this encoding.
+pub(crate) fn write_f32s_le(out: &mut Vec<u8>, data: &[f32]) {
     let mut block = [0u8; 4096];
     out.reserve(data.len() * 4);
     for chunk in data.chunks(1024) {
@@ -836,7 +837,10 @@ fn read_f32s_le(bytes: &[u8]) -> Vec<f32> {
     out
 }
 
-fn fletcher64(data: &[u8]) -> u64 {
+/// The checkpoint checksum, crate-visible so the transport's wire frames
+/// verify payloads with the SAME function the DPC2 file format uses —
+/// one checksum implementation end to end, file plane and network plane.
+pub(crate) fn fletcher64(data: &[u8]) -> u64 {
     let mut a: u64 = 0;
     let mut b: u64 = 0;
     for chunk in data.chunks(4) {

@@ -1,0 +1,258 @@
+//! Wire framing for the TCP exchange plane.
+//!
+//! One frame per message, length-prefixed so a reader always knows how
+//! many bytes to consume — a torn *payload* therefore desyncs nothing:
+//! the lengths still frame the stream, the fletcher64 trailer fails, and
+//! the server can nack and keep the connection. Layout (all integers LE):
+//!
+//! ```text
+//! "DPSX" | kind u8 | key_len u32 | section_len u32 | payload_len u32
+//!        | key bytes | section bytes | payload bytes
+//!        | fletcher64(payload) u64
+//! ```
+//!
+//! * `Put` — `key` is the client-supplied idempotency scope (the
+//!   checkpoint file's canonical path); `section` the section name;
+//!   `payload` the section's f32 LE bytes, exactly as a DPC2 file stores
+//!   them. The `(key, section)` pair is the dedup identity: a redelivered
+//!   publish (retransmit race, zombie worker) cannot double-accumulate.
+//! * `Ack` — `key` echoes the put's key; section/payload empty.
+//! * `Nack` — `key` carries the reason; section/payload empty.
+//!
+//! The payload checksum is [`crate::params::checkpoint::fletcher64`] —
+//! the same function the DPC2 file format uses, so the file plane and
+//! the network plane can never disagree about what "intact" means.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::params::checkpoint::fletcher64;
+
+pub const MAGIC: [u8; 4] = *b"DPSX";
+/// Caps keep a malformed or hostile header from asking the reader to
+/// allocate unbounded buffers.
+pub const MAX_KEY: usize = 4096;
+pub const MAX_SECTION: usize = 4096;
+pub const MAX_PAYLOAD: usize = 1 << 28;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Put,
+    Ack,
+    Nack,
+}
+
+impl FrameKind {
+    fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Put => 1,
+            FrameKind::Ack => 2,
+            FrameKind::Nack => 3,
+        }
+    }
+
+    fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Put),
+            2 => Some(FrameKind::Ack),
+            3 => Some(FrameKind::Nack),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub key: String,
+    pub section: String,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn put(key: &str, section: &str, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind: FrameKind::Put,
+            key: key.to_string(),
+            section: section.to_string(),
+            payload,
+        }
+    }
+
+    pub fn ack(key: &str) -> Frame {
+        Frame {
+            kind: FrameKind::Ack,
+            key: key.to_string(),
+            section: String::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    pub fn nack(reason: String) -> Frame {
+        Frame {
+            kind: FrameKind::Nack,
+            key: reason,
+            section: String::new(),
+            payload: Vec::new(),
+        }
+    }
+}
+
+/// A frame as received: structural decode succeeded, but the payload's
+/// checksum may not have — that is the receiver's decision to make (the
+/// section server nacks; a client treats it as a failed attempt).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecvFrame {
+    pub frame: Frame,
+    pub checksum_ok: bool,
+}
+
+pub fn payload_checksum(payload: &[u8]) -> u64 {
+    fletcher64(payload)
+}
+
+/// Write `f` with an explicit trailer checksum. Exists for the chaos
+/// harness: a truncate-in-flight fault sends a torn payload under the
+/// clean bytes' checksum, exactly what a tear between checksumming and
+/// the wire produces.
+pub fn write_frame_unchecked<W: Write>(w: &mut W, f: &Frame, checksum: u64) -> Result<()> {
+    if f.key.len() > MAX_KEY || f.section.len() > MAX_SECTION || f.payload.len() > MAX_PAYLOAD {
+        bail!(
+            "frame over caps: key {} section {} payload {}",
+            f.key.len(),
+            f.section.len(),
+            f.payload.len()
+        );
+    }
+    let mut hdr = Vec::with_capacity(17 + f.key.len() + f.section.len());
+    hdr.extend_from_slice(&MAGIC);
+    hdr.push(f.kind.as_u8());
+    hdr.extend_from_slice(&(f.key.len() as u32).to_le_bytes());
+    hdr.extend_from_slice(&(f.section.len() as u32).to_le_bytes());
+    hdr.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+    hdr.extend_from_slice(f.key.as_bytes());
+    hdr.extend_from_slice(f.section.as_bytes());
+    w.write_all(&hdr).context("writing frame header")?;
+    w.write_all(&f.payload).context("writing frame payload")?;
+    w.write_all(&checksum.to_le_bytes())
+        .context("writing frame checksum")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<()> {
+    write_frame_unchecked(w, f, payload_checksum(&f.payload))
+}
+
+/// Read one frame. Structural failures (bad magic/kind, over-cap length,
+/// a stream that ends mid-frame) are hard errors — the stream is
+/// unusable past them. A payload checksum mismatch is NOT an error here:
+/// the lengths already framed the stream, so the connection survives and
+/// `checksum_ok` is false.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<RecvFrame> {
+    let mut fixed = [0u8; 17];
+    r.read_exact(&mut fixed).context("reading frame header")?;
+    if fixed[0..4] != MAGIC {
+        bail!("bad frame magic {:02x?}", &fixed[0..4]);
+    }
+    let kind = FrameKind::from_u8(fixed[4])
+        .with_context(|| format!("bad frame kind {}", fixed[4]))?;
+    let key_len = u32::from_le_bytes(fixed[5..9].try_into().unwrap()) as usize;
+    let section_len = u32::from_le_bytes(fixed[9..13].try_into().unwrap()) as usize;
+    let payload_len = u32::from_le_bytes(fixed[13..17].try_into().unwrap()) as usize;
+    if key_len > MAX_KEY || section_len > MAX_SECTION || payload_len > MAX_PAYLOAD {
+        bail!("frame over caps: key {key_len} section {section_len} payload {payload_len}");
+    }
+    let mut key = vec![0u8; key_len];
+    r.read_exact(&mut key).context("reading frame key")?;
+    let mut section = vec![0u8; section_len];
+    r.read_exact(&mut section).context("reading frame section")?;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum).context("reading frame checksum")?;
+    let stored = u64::from_le_bytes(sum);
+    let checksum_ok = fletcher64(&payload) == stored;
+    Ok(RecvFrame {
+        frame: Frame {
+            kind,
+            key: String::from_utf8(key).context("frame key not utf-8")?,
+            section: String::from_utf8(section).context("frame section not utf-8")?,
+            payload,
+        },
+        checksum_ok,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip() {
+        let payload: Vec<u8> = (0..64u8).collect();
+        for f in [
+            Frame::put("/run/p0.dpc2", "delta:L0E1", payload),
+            Frame::ack("/run/p0.dpc2"),
+            Frame::nack("section delta:L0E1: frame checksum mismatch".into()),
+        ] {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &f).unwrap();
+            let rf = read_frame(&mut buf.as_slice()).unwrap();
+            assert!(rf.checksum_ok);
+            assert_eq!(rf.frame, f);
+        }
+    }
+
+    #[test]
+    fn torn_payload_keeps_stream_framed_but_fails_checksum() {
+        let f = Frame::put("k", "s", vec![7u8; 32]);
+        let clean_sum = payload_checksum(&f.payload);
+        let mut torn = f.clone();
+        for b in &mut torn.payload[24..] {
+            *b ^= 0xFF;
+        }
+        let mut buf = Vec::new();
+        write_frame_unchecked(&mut buf, &torn, clean_sum).unwrap();
+        // a second clean frame behind the torn one on the same stream
+        write_frame(&mut buf, &Frame::ack("k")).unwrap();
+        let mut r = buf.as_slice();
+        let first = read_frame(&mut r).unwrap();
+        assert!(!first.checksum_ok, "tear must be detected");
+        assert_eq!(first.frame.payload.len(), 32, "lengths still frame it");
+        let second = read_frame(&mut r).unwrap();
+        assert!(second.checksum_ok, "stream survives past the torn frame");
+        assert_eq!(second.frame.kind, FrameKind::Ack);
+    }
+
+    #[test]
+    fn structural_garbage_is_a_hard_error() {
+        // bad magic
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ack("x")).unwrap();
+        buf[0] = b'Z';
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // bad kind
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ack("x")).unwrap();
+        buf[4] = 9;
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // over-cap payload length
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::ack("x")).unwrap();
+        buf[13..17].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // stream ends mid-frame
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::put("k", "s", vec![1, 2, 3, 4])).unwrap();
+        buf.truncate(buf.len() - 6);
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_frames_refuse_to_write() {
+        let f = Frame::put(&"k".repeat(MAX_KEY + 1), "s", Vec::new());
+        assert!(write_frame(&mut Vec::new(), &f).is_err());
+    }
+}

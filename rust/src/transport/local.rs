@@ -1,0 +1,90 @@
+//! The shared-filesystem exchange plane: publication is the checkpoint's
+//! own atomic temp-file + rename (already done by the time `publish` is
+//! called), and reads map the DPC2 file exactly as executors always have.
+//! This implementation exists so the trait's `Local` arm is provably
+//! byte-identical to the pre-transport coordinator: it adds no copies,
+//! no re-framing, and no extra checksum passes.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::params::checkpoint::SectionReader;
+use crate::transport::{PublishCtx, SectionSource, SectionTransport};
+use crate::topology::ModuleId;
+
+pub struct LocalTransport;
+
+impl SectionTransport for LocalTransport {
+    fn publish(&self, _ctx: &PublishCtx, _file: &Path, _modules: &[ModuleId]) -> Result<()> {
+        // The save's rename already made the sections visible to every
+        // executor sharing the filesystem.
+        Ok(())
+    }
+
+    fn open(&self, file: &Path) -> Result<Box<dyn SectionSource>> {
+        Ok(Box::new(LocalSource {
+            reader: SectionReader::open_mapped(file)?,
+        }))
+    }
+
+    fn describe(&self) -> &'static str {
+        "local"
+    }
+}
+
+struct LocalSource {
+    reader: SectionReader,
+}
+
+impl SectionSource for LocalSource {
+    fn read_into(&mut self, name: &str, out: &mut Vec<f32>) -> Result<()> {
+        self.reader.read_into(name, out)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        // Pass-through: a legacy DPC1 fallback counts the whole file at
+        // open, a mapped DPC2 counts per section — the executor's
+        // watermark accounting must see exactly what SectionReader saw.
+        self.reader.bytes_read()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::checkpoint::Checkpoint;
+    use crate::transport::open_source;
+
+    #[test]
+    fn local_plane_is_a_transparent_section_reader() {
+        let dir = std::env::temp_dir().join(format!("dipaco-tlocal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("ck.dpc2");
+        let mut ck = Checkpoint::new();
+        ck.sections
+            .push(("delta:L0E0".into(), vec![1.0, -2.5, 3.25]));
+        ck.save(&file).unwrap();
+
+        // publish is a no-op; open serves the same bytes with the same
+        // accounting as a direct SectionReader
+        let t = LocalTransport;
+        t.publish(
+            &PublishCtx {
+                phase: 0,
+                path: 0,
+                kind: "delta".into(),
+            },
+            &file,
+            &[crate::topology::ModuleId { level: 0, expert: 0 }],
+        )
+        .unwrap();
+        let mut src = open_source(None, &file).unwrap();
+        let mut out = Vec::new();
+        src.read_into("delta:L0E0", &mut out).unwrap();
+        assert_eq!(out, vec![1.0, -2.5, 3.25]);
+        assert_eq!(src.bytes_read(), 12);
+        assert!(src.read_into("delta:L9E9", &mut out).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

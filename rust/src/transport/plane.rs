@@ -1,0 +1,75 @@
+//! The section exchange plane (ROADMAP item 2): how published `delta:`
+//! sections travel from training workers to outer-optimization executors.
+//!
+//! Today's coordinator rendezvouses through a shared filesystem — the
+//! checkpoint's atomic temp-file + rename *is* the publication, and an
+//! executor maps the DPC2 file. That is a dead end for multi-host
+//! execution, so the exchange is now behind [`SectionTransport`]:
+//!
+//! * [`crate::transport::local::LocalTransport`] keeps the filesystem
+//!   plane, byte-identical to the pre-trait behavior (`publish` is a
+//!   no-op because the rename already happened; `open` maps the file).
+//! * [`crate::transport::tcp::TcpExchange`] pushes each section over a
+//!   framed TCP stream ([`crate::transport::frame`]) to the executor
+//!   that owns its module, per the rendezvous registry
+//!   ([`crate::transport::rendezvous`]).
+//!
+//! The reader side is deliberately the *same shape* as
+//! [`crate::params::checkpoint::SectionReader`] (`read_into` into a
+//! reused buffer, a `bytes_read` watermark), so the executor's I/O
+//! accounting and its pinned error contexts are independent of which
+//! plane served the bytes.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::topology::ModuleId;
+
+/// Where a publish came from, for chaos targeting and diagnostics.
+#[derive(Debug, Clone)]
+pub struct PublishCtx {
+    pub phase: usize,
+    pub path: usize,
+    /// Checkpoint kind being published (e.g. `"delta"`).
+    pub kind: String,
+}
+
+/// A positioned reader over one published checkpoint's sections —
+/// the transport-agnostic face of `SectionReader`.
+pub trait SectionSource {
+    /// Read one section into `out` (clear + fill, capacity reused),
+    /// verifying integrity the same way the DPC2 reader does.
+    fn read_into(&mut self, name: &str, out: &mut Vec<f32>) -> Result<()>;
+
+    /// Payload bytes served so far (the executor's I/O watermark).
+    fn bytes_read(&self) -> u64;
+}
+
+/// One section exchange plane. Implementations are shared across worker
+/// and executor threads, hence `Send + Sync`.
+pub trait SectionTransport: Send + Sync {
+    /// Ship the `delta:` sections of `modules` from the just-saved
+    /// checkpoint at `file` to their owning executors. Must be called
+    /// after the checkpoint hits disk and before its DB row is inserted,
+    /// so a row never references sections the plane cannot serve.
+    fn publish(&self, ctx: &PublishCtx, file: &Path, modules: &[ModuleId]) -> Result<()>;
+
+    /// Open the published checkpoint `file` for executor-side reads.
+    fn open(&self, file: &Path) -> Result<Box<dyn SectionSource>>;
+
+    /// Stable plane name for logs and benchmarks.
+    fn describe(&self) -> &'static str;
+}
+
+/// Executor-side entry point: open `file` through `transport`, falling
+/// back to the local filesystem plane when the run has none configured.
+pub fn open_source(
+    transport: Option<&dyn SectionTransport>,
+    file: &Path,
+) -> Result<Box<dyn SectionSource>> {
+    match transport {
+        Some(t) => t.open(file),
+        None => crate::transport::local::LocalTransport.open(file),
+    }
+}

@@ -1,0 +1,132 @@
+//! Rendezvous registry: who serves which module.
+//!
+//! The outer-optimization plane already shards modules round-robin across
+//! executors ([`crate::coordinator::outer::shard_modules`]); the registry
+//! pins that ownership map to concrete endpoints so a worker can push
+//! each `delta:L{l}E{e}` section *directly* to the executor that will
+//! fold it — no broadcast, no broker. Built once per run from the same
+//! shard list the executors are spawned from, so ownership and routing
+//! cannot drift.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+
+use anyhow::{Context, Result};
+
+use crate::topology::ModuleId;
+
+#[derive(Debug, Clone)]
+pub struct Rendezvous {
+    owners: HashMap<ModuleId, usize>,
+    endpoints: Vec<SocketAddr>,
+}
+
+impl Rendezvous {
+    /// `shards[e]` is the module set executor `e` owns; `endpoints[e]`
+    /// is where it listens.
+    pub fn new(shards: &[Vec<ModuleId>], endpoints: Vec<SocketAddr>) -> Rendezvous {
+        assert_eq!(
+            shards.len(),
+            endpoints.len(),
+            "one endpoint per executor shard"
+        );
+        let mut owners = HashMap::new();
+        for (e, shard) in shards.iter().enumerate() {
+            for &m in shard {
+                let prev = owners.insert(m, e);
+                assert!(prev.is_none(), "module {m} owned by two executors");
+            }
+        }
+        Rendezvous { owners, endpoints }
+    }
+
+    pub fn executors(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    /// Executor shard owning `m`'s outer state.
+    pub fn owner_of(&self, m: ModuleId) -> Result<usize> {
+        self.owners
+            .get(&m)
+            .copied()
+            .with_context(|| format!("module {m} has no owning executor in the rendezvous"))
+    }
+
+    pub fn endpoint(&self, executor: usize) -> SocketAddr {
+        self.endpoints[executor]
+    }
+
+    pub fn endpoint_of(&self, m: ModuleId) -> Result<SocketAddr> {
+        Ok(self.endpoint(self.owner_of(m)?))
+    }
+
+    /// Group `modules` by owning executor, ascending — one push stream
+    /// per executor per publish, deterministic order.
+    pub fn group_by_owner(&self, modules: &[ModuleId]) -> Result<Vec<(usize, Vec<ModuleId>)>> {
+        let mut by_owner: HashMap<usize, Vec<ModuleId>> = HashMap::new();
+        for &m in modules {
+            by_owner.entry(self.owner_of(m)?).or_default().push(m);
+        }
+        let mut grouped: Vec<(usize, Vec<ModuleId>)> = by_owner.into_iter().collect();
+        grouped.sort_by_key(|(e, _)| *e);
+        for (_, mods) in &mut grouped {
+            mods.sort();
+        }
+        Ok(grouped)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addr(port: u16) -> SocketAddr {
+        format!("127.0.0.1:{port}").parse().unwrap()
+    }
+
+    fn mid(level: usize, expert: usize) -> ModuleId {
+        ModuleId { level, expert }
+    }
+
+    #[test]
+    fn ownership_covers_every_module_exactly_once() {
+        let shards = vec![
+            vec![mid(0, 0), mid(1, 0)],
+            vec![mid(0, 1), mid(1, 1)],
+        ];
+        let r = Rendezvous::new(&shards, vec![addr(9001), addr(9002)]);
+        assert_eq!(r.executors(), 2);
+        assert_eq!(r.owner_of(mid(0, 0)).unwrap(), 0);
+        assert_eq!(r.owner_of(mid(1, 1)).unwrap(), 1);
+        assert_eq!(r.endpoint_of(mid(0, 1)).unwrap(), addr(9002));
+        assert!(r.owner_of(mid(5, 5)).is_err(), "unknown module is loud");
+    }
+
+    #[test]
+    fn grouping_is_sorted_and_complete() {
+        let shards = vec![
+            vec![mid(0, 0), mid(1, 0)],
+            vec![mid(0, 1), mid(1, 1)],
+        ];
+        let r = Rendezvous::new(&shards, vec![addr(9001), addr(9002)]);
+        let grouped = r
+            .group_by_owner(&[mid(1, 1), mid(0, 0), mid(0, 1), mid(1, 0)])
+            .unwrap();
+        assert_eq!(
+            grouped,
+            vec![
+                (0, vec![mid(0, 0), mid(1, 0)]),
+                (1, vec![mid(0, 1), mid(1, 1)]),
+            ]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "owned by two executors")]
+    fn double_ownership_is_rejected() {
+        Rendezvous::new(
+            &[vec![mid(0, 0)], vec![mid(0, 0)]],
+            vec![addr(9001), addr(9002)],
+        );
+    }
+}

@@ -1,0 +1,642 @@
+//! The framed-TCP exchange plane: per-executor section servers plus the
+//! worker-side push client.
+//!
+//! Topology (loopback rendezvous for now — the registry already speaks
+//! `SocketAddr`, so spreading executors across hosts is a config change,
+//! not a code change):
+//!
+//! * One [`SectionServer`] per executor shard, bound to an ephemeral
+//!   loopback port, owning an in-memory [`SectionStore`]. A put is
+//!   accepted only when its fletcher64 trailer verifies; a torn payload
+//!   is nacked and the connection survives (lengths frame the stream).
+//!   The `(key, section)` pair dedups redelivered publishes — a
+//!   retransmit race or a zombie worker's re-push acks without
+//!   double-storing.
+//! * [`TcpExchange`] implements [`SectionTransport`]: `publish` reads
+//!   the just-saved DPC2 checkpoint once (pooled buffer, same
+//!   `read_into` path executors use) and pushes each `delta:` section to
+//!   its owning executor per the [`Rendezvous`] registry, with connect
+//!   and read timeouts plus capped-backoff retry; `open` serves executor
+//!   reads from the union of the stores with the exact accounting shape
+//!   of a mapped DPC2 read (`bytes_read` counts payload bytes, opening
+//!   counts nothing).
+//!
+//! Chaos: the client consults [`FaultInjector::on_net_send`] once per
+//! frame; a planned fault strikes the first frame of the targeted
+//! publish (drop / delay / duplicate / truncate-in-flight) and the retry
+//! machinery must recover without changing any converged byte.
+
+use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::chaos::injector::{FaultInjector, NetAction};
+use crate::config::TransportConfig;
+use crate::params::checkpoint::{write_f32s_le, SectionReader};
+use crate::topology::ModuleId;
+use crate::transport::frame::{self, Frame, FrameKind};
+use crate::transport::rendezvous::Rendezvous;
+use crate::transport::{PublishCtx, SectionSource, SectionTransport};
+use crate::util::pool::Pool;
+
+/// Server-side acceptance counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Sections accepted and stored.
+    pub puts: u64,
+    /// Redelivered puts deduplicated by idempotency key (acked, not
+    /// re-stored).
+    pub dup_puts: u64,
+    /// Puts nacked for a payload checksum mismatch.
+    pub nacks: u64,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    /// `(file key, section name) -> payload bytes` (f32 LE, as framed).
+    sections: HashMap<(String, String), Arc<Vec<u8>>>,
+    /// Idempotency keys already accepted.
+    seen: HashSet<(String, String)>,
+    stats: StoreStats,
+}
+
+/// One executor's received sections. Shared: the accept loop's
+/// connection handlers write, the executor's [`SectionSource`] reads.
+#[derive(Default)]
+pub struct SectionStore {
+    inner: Mutex<StoreInner>,
+}
+
+impl SectionStore {
+    /// Accept a verified put. Returns false when the idempotency key was
+    /// already accepted (the caller still acks — redelivery is success).
+    fn put(&self, key: &str, section: &str, payload: Vec<u8>) -> bool {
+        let id = (key.to_string(), section.to_string());
+        let mut g = self.inner.lock().unwrap();
+        if !g.seen.insert(id.clone()) {
+            g.stats.dup_puts += 1;
+            return false;
+        }
+        g.stats.puts += 1;
+        g.sections.insert(id, Arc::new(payload));
+        true
+    }
+
+    fn nacked(&self) {
+        self.inner.lock().unwrap().stats.nacks += 1;
+    }
+
+    fn get(&self, key: &str, section: &str) -> Option<Arc<Vec<u8>>> {
+        self.inner
+            .lock()
+            .unwrap()
+            .sections
+            .get(&(key.to_string(), section.to_string()))
+            .cloned()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+/// Framed-TCP listener for one executor shard.
+pub struct SectionServer {
+    addr: SocketAddr,
+    store: Arc<SectionStore>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl SectionServer {
+    pub fn bind(executor: usize) -> Result<SectionServer> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))
+            .with_context(|| format!("binding section server for executor {executor}"))?;
+        let addr = listener
+            .local_addr()
+            .context("section server local addr")?;
+        let store = Arc::new(SectionStore::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let store2 = Arc::clone(&store);
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name(format!("section-srv-{executor}"))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let store = Arc::clone(&store2);
+                    // Handlers exit when the peer closes; publishes are
+                    // short-lived connections, so these never outlive a
+                    // phase by more than a socket teardown.
+                    let _ = std::thread::Builder::new()
+                        .name("section-conn".into())
+                        .spawn(move || serve_conn(stream, store));
+                }
+            })
+            .context("spawning section server accept loop")?;
+        Ok(SectionServer {
+            addr,
+            store,
+            stop,
+            accept: Some(accept),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn store(&self) -> Arc<SectionStore> {
+        Arc::clone(&self.store)
+    }
+
+    pub fn stop(&mut self) {
+        if self.stop.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SectionServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, store: Arc<SectionStore>) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        // Peer hangup (EOF) or structural garbage both end the
+        // connection; a checksum mismatch does not.
+        let Ok(rf) = frame::read_frame(&mut stream) else {
+            return;
+        };
+        if rf.frame.kind != FrameKind::Put {
+            continue;
+        }
+        let reply = if !rf.checksum_ok {
+            store.nacked();
+            Frame::nack(format!(
+                "section {}: frame checksum mismatch (torn in flight?)",
+                rf.frame.section
+            ))
+        } else {
+            store.put(&rf.frame.key, &rf.frame.section, rf.frame.payload);
+            Frame::ack(&rf.frame.key)
+        };
+        if frame::write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// The TCP section exchange: servers for every executor shard plus the
+/// push client workers publish through.
+pub struct TcpExchange {
+    cfg: TransportConfig,
+    rendezvous: Rendezvous,
+    servers: Vec<SectionServer>,
+    pool: Arc<Pool<f32>>,
+    chaos: Option<Arc<FaultInjector>>,
+    sends: AtomicU64,
+    resends: AtomicU64,
+}
+
+impl TcpExchange {
+    /// Bind one server per executor shard and build the rendezvous
+    /// registry over the resulting endpoints.
+    pub fn start(
+        shards: &[Vec<ModuleId>],
+        cfg: TransportConfig,
+        chaos: Option<Arc<FaultInjector>>,
+    ) -> Result<Arc<TcpExchange>> {
+        let mut servers = Vec::with_capacity(shards.len());
+        for e in 0..shards.len() {
+            servers.push(SectionServer::bind(e)?);
+        }
+        let endpoints = servers.iter().map(SectionServer::addr).collect();
+        Ok(Arc::new(TcpExchange {
+            cfg,
+            rendezvous: Rendezvous::new(shards, endpoints),
+            servers,
+            pool: Pool::new(64),
+            chaos,
+            sends: AtomicU64::new(0),
+            resends: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn rendezvous(&self) -> &Rendezvous {
+        &self.rendezvous
+    }
+
+    /// Frames acked on their final attempt.
+    pub fn sends(&self) -> u64 {
+        self.sends.load(Ordering::Relaxed)
+    }
+
+    /// Failed attempts that went back through the backoff loop.
+    pub fn resends(&self) -> u64 {
+        self.resends.load(Ordering::Relaxed)
+    }
+
+    /// Acceptance counters summed over every executor's store.
+    pub fn store_stats(&self) -> StoreStats {
+        let mut total = StoreStats::default();
+        for s in &self.servers {
+            let st = s.store.stats();
+            total.puts += st.puts;
+            total.dup_puts += st.dup_puts;
+            total.nacks += st.nacks;
+        }
+        total
+    }
+
+    fn backoff(&self, attempt: u32) -> Duration {
+        let ms = self
+            .cfg
+            .backoff_ms
+            .saturating_mul(1u64 << attempt.min(16));
+        Duration::from_millis(ms.min(self.cfg.backoff_cap_ms))
+    }
+
+    /// Push one section frame, retrying with capped backoff. The chaos
+    /// hook is consulted on the first attempt only — a consumed fault
+    /// never strikes the retry, mirroring every other injector hook.
+    fn send_section(
+        &self,
+        addr: SocketAddr,
+        ctx: &PublishCtx,
+        key: &str,
+        section: &str,
+        payload: &[u8],
+    ) -> Result<()> {
+        let mut attempt: u32 = 0;
+        loop {
+            let action = match (&self.chaos, attempt) {
+                (Some(inj), 0) => inj.on_net_send(ctx.phase, ctx.path),
+                _ => NetAction::Deliver,
+            };
+            match self.try_send(addr, key, section, payload, action) {
+                Ok(()) => {
+                    self.sends.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(e) if attempt < self.cfg.retries => {
+                    self.resends.fetch_add(1, Ordering::Relaxed);
+                    crate::debug!(
+                        "transport",
+                        "section {section} attempt {} failed ({e:#}); backing off",
+                        attempt + 1
+                    );
+                    std::thread::sleep(self.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "section {section}: {} send attempts exhausted",
+                            self.cfg.retries + 1
+                        )
+                    })
+                }
+            }
+        }
+    }
+
+    /// One connect + put + ack round trip, with the chaos action applied
+    /// in flight.
+    fn try_send(
+        &self,
+        addr: SocketAddr,
+        key: &str,
+        section: &str,
+        payload: &[u8],
+        action: NetAction,
+    ) -> Result<()> {
+        match action {
+            NetAction::Drop => bail!("chaos-inject: section frame dropped in flight"),
+            NetAction::Delay(d) => std::thread::sleep(d),
+            _ => {}
+        }
+        let mut stream = TcpStream::connect_timeout(
+            &addr,
+            Duration::from_millis(self.cfg.connect_timeout_ms),
+        )
+        .with_context(|| format!("connecting executor endpoint {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        stream
+            .set_read_timeout(Some(Duration::from_millis(self.cfg.read_timeout_ms)))
+            .context("setting read timeout")?;
+        let _ = stream.set_write_timeout(Some(Duration::from_millis(self.cfg.read_timeout_ms)));
+
+        let f = Frame::put(key, section, payload.to_vec());
+        let mut expect_replies = 1;
+        match action {
+            NetAction::Truncate if !f.payload.is_empty() => {
+                // Torn tail under the clean checksum: exactly what a tear
+                // between checksumming and the wire produces. The server
+                // must nack; this attempt then fails and the retry sends
+                // the clean frame.
+                let clean_sum = frame::payload_checksum(&f.payload);
+                let mut torn = f.clone();
+                let n = torn.payload.len();
+                for b in &mut torn.payload[n - n.min(8)..] {
+                    *b ^= 0xFF;
+                }
+                frame::write_frame_unchecked(&mut stream, &torn, clean_sum)?;
+            }
+            NetAction::Duplicate => {
+                // Retransmit race: the same frame lands twice; the
+                // server's idempotency dedup keeps one accumulation.
+                frame::write_frame(&mut stream, &f)?;
+                frame::write_frame(&mut stream, &f)?;
+                expect_replies = 2;
+            }
+            _ => frame::write_frame(&mut stream, &f)?,
+        }
+        let mut last_kind = FrameKind::Nack;
+        let mut last_key = String::new();
+        for _ in 0..expect_replies {
+            let rf = frame::read_frame(&mut stream)
+                .with_context(|| format!("awaiting ack for section {section}"))?;
+            last_kind = rf.frame.kind;
+            last_key = rf.frame.key;
+        }
+        match last_kind {
+            FrameKind::Ack => Ok(()),
+            FrameKind::Nack => bail!("executor nacked section {section}: {last_key}"),
+            FrameKind::Put => bail!("unexpected Put reply for section {section}"),
+        }
+    }
+}
+
+impl SectionTransport for TcpExchange {
+    fn publish(&self, ctx: &PublishCtx, file: &Path, modules: &[ModuleId]) -> Result<()> {
+        if modules.is_empty() {
+            return Ok(());
+        }
+        let mut reader = SectionReader::open_mapped(file)
+            .with_context(|| format!("transport opening {}", file.display()))?;
+        let key = file.to_string_lossy().into_owned();
+        let mut wire = Pool::take(&self.pool, 0);
+        for (owner, mods) in self.rendezvous.group_by_owner(modules)? {
+            let addr = self.rendezvous.endpoint(owner);
+            for m in mods {
+                let section = m.delta_section();
+                reader
+                    .read_into(&section, &mut wire)
+                    .with_context(|| format!("transport reading {} of {}", m, file.display()))?;
+                let mut payload = Vec::with_capacity(wire.len() * 4);
+                write_f32s_le(&mut payload, &wire);
+                self.send_section(addr, ctx, &key, &section, &payload)
+                    .with_context(|| {
+                        format!(
+                            "pushing {section} of {} to executor {owner}",
+                            file.display()
+                        )
+                    })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn open(&self, file: &Path) -> Result<Box<dyn SectionSource>> {
+        Ok(Box::new(NetSource {
+            key: file.to_string_lossy().into_owned(),
+            stores: self.servers.iter().map(SectionServer::store).collect(),
+            bytes_read: 0,
+        }))
+    }
+
+    fn describe(&self) -> &'static str {
+        "tcp"
+    }
+}
+
+/// Executor-side reads over the union of the exchange's stores. The
+/// union (not just the executor's own shard) keeps late-merge reads —
+/// which may touch modules another shard owns — working unchanged.
+struct NetSource {
+    key: String,
+    stores: Vec<Arc<SectionStore>>,
+    bytes_read: u64,
+}
+
+impl SectionSource for NetSource {
+    fn read_into(&mut self, name: &str, out: &mut Vec<f32>) -> Result<()> {
+        out.clear();
+        let payload = self
+            .stores
+            .iter()
+            .find_map(|s| s.get(&self.key, name))
+            .with_context(|| {
+                format!(
+                    "section {name}: not delivered to any executor endpoint for {}",
+                    self.key
+                )
+            })?;
+        if payload.len() % 4 != 0 {
+            bail!("section {name}: truncated payload");
+        }
+        out.reserve(payload.len() / 4);
+        for c in payload.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        // Same watermark shape as a mapped DPC2 read: payload bytes only.
+        self.bytes_read += payload.len() as u64;
+        Ok(())
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.bytes_read
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::plan::{Fault, FaultPlan};
+    use crate::config::TransportMode;
+    use crate::params::checkpoint::Checkpoint;
+
+    fn mid(level: usize, expert: usize) -> ModuleId {
+        ModuleId { level, expert }
+    }
+
+    fn tcp_cfg() -> TransportConfig {
+        TransportConfig {
+            mode: TransportMode::Tcp,
+            backoff_ms: 1,
+            backoff_cap_ms: 5,
+            ..TransportConfig::default()
+        }
+    }
+
+    /// DPC2 checkpoint with two delta sections (plus a non-delta section
+    /// the publish must skip), in its own temp dir.
+    fn sample_checkpoint(tag: &str) -> (std::path::PathBuf, Vec<f32>, Vec<f32>) {
+        let dir = std::env::temp_dir().join(format!("dipaco-ttcp-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("p0.dpc2");
+        let a = vec![1.0f32, -2.5, 3.25];
+        let b = vec![0.5f32, 4.0];
+        let mut ck = Checkpoint::new();
+        ck.sections.push(("delta:L0E0".into(), a.clone()));
+        ck.sections.push(("delta:L0E1".into(), b.clone()));
+        ck.sections.push(("loss".into(), vec![0.1]));
+        ck.save(&file).unwrap();
+        (file, a, b)
+    }
+
+    fn publish_ctx() -> PublishCtx {
+        PublishCtx {
+            phase: 0,
+            path: 0,
+            kind: "delta".into(),
+        }
+    }
+
+    fn read_back(ex: &TcpExchange, file: &Path, a: &[f32], b: &[f32]) {
+        let mut src = ex.open(file).unwrap();
+        let mut out = Vec::new();
+        src.read_into("delta:L0E0", &mut out).unwrap();
+        assert_eq!(out, a);
+        src.read_into("delta:L0E1", &mut out).unwrap();
+        assert_eq!(out, b);
+        assert_eq!(src.bytes_read(), 4 * (a.len() + b.len()) as u64);
+    }
+
+    #[test]
+    fn sections_route_to_their_owning_executor_and_read_back() {
+        let (file, a, b) = sample_checkpoint("route");
+        let shards = vec![vec![mid(0, 0)], vec![mid(0, 1)]];
+        let ex = TcpExchange::start(&shards, tcp_cfg(), None).unwrap();
+        ex.publish(&publish_ctx(), &file, &[mid(0, 0), mid(0, 1)])
+            .unwrap();
+        // each server accepted exactly its own module's section
+        assert_eq!(ex.servers[0].store.stats().puts, 1);
+        assert_eq!(ex.servers[1].store.stats().puts, 1);
+        assert_eq!(ex.sends(), 2);
+        assert_eq!(ex.resends(), 0);
+        read_back(&ex, &file, &a, &b);
+        // a section nobody published is loud
+        let mut src = ex.open(&file).unwrap();
+        let err = src.read_into("delta:L7E7", &mut Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("not delivered"), "{err:#}");
+        std::fs::remove_dir_all(file.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn dropped_frame_is_retried_to_convergence() {
+        let (file, a, b) = sample_checkpoint("drop");
+        let shards = vec![vec![mid(0, 0), mid(0, 1)]];
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(vec![Fault::NetDrop {
+            phase: 0,
+            path: 0,
+        }])));
+        let ex = TcpExchange::start(&shards, tcp_cfg(), Some(Arc::clone(&inj))).unwrap();
+        ex.publish(&publish_ctx(), &file, &[mid(0, 0), mid(0, 1)])
+            .unwrap();
+        assert_eq!(inj.fired_events().len(), 1);
+        assert!(inj.unfired().is_empty());
+        assert!(ex.resends() >= 1, "drop must cost a retry");
+        assert_eq!(ex.store_stats().puts, 2);
+        read_back(&ex, &file, &a, &b);
+        std::fs::remove_dir_all(file.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn duplicated_frame_is_deduped_by_idempotency_key() {
+        let (file, a, b) = sample_checkpoint("dup");
+        let shards = vec![vec![mid(0, 0), mid(0, 1)]];
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(vec![
+            Fault::NetDuplicate { phase: 0, path: 0 },
+        ])));
+        let ex = TcpExchange::start(&shards, tcp_cfg(), Some(Arc::clone(&inj))).unwrap();
+        ex.publish(&publish_ctx(), &file, &[mid(0, 0), mid(0, 1)])
+            .unwrap();
+        let st = ex.store_stats();
+        assert_eq!(st.puts, 2, "one accumulation per section");
+        assert_eq!(st.dup_puts, 1, "the retransmit was acked but deduped");
+        assert_eq!(ex.resends(), 0);
+        read_back(&ex, &file, &a, &b);
+        std::fs::remove_dir_all(file.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn truncated_frame_is_nacked_and_resent_clean() {
+        let (file, a, b) = sample_checkpoint("trunc");
+        let shards = vec![vec![mid(0, 0), mid(0, 1)]];
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(vec![
+            Fault::NetTruncate { phase: 0, path: 0 },
+        ])));
+        let ex = TcpExchange::start(&shards, tcp_cfg(), Some(Arc::clone(&inj))).unwrap();
+        ex.publish(&publish_ctx(), &file, &[mid(0, 0), mid(0, 1)])
+            .unwrap();
+        let st = ex.store_stats();
+        assert_eq!(st.nacks, 1, "the torn frame must be rejected");
+        assert_eq!(st.puts, 2);
+        assert!(ex.resends() >= 1, "nack must cost a retry");
+        read_back(&ex, &file, &a, &b);
+        std::fs::remove_dir_all(file.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn exhausted_retries_surface_a_typed_error() {
+        let (file, _, _) = sample_checkpoint("exhaust");
+        let shards = vec![vec![mid(0, 0), mid(0, 1)]];
+        // with zero retries the single dropped attempt is the whole
+        // budget, so the failure must surface instead of being retried
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(vec![Fault::NetDrop {
+            phase: 0,
+            path: 0,
+        }])));
+        let cfg = TransportConfig {
+            retries: 0,
+            ..tcp_cfg()
+        };
+        let ex = TcpExchange::start(&shards, cfg, Some(inj)).unwrap();
+        let err = ex
+            .publish(&publish_ctx(), &file, &[mid(0, 0)])
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("attempts exhausted") || format!("{err:#}").contains("attempts exhausted"),
+            "{err:#}"
+        );
+        std::fs::remove_dir_all(file.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn delayed_frame_arrives_late_but_intact() {
+        let (file, a, b) = sample_checkpoint("delay");
+        let shards = vec![vec![mid(0, 0), mid(0, 1)]];
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(vec![Fault::NetDelay {
+            phase: 0,
+            path: 0,
+            delay_ms: 30,
+        }])));
+        let ex = TcpExchange::start(&shards, tcp_cfg(), Some(Arc::clone(&inj))).unwrap();
+        let t0 = std::time::Instant::now();
+        ex.publish(&publish_ctx(), &file, &[mid(0, 0), mid(0, 1)])
+            .unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30), "delay applied");
+        assert_eq!(ex.resends(), 0, "a delayed frame is not a failed one");
+        read_back(&ex, &file, &a, &b);
+        std::fs::remove_dir_all(file.parent().unwrap()).ok();
+    }
+}

@@ -243,6 +243,74 @@ fn chaos_streaming_int8_bounded_divergence() {
     assert_eq!(r.phases_run, 3);
 }
 
+// ---- network plane: TCP section exchange under in-flight faults ----
+
+fn tcp_spec(seed: u64) -> SimSpec {
+    let mut spec = SimSpec::new(seed);
+    spec.tcp = true;
+    spec
+}
+
+#[test]
+fn chaos_tcp_transport_matches_filesystem_bit_for_bit() {
+    // The acceptance gate for the exchange plane: the same seeded recipe
+    // run once over TCP loopback and once over the shared filesystem must
+    // land the ModuleStore on identical bytes — the transport is pure
+    // plumbing, invisible to the math.
+    let r = run_scenario_vs(
+        "tcp-vs-filesystem",
+        &tcp_spec(31),
+        &SimSpec::new(31),
+        &FaultPlan::none(),
+    )
+    .unwrap();
+    assert_converged(&r);
+    assert_eq!(r.phases_run, 3);
+}
+
+#[test]
+fn chaos_tcp_dropped_frame_retries_to_convergence() {
+    // A section frame dropped in flight: the push client retries with
+    // backoff and the run still matches the FILESYSTEM reference byte for
+    // byte. The retry lives in the transport — the task queue never sees
+    // a failure.
+    let plan = FaultPlan::new(vec![Fault::NetDrop { phase: 1, path: 2 }]);
+    let r = run_scenario_vs("tcp-drop-retry", &tcp_spec(32), &SimSpec::new(32), &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 0, "drop recovers inside the transport, not the queue");
+}
+
+#[test]
+fn chaos_tcp_duplicated_frame_is_deduped() {
+    // A duplicated put frame (retransmit race): the server's idempotency
+    // key accepts it once — a double-accumulate would move the digest.
+    let plan = FaultPlan::new(vec![Fault::NetDuplicate { phase: 0, path: 1 }]);
+    let r = run_scenario_vs("tcp-duplicate", &tcp_spec(33), &SimSpec::new(33), &plan).unwrap();
+    assert_converged(&r);
+}
+
+#[test]
+fn chaos_tcp_truncated_frame_is_nacked_and_resent() {
+    // A payload torn in flight: lengths still frame the stream, the
+    // fletcher64 trailer fails, the server nacks, the client resends
+    // clean bytes. No garbage may reach the accumulators.
+    let plan = FaultPlan::new(vec![Fault::NetTruncate { phase: 2, path: 0 }]);
+    let r = run_scenario_vs("tcp-truncate", &tcp_spec(34), &SimSpec::new(34), &plan).unwrap();
+    assert_converged(&r);
+    assert_eq!(r.requeues, 0, "the nack-resend cycle never surfaces to the queue");
+}
+
+#[test]
+fn chaos_tcp_delayed_frame_arrives_late_but_intact() {
+    let plan = FaultPlan::new(vec![Fault::NetDelay {
+        phase: 1,
+        path: 3,
+        delay_ms: 60,
+    }]);
+    let r = run_scenario_vs("tcp-delay", &tcp_spec(35), &SimSpec::new(35), &plan).unwrap();
+    assert_converged(&r);
+}
+
 // ---- checkpoint-plane faults: must abort loudly, never average garbage ----
 
 fn corruption_spec(seed: u64) -> SimSpec {
@@ -370,4 +438,51 @@ fn chaos_sweep_random_seeds() {
         }
     }
     assert!(failures.is_empty(), "chaos sweep failed for seeds {failures:?}");
+}
+
+/// Transport-plane half of the weekly sweep: seeded random drop / delay /
+/// duplicate / truncate faults against the TCP exchange, each run judged
+/// against the same seed's FILESYSTEM reference. Same env knobs as
+/// `chaos_sweep_random_seeds`; writes `report_net_{seed}.json`.
+#[test]
+#[ignore]
+fn chaos_sweep_random_net_faults() {
+    let n: u64 = std::env::var("DIPACO_CHAOS_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let seed0: u64 = std::env::var("DIPACO_CHAOS_SEED0")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1000);
+    let out_dir = std::path::Path::new("results/chaos");
+    std::fs::create_dir_all(out_dir).unwrap();
+    let mut failures = Vec::new();
+    for i in 0..n {
+        let seed = seed0.wrapping_add(i);
+        let spec = tcp_spec(seed);
+        let plan = FaultPlan::random_net(seed, spec.phases, spec.topo.paths(), 4);
+        let r = run_scenario_vs(
+            &format!("net-sweep-{seed}"),
+            &spec,
+            &SimSpec::new(seed),
+            &plan,
+        )
+        .unwrap();
+        std::fs::write(
+            out_dir.join(format!("report_net_{seed}.json")),
+            r.to_json().to_string_pretty(),
+        )
+        .unwrap();
+        println!(
+            "net seed {seed}: {:?} ({} planned, {} fired)",
+            r.verdict,
+            r.planned.len(),
+            r.fired.len()
+        );
+        if !r.is_pass() {
+            failures.push(seed);
+        }
+    }
+    assert!(failures.is_empty(), "net chaos sweep failed for seeds {failures:?}");
 }

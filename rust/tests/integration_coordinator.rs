@@ -224,7 +224,8 @@ fn monitor_respawns_crashed_workers() {
             ckpt_out: dir.join(format!("t{i}.out.dpc")),
             opt_in: None,
             opt_out: dir.join(format!("t{i}.opt.dpc")),
-        }));
+        }))
+        .expect("queue stays open for the monitor test");
     }
     queue.wait_idle(Duration::from_millis(20));
     assert_eq!(queue.stats().completed, 6);

@@ -332,7 +332,8 @@ fn prop_queue_exactly_once_under_random_failures() {
                     ckpt_out: "y".into(),
                     opt_in: None,
                     opt_out: "o_out".into(),
-                }));
+                }))
+                .expect("property-test queue is open");
             }
             let retired = std::sync::Arc::new(std::sync::Mutex::new(Vec::<u64>::new()));
             std::thread::scope(|s| {
